@@ -1,0 +1,50 @@
+"""Shared benchmark plumbing: percentile stats + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (one per paper
+bar/line) so ``python -m benchmarks.run`` yields one CSV for the suite.
+Latencies are virtual-time microseconds: real measured compute of our
+implementation plus calibrated network models for the AWS baselines
+(see repro.core.netsim for the calibration table).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, Iterable, List, Sequence
+
+import numpy as np
+
+
+def pct(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+
+
+def summarize(xs: Sequence[float]) -> Dict[str, float]:
+    return {
+        "median_us": pct(xs, 50) * 1e6,
+        "p99_us": pct(xs, 99) * 1e6,
+        "mean_us": float(np.mean(xs)) * 1e6 if len(xs) else float("nan"),
+    }
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_lat(name: str, latencies: Sequence[float], extra: str = "") -> None:
+    s = summarize(latencies)
+    derived = f"p99_us={s['p99_us']:.1f}"
+    if extra:
+        derived += f";{extra}"
+    emit(name, s["median_us"], derived)
+
+
+class Timed:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+        return False

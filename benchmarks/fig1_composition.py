@@ -1,0 +1,63 @@
+"""Fig. 1: end-to-end latency of square(increment(x: int)).
+
+Cloudburst executes the real DAG through the real runtime; the AWS/SAND/
+Dask baselines are latency models calibrated to the paper's measurements
+(repro.core.netsim).  The paper's claim reproduced: Cloudburst matches
+serverful Python (Dask) and beats FaaS baselines by 1–3 orders of
+magnitude.
+"""
+
+from __future__ import annotations
+
+from repro.core import Cluster, VirtualClock
+from repro.core.netsim import NetworkProfile
+
+from .common import emit_lat
+
+
+def run_cloudburst(n: int, seed: int = 0):
+    c = Cluster(n_vms=2, executors_per_vm=3, seed=seed)
+    c.register(lambda x: x + 1, "increment")
+    c.register(lambda x: x * x, "square")
+    c.register_dag("composed", ["increment", "square"])
+    lats = []
+    for i in range(n):
+        r = c.call_dag("composed", {"increment": (i,)})
+        assert r.value == (i + 1) ** 2
+        lats.append(r.latency)
+        if i % 50 == 0:
+            c.tick()
+    return lats
+
+
+def _two_fn_model(profile: NetworkProfile, invoke, storage=None, n: int = 1000):
+    """Sequential 2-function composition through a modeled service."""
+    lats = []
+    for _ in range(n):
+        clock = VirtualClock()
+        for _fn in range(2):
+            clock.advance(profile.sample(invoke))
+            if storage is not None:  # result passed through storage
+                clock.advance(profile.sample(storage, 64))
+                clock.advance(profile.sample(storage, 64))
+        lats.append(clock.now)
+    return lats
+
+
+def main(n: int = 1000, seed: int = 0) -> None:
+    profile = NetworkProfile(seed=seed)
+    emit_lat("fig1/cloudburst", run_cloudburst(n, seed))
+    emit_lat("fig1/dask(model)", _two_fn_model(profile, profile.dask_hop, n=n))
+    emit_lat("fig1/sand(model)", _two_fn_model(profile, profile.sand_hop, n=n))
+    emit_lat("fig1/lambda-direct(model)",
+             _two_fn_model(profile, profile.lambda_invoke, n=n))
+    emit_lat("fig1/lambda-s3(model)",
+             _two_fn_model(profile, profile.lambda_invoke, profile.s3_op, n=n))
+    emit_lat("fig1/lambda-dynamo(model)",
+             _two_fn_model(profile, profile.lambda_invoke, profile.dynamo_op, n=n))
+    emit_lat("fig1/step-functions(model)",
+             _two_fn_model(profile, profile.step_fn, n=n))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Fig. 4: data locality — sum of 10 arrays, hot vs cold vs Lambda+storage.
+
+Cloudburst (Hot): the same arrays every request -> cache hits after the
+first.  Cloudburst (Cold): fresh arrays every request -> every read goes to
+Anna.  Lambda models fetch the 10 arrays from Redis/S3 with size-dependent
+latency.  Array lengths sweep 1k..1M floats (8 kB .. 8 MB per array).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CloudburstReference, Cluster, VirtualClock
+from repro.core.netsim import NetworkProfile
+
+from .common import emit_lat
+
+
+def _sum_arrays(*arrays):
+    return float(np.sum([np.sum(a) for a in arrays]))
+
+
+def run_cloudburst(length: int, n: int, hot: bool, seed: int = 0):
+    c = Cluster(n_vms=3, executors_per_vm=2, seed=seed)
+    c.register(_sum_arrays, "sum10")
+    c.register_dag("sum", ["sum10"])
+    rng = np.random.default_rng(seed)
+    lats = []
+    if hot:
+        keys = [f"arr-{j}" for j in range(10)]
+        for k in keys:
+            c.put(k, rng.random(length))
+        refs = tuple(CloudburstReference(k) for k in keys)
+        for i in range(n):
+            r = c.call_dag("sum", {"sum10": refs})
+            lats.append(r.latency)
+            c.tick()
+    else:
+        for i in range(n):
+            keys = [f"arr-{i}-{j}" for j in range(10)]
+            for k in keys:
+                c.put(k, rng.random(length))
+            refs = tuple(CloudburstReference(k) for k in keys)
+            r = c.call_dag("sum", {"sum10": refs})
+            lats.append(r.latency)
+            c.tick()
+    return lats
+
+
+def run_lambda_model(length: int, n: int, storage_model, profile):
+    nbytes = length * 8
+    lats = []
+    for _ in range(n):
+        clock = VirtualClock()
+        clock.advance(profile.sample(profile.lambda_invoke))
+        # 10 parallel fetches: account the slowest of 10 samples
+        slowest = max(profile.sample(storage_model, nbytes) for _ in range(10))
+        clock.advance(slowest)
+        lats.append(clock.now)
+    return lats
+
+
+def main(n: int = 60, seed: int = 0) -> None:
+    profile = NetworkProfile(seed=seed)
+    for length in (1_000, 10_000, 100_000, 1_000_000):
+        tag = f"len{length}"
+        emit_lat(f"fig4/cloudburst-hot/{tag}",
+                 run_cloudburst(length, n, hot=True, seed=seed))
+        emit_lat(f"fig4/cloudburst-cold/{tag}",
+                 run_cloudburst(length, max(n // 3, 10), hot=False, seed=seed))
+        emit_lat(f"fig4/lambda-redis(model)/{tag}",
+                 run_lambda_model(length, n, profile.redis_op, profile))
+        emit_lat(f"fig4/lambda-s3(model)/{tag}",
+                 run_lambda_model(length, n, profile.s3_op, profile))
+
+
+if __name__ == "__main__":
+    main()

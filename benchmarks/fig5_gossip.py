@@ -1,0 +1,58 @@
+"""Fig. 5: distributed aggregation — gossip on Cloudburst vs gather-via-KVS.
+
+Kempe push-sum over Cloudburst messaging (fine-grained communication the
+paper argues only stateful FaaS can do) vs. the centralized "gather"
+workaround over Anna / modeled Lambda+Redis / Lambda+DynamoDB.  Metric:
+time for the estimate to converge within 5% of the true mean, over repeated
+rounds of aggregation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import VirtualClock
+from repro.core.gossip import gather_via_kvs, push_sum
+from repro.core.kvs import AnnaKVS
+from repro.core.netsim import NetworkProfile
+
+from .common import emit_lat
+
+
+def main(n_members: int = 24, n_runs: int = 40, seed: int = 0) -> None:
+    profile = NetworkProfile(seed=seed)
+    rng = np.random.default_rng(seed)
+
+    gossip_lats, gossip_rounds = [], []
+    for r in range(n_runs):
+        metrics = {f"exec-{i}": float(v)
+                   for i, v in enumerate(rng.uniform(0, 100, n_members))}
+        clock = VirtualClock()
+        _, rounds = push_sum(metrics, tolerance=0.05, seed=seed + r,
+                             clock=clock, profile=profile)
+        gossip_lats.append(clock.now)
+        gossip_rounds.append(rounds)
+    emit_lat("fig5/gossip-cloudburst", gossip_lats,
+             extra=f"rounds_mean={np.mean(gossip_rounds):.1f}")
+
+    kvs = AnnaKVS(num_nodes=2, replication=1, profile=profile)
+    for name, model in [
+        ("gather-cloudburst-anna", profile.kvs_op),
+        ("gather-lambda-redis(model)", profile.redis_op),
+        ("gather-lambda-dynamo(model)", profile.dynamo_op),
+    ]:
+        lats = []
+        for r in range(n_runs):
+            metrics = {f"exec-{i}": float(v)
+                       for i, v in enumerate(rng.uniform(0, 100, n_members))}
+            clock = VirtualClock()
+            if "lambda" in name:  # serverless leader pays the invoke cost
+                clock.advance(profile.sample(profile.lambda_invoke))
+            gather_via_kvs(kvs, metrics, clock=clock, op_model=model,
+                           profile=profile)
+            lats.append(clock.now)
+        emit_lat(f"fig5/{name}", lats)
+
+
+if __name__ == "__main__":
+    main()

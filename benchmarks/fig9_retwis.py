@@ -1,0 +1,180 @@
+"""Fig. 9: Retwis (Twitter clone) on Cloudburst — LWW vs causal vs Redis.
+
+The retwis-py port: six Cloudburst functions over KVS state (users,
+follower graph, tweets, fan-out-on-write timelines).  Conversational
+threads exercise causality: reading a reply before the post it answers is
+the paper's motivating anomaly — we count those under LWW and show causal
+mode prevents them.  The serverful Redis baseline is a latency model
+(ElastiCache, single-master serialized writes).
+
+Workload: zipf(1.5) social graph, 20% PostTweet / 80% GetTimeline.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Cluster, VirtualClock
+from repro.core.netsim import NetworkProfile
+
+from .common import emit, emit_lat
+
+ANOMALIES = {"count": 0}
+
+
+# -- the six Retwis functions (userlib-based, mode-agnostic) -------------------
+
+
+def register_user(cloudburst, user):
+    cloudburst.put(f"user:{user}:following", ())
+    cloudburst.put(f"user:{user}:followers", ())
+    cloudburst.put(f"timeline:{user}", ())
+    return user
+
+
+def follow(cloudburst, user, target):
+    fl = cloudburst.get(f"user:{user}:following") or ()
+    cloudburst.put(f"user:{user}:following", tuple(set(fl) | {target}))
+    fw = cloudburst.get(f"user:{target}:followers") or ()
+    cloudburst.put(f"user:{target}:followers", tuple(set(fw) | {user}))
+    return True
+
+
+def post_tweet(cloudburst, user, tweet_id, text, reply_to):
+    if reply_to is not None:
+        # reading the original creates the causal dependency; users can
+        # only reply to tweets they can actually see
+        orig = cloudburst.get(f"tweet:{reply_to}")
+        if orig is None:
+            reply_to = None
+    cloudburst.put(f"tweet:{tweet_id}",
+                   {"author": user, "text": text, "reply_to": reply_to})
+    followers = cloudburst.get(f"user:{user}:followers") or ()
+    for f in tuple(followers) + (user,):
+        tl = cloudburst.get(f"timeline:{f}") or ()
+        cloudburst.put(f"timeline:{f}", (tuple(tl) + (tweet_id,))[-40:])
+    return tweet_id
+
+
+def get_timeline(cloudburst, user, k):
+    tl = cloudburst.get(f"timeline:{user}") or ()
+    out = []
+    for tid in tuple(tl)[-k:]:
+        tw = cloudburst.get(f"tweet:{tid}")
+        if tw is None:
+            continue
+        if tw.get("reply_to") is not None:
+            orig = cloudburst.get(f"tweet:{tw['reply_to']}")
+            if orig is None:  # reply visible before its original: anomaly
+                ANOMALIES["count"] += 1
+        out.append(tw)
+    return out
+
+
+def get_posts(cloudburst, user):
+    return cloudburst.get(f"timeline:{user}") or ()
+
+
+def get_profile(cloudburst, user):
+    return {
+        "following": cloudburst.get(f"user:{user}:following") or (),
+        "followers": cloudburst.get(f"user:{user}:followers") or (),
+    }
+
+
+# -- workload -------------------------------------------------------------------
+
+
+def run_mode(mode: str, n_users: int, n_follows: int, n_prepopulate: int,
+             n_requests: int, seed: int):
+    c = Cluster(n_vms=2, executors_per_vm=3, mode=mode, seed=seed,
+                tick_jitter=0.6)
+    rng = np.random.default_rng(seed)
+    for name, fn in [("register_user", register_user), ("follow", follow),
+                     ("post_tweet", post_tweet), ("get_timeline", get_timeline),
+                     ("get_posts", get_posts), ("get_profile", get_profile)]:
+        c.register(fn, name)
+        c.register_dag(f"d_{name}", [name])
+    zipf_p = 1.0 / np.arange(1, n_users + 1) ** 1.5
+    zipf_p /= zipf_p.sum()
+
+    def zuser():
+        return int(rng.choice(n_users, p=zipf_p))
+
+    for u in range(n_users):
+        c.call_dag("d_register_user", {"register_user": (u,)})
+    for u in range(n_users):
+        for t in rng.choice(n_users, size=n_follows, p=zipf_p, replace=True):
+            if int(t) != u:
+                c.call_dag("d_follow", {"follow": (u, int(t))})
+    c.tick()
+    tweet_seq = 0
+    for i in range(n_prepopulate):
+        reply_to = f"t{int(rng.integers(0, tweet_seq))}" \
+            if tweet_seq > 0 and rng.random() < 0.5 else None
+        c.call_dag("d_post_tweet", {
+            "post_tweet": (zuser(), f"t{tweet_seq}", f"text{i}", reply_to)})
+        tweet_seq += 1
+        if i % 50 == 0:
+            c.tick()
+    c.tick()
+
+    ANOMALIES["count"] = 0
+    reads, writes = [], []
+    for i in range(n_requests):
+        if rng.random() < 0.2:
+            # replies target RECENT tweets — the conversational-thread
+            # pattern whose write may still be propagating (paper §6.3.2)
+            lo = max(0, tweet_seq - 20)
+            reply_to = f"t{int(rng.integers(lo, tweet_seq))}" \
+                if rng.random() < 0.5 else None
+            r = c.call_dag("d_post_tweet", {
+                "post_tweet": (zuser(), f"t{tweet_seq}", f"x{i}", reply_to)})
+            tweet_seq += 1
+            writes.append(r.latency)
+        else:
+            r = c.call_dag("d_get_timeline", {"get_timeline": (zuser(), 10)})
+            reads.append(r.latency)
+        if i % 5 == 0:
+            c.tick()
+    return reads, writes, ANOMALIES["count"]
+
+
+def run_redis_model(n_requests: int, seed: int, profile: NetworkProfile):
+    """Serverful retwis-py: each op is a Redis round trip; writes serialize
+    through the single master (queuing delay grows with write rate)."""
+    rng = np.random.default_rng(seed)
+    reads, writes = [], []
+    for i in range(n_requests):
+        clock = VirtualClock()
+        if rng.random() < 0.2:
+            # post: ~1 + followers timeline pushes, pipelined: 3 RTTs + queue
+            for _ in range(3):
+                clock.advance(profile.sample(profile.redis_op, 256))
+            clock.advance(profile.sample(profile.redis_op, 64))  # queuing
+            writes.append(clock.now)
+        else:
+            for _ in range(2):  # timeline + MGET tweets
+                clock.advance(profile.sample(profile.redis_op, 512))
+            reads.append(clock.now)
+    return reads, writes
+
+
+def main(n_users: int = 200, n_follows: int = 10, n_prepopulate: int = 800,
+         n_requests: int = 500, seed: int = 0) -> None:
+    profile = NetworkProfile(seed=seed)
+    for mode, label in [("lww", "lww"), ("dsc", "causal")]:
+        reads, writes, anomalies = run_mode(
+            mode, n_users, n_follows, n_prepopulate, n_requests, seed)
+        emit_lat(f"fig9/cloudburst-{label}/read", reads)
+        emit_lat(f"fig9/cloudburst-{label}/write", writes)
+        emit(f"fig9/cloudburst-{label}/anomalies", anomalies,
+             f"requests={n_requests}")
+    reads, writes = run_redis_model(n_requests, seed, profile)
+    emit_lat("fig9/redis(model)/read", reads)
+    emit_lat("fig9/redis(model)/write", writes)
+    emit("fig9/redis(model)/anomalies", 0, "linearizable single-master")
+
+
+if __name__ == "__main__":
+    main()

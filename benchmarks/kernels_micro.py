@@ -1,0 +1,84 @@
+"""Microbenchmarks of the storage-layer batched merge path.
+
+Quantifies the Cloudburst-on-TPU thesis at the kernel level: batched
+lattice merges (the Anna gossip-repair hot path) as one fused launch vs.
+per-key Python-object merges.  On CPU we time the XLA-compiled batched
+semantics and cross-check the Pallas kernel (interpret mode) once —
+interpret mode executes the kernel body in Python per grid step, which is a
+correctness harness, not a benchmark; Mosaic timings need a real TPU.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lattices import LWWLattice
+from repro.kernels import ops, ref
+
+from .common import emit
+
+
+def _time(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def main(K: int = 512, D: int = 1024, R: int = 4, iters: int = 20,
+         seed: int = 0) -> None:
+    rng = np.random.default_rng(seed)
+    clocks = jnp.asarray(rng.integers(0, 1000, (R, K, 1)), jnp.int32)
+    nodes = jnp.asarray(rng.integers(0, 8, (R, K, 1)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(R, K, D)), jnp.float32)
+
+    # cross-check the Pallas kernel (interpret) against the oracle once
+    kernel_out = ops.lww_merge_many(clocks, nodes, vals)
+    oracle_out = ref.lww_merge_many_ref(clocks, nodes, vals)
+    for a, b in zip(jax.tree.leaves(kernel_out), jax.tree.leaves(oracle_out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    batched = jax.jit(ref.lww_merge_many_ref)
+    t_batched = _time(batched, clocks, nodes, vals, iters=iters)
+    emit("kernels/lww_merge_many_batched(xla)", t_batched * 1e6,
+         f"keys={K};payload={D};replicas={R};kernel_crosschecked=1")
+
+    # per-key Python-object merges (what a non-batched store does)
+    py_vals = np.asarray(vals)
+    lattices = [
+        [LWWLattice((int(clocks[r, k, 0]), str(int(nodes[r, k, 0]))),
+                    py_vals[r, k]) for r in range(R)]
+        for k in range(K)
+    ]
+    reps = max(iters // 4, 1)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for row in lattices:
+            acc = row[0]
+            for other in row[1:]:
+                acc = acc.merge(other)
+    t_py = (time.perf_counter() - t0) / reps
+    emit("kernels/lww_merge_python_objects", t_py * 1e6,
+         f"speedup={t_py / max(t_batched, 1e-12):.1f}x")
+
+    # vector-clock classify batch
+    a = jnp.asarray(rng.integers(0, 6, (K, 32)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 6, (K, 32)), jnp.int32)
+    k_out = ops.vc_join_classify(a, b)
+    o_out = ref.vc_join_classify_ref(a, b)
+    for x, y in zip(jax.tree.leaves(k_out), jax.tree.leaves(o_out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    t_vc = _time(jax.jit(ref.vc_join_classify_ref), a, b, iters=iters)
+    emit("kernels/vc_join_classify(xla)", t_vc * 1e6,
+         f"keys={K};clock_width=32;kernel_crosschecked=1")
+
+
+if __name__ == "__main__":
+    main()

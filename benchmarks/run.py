@@ -1,0 +1,62 @@
+"""Benchmark suite runner: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
+  fig1   function composition          (square(increment(x)))
+  fig4   data locality                 (10-array sum, hot/cold/storage)
+  fig5   distributed aggregation       (gossip vs gather)
+  fig6   autoscaling trace             (load spike, plateaus, drain)
+  fig7   consistency-level latency     (lww/dsrr/sk/mk/dsc)
+  table2 anomaly counts under LWW
+  fig8   prediction-serving pipeline   (3 stages, real smoke-scale model)
+  fig9   Retwis                        (lww vs causal vs redis model)
+  kernels  storage-layer Pallas merge micro
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (
+        fig1_composition,
+        fig4_locality,
+        fig5_gossip,
+        fig6_autoscaling,
+        fig7_consistency,
+        fig8_prediction,
+        fig9_retwis,
+        kernels_micro,
+        table2_anomalies,
+    )
+
+    print("name,us_per_call,derived")
+    suites = [
+        ("fig1", fig1_composition.main),
+        ("fig4", fig4_locality.main),
+        ("fig5", fig5_gossip.main),
+        ("fig6", fig6_autoscaling.main),
+        ("fig7", fig7_consistency.main),
+        ("table2", table2_anomalies.main),
+        ("fig8", fig8_prediction.main),
+        ("fig9", fig9_retwis.main),
+        ("kernels", kernels_micro.main),
+    ]
+    failed = []
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Perf hillclimb harness: compile plan variants for a cell, compare terms.
+
+Per the §Perf methodology: each variant is a hypothesis about the dominant
+roofline term; we re-lower, re-measure (same pipeline as the dry-run), and
+log hypothesis -> before -> after -> verdict.  Results append to
+experiments/hillclimb_results.json.
+
+Usage:
+  PYTHONPATH=src python experiments/hillclimb.py --cell llama_train
+  PYTHONPATH=src python experiments/hillclimb.py --cell arctic_train
+  PYTHONPATH=src python experiments/hillclimb.py --cell mamba_long
+  PYTHONPATH=src python experiments/hillclimb.py --cell serve_fsdp_off
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import sharding as shlib
+from repro.launch.dryrun import lower_cell
+
+HERE = Path(__file__).resolve().parent
+OUT = HERE / "hillclimb_results.json"
+
+
+def variant(base, **kw):
+    return dataclasses.replace(base, **kw)
+
+
+# Each experiment: (name, hypothesis, plan) — run in order; the baseline
+# plan is the dry-run default for that (arch, shape).
+def experiments(cell_key: str):
+    if cell_key == "llama_train":
+        arch, shape = "llama3.2-3b", "train_4k"
+        base = shlib.plan_for(arch, shape)
+        return arch, shape, [
+            ("baseline", "paper-faithful lowering: dp32/tp8, FSDP+ZeRO-1, "
+             "full remat", base),
+            ("remat_outs",
+             "TP wire has 3 components (fwd, bwd, remat-recompute). Saving "
+             "the named post-all-reduce outputs removes the recompute's "
+             "collectives: predict ~1/3 off t_x for +~1.4GB/chip acts",
+             variant(base, remat="outs")),
+            ("tp4_dp64",
+             "TP all-reduce wire/chip scales with B_loc=(B*tp/256): tp 8->4 "
+             "should halve activation wire; FSDP gather wire doubles "
+             "(weights/4 vs /8) but is small here: predict ~40% off t_x",
+             variant(base, tp=4, dp=64, remat="outs")),
+            ("tp2_dp128",
+             "continue the sweep: tp=2 halves activation wire again; "
+             "weight-gather wire now ~10GB/pass — predict net win still",
+             variant(base, tp=2, dp=128, remat="outs")),
+            ("tp1_dp256",
+             "pure ZeRO-DP: zero TP collectives; all wire is FSDP gathers "
+             "(P*2B*3 passes) + grad reduce-scatter; predict t_x ~ "
+             "(7.2GB*3 + 3.6GB)/45GB/s ~ 0.5s — worse than tp2; expect "
+             "REFUTED if gather wire dominates",
+             variant(base, tp=1, dp=256, remat="outs")),
+            ("seqshard",
+             "sequence-parallel residual stream on top of the winner: "
+             "norm/elementwise sharded over model axis, all-reduce becomes "
+             "reduce-scatter + all-gather (same wire, half latency exposure "
+             "— measured as wire here, expect ~neutral wire, structural win)",
+             variant(base, tp=2, dp=128, remat="outs", seq_shard=True)),
+        ]
+    if cell_key == "arctic_train":
+        arch, shape = "arctic-480b", "train_4k"
+        base = shlib.plan_for(arch, shape)
+        return arch, shape, [
+            ("baseline", "dp16/ep16/tp1, batch folded over ep, FSDP+ZeRO-1, "
+             "bf16 moments", base),
+            ("remat_outs",
+             "same recompute-collective argument as llama: save "
+             "post-collective layer outputs",
+             variant(base, remat="outs")),
+            ("ep8_tp2",
+             "attention is replicated over ep at tp=1 (dead weight-gather "
+             "wire) and expert all-to-all crosses 16 ways; ep8/tp2 shards "
+             "attention 2-way and halves all-to-all fan-out: predict "
+             "t_x down ~20%",
+             variant(base, ep=8, tp=2, dp=16, remat="outs")),
+            ("mb2",
+             "halve activation live-set with 2 microbatches (accumulate "
+             "fp32 grads); collective wire unchanged per token, activation "
+             "memory halves: predict struct mem ~-40%, t_x flat",
+             variant(base, remat="outs", microbatches=2)),
+        ]
+    if cell_key == "mamba_long":
+        arch, shape = "mamba2-1.3b", "long_500k"
+        base = shlib.plan_for(arch, shape)
+        return arch, shape, [
+            ("baseline", "dp32/tp8 with FSDP storage (gathers weights every "
+             "token!)", base),
+            ("fsdp_off",
+             "decode re-gathers all weights per token under FSDP: "
+             "1.45B*2B/8tp*31/32 ~ 0.35GB wire/token; storing weights "
+             "TP-sharded+replicated over data (2.9GB/8 = 0.36GB/chip) "
+             "removes it: predict t_x ~ -90%",
+             variant(base, fsdp=False)),
+            ("tp16",
+             "batch=1: all parallelism must come from the model dims; "
+             "tp 8->16 (heads 64/16=4, d_inner 4096/16=256) halves "
+             "per-chip weight reads: predict t_m ~ -50%",
+             variant(base, fsdp=False, tp=16, dp=16)),
+        ]
+    if cell_key == "serve_fsdp_off":
+        # fleet-wide serving fix measured on one representative dense cell
+        arch, shape = "granite-8b", "decode_32k"
+        base = shlib.plan_for(arch, shape)
+        return arch, shape, [
+            ("baseline", "training plan reused for decode (FSDP gathers "
+             "16GB of weights per token across the fleet)", base),
+            ("fsdp_off",
+             "weights TP-sharded, replicated over data: per-chip 2GB "
+             "state, zero gather wire: predict t_x collapses to the "
+             "activation all-reduces only",
+             variant(base, fsdp=False)),
+        ]
+    raise KeyError(cell_key)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    choices=["llama_train", "arctic_train", "mamba_long",
+                             "serve_fsdp_off"])
+    args = ap.parse_args()
+    arch, shape, exps = experiments(args.cell)
+    log = []
+    for name, hypothesis, plan in exps:
+        t0 = time.time()
+        try:
+            r = lower_cell(arch, shape, False, plan=plan, verbose=True)
+            roof = r["roofline"]
+            entry = {
+                "cell": args.cell, "variant": name, "hypothesis": hypothesis,
+                "plan": r["plan"],
+                "t_compute_s": roof["t_compute_s"],
+                "t_memory_s": roof["t_memory_s"],
+                "t_collective_s": roof["t_collective_s"],
+                "bottleneck": roof["bottleneck"],
+                "roofline_fraction": roof["roofline_fraction"],
+                "useful": roof["useful_flops_ratio"],
+                "struct_gb": r["per_device_structural_bytes"] / 1e9,
+                "wall_s": round(time.time() - t0, 1),
+            }
+        except Exception as e:
+            traceback.print_exc()
+            entry = {"cell": args.cell, "variant": name,
+                     "hypothesis": hypothesis, "error": str(e)}
+        log.append(entry)
+        print(json.dumps(entry, indent=1), flush=True)
+    existing = json.loads(OUT.read_text()) if OUT.exists() else []
+    existing.extend(log)
+    OUT.write_text(json.dumps(existing, indent=1))
+    print(f"-> {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Regenerate the EXPERIMENTS.md dry-run/roofline tables from results JSON.
+
+Usage: PYTHONPATH=src python experiments/make_report.py
+Prints the markdown tables; paste/pipe into EXPERIMENTS.md sections.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f}"
+
+
+def fmt_ms(s):
+    return f"{s * 1e3:.1f}"
+
+
+def main():
+    rows = json.loads((HERE / "dryrun_results.json").read_text())
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    print("### Dry-run table (per-chip bytes, compile status)\n")
+    print("| arch | shape | mesh | status | plan (dp/ep/tp) | args GB/chip | "
+          "temps GB/chip (cpu-be) | structural GB/chip | fits 16GB | "
+          "#coll | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:60]
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"**{r['status']}** ({reason}) | | | | | | | |")
+            continue
+        p = r["plan"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+              f"{p['dp']}/{p['ep']}/{p['tp']} | "
+              f"{fmt_bytes(r['per_device_bytes']['arguments'])} | "
+              f"{fmt_bytes(r['per_device_bytes']['temps'])} | "
+              f"{fmt_bytes(r.get('per_device_structural_bytes', 0))} | "
+              f"{'yes' if r.get('fits_v5e_16gb') else 'NO'} | "
+              f"{r['n_collectives']} | {r['compile_s']:.0f} |")
+
+    print("\n### Roofline table (single-pod, 256 chips)\n")
+    print("| arch | shape | t_compute ms | t_memory ms | t_collective ms | "
+          "bottleneck | MODEL_FLOPS | useful ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] != "ok" or r["mesh"] != "single":
+            continue
+        rf = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | "
+              f"{fmt_ms(rf['t_compute_s'])} | {fmt_ms(rf['t_memory_s'])} | "
+              f"{fmt_ms(rf['t_collective_s'])} | {rf['bottleneck']} | "
+              f"{rf['model_flops']:.2e} | {rf['useful_flops_ratio']:.2f} | "
+              f"{rf['roofline_fraction']:.3f} |")
+
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    skipped = sum(1 for r in rows if r["status"] == "skipped")
+    err = sum(1 for r in rows if r["status"] == "error")
+    print(f"\n{len(rows)} cells: {ok} ok, {skipped} skipped "
+          f"(long_500k on quadratic archs), {err} errors", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

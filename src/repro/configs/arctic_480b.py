@@ -1,0 +1,34 @@
+"""arctic-480b — 128-expert top-2 MoE + dense residual
+[hf:Snowflake/snowflake-arctic-base].
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab=32000,
+    head_dim=128,
+    rope_theta=10_000.0,
+    moe=MoEConfig(
+        n_experts=128,
+        top_k=2,
+        expert_d_ff=4864,
+        dense_residual_d_ff=4864,  # arctic's dense-MoE hybrid residual
+        capacity_factor=1.25,
+    ),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="arctic-480b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=96, vocab=512, head_dim=16,
+    moe=MoEConfig(n_experts=8, top_k=2, expert_d_ff=96,
+                  dense_residual_d_ff=96, capacity_factor=1.25),
+)

@@ -1,0 +1,23 @@
+"""granite-8b — llama-arch code LM [arXiv:2405.04324; hf]."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=49152,
+    head_dim=128,
+    rope_theta=10_000.0,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="granite-8b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=160, vocab=512, head_dim=16,
+)

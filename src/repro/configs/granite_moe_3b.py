@@ -1,0 +1,34 @@
+"""granite-moe-3b-a800m — 40-expert top-8 MoE
+[hf:ibm-granite/granite-3.0-3b-a800m-base].
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab=49155,
+    head_dim=64,
+    rope_theta=10_000.0,
+    moe=MoEConfig(
+        n_experts=40,
+        top_k=8,
+        expert_d_ff=512,
+        dense_residual_d_ff=0,
+        capacity_factor=1.25,
+    ),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="granite-moe-3b-a800m-smoke", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, d_ff=64, vocab=512, head_dim=16,
+    moe=MoEConfig(n_experts=5, top_k=2, expert_d_ff=64,
+                  dense_residual_d_ff=0, capacity_factor=1.5),
+)

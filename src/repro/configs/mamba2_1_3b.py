@@ -1,0 +1,25 @@
+"""mamba2-1.3b — SSD (state-space duality), attention-free [arXiv:2405.21060]."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,  # attention-free
+    n_kv_heads=0,
+    d_ff=0,  # no MLP: the mamba block is the whole layer
+    vocab=50280,
+    ssm=SSMConfig(d_inner=4096, head_dim=64, state_dim=128, n_groups=1,
+                  conv_width=4, chunk=128),
+    subquadratic=True,  # constant-size recurrent state
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="mamba2-1.3b-smoke", n_layers=2, d_model=64, vocab=512,
+    ssm=SSMConfig(d_inner=128, head_dim=32, state_dim=16, n_groups=1,
+                  conv_width=4, chunk=16),
+)

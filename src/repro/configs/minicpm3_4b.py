@@ -1,0 +1,32 @@
+"""minicpm3-4b — multi-head latent attention LM [hf:openbmb/MiniCPM3-4B]."""
+
+import dataclasses
+
+from repro.models.config import MLAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="mla",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,  # MLA: full heads over the shared latent
+    d_ff=6400,
+    vocab=73448,
+    head_dim=64,
+    rope_theta=10_000.0,
+    mla=MLAConfig(
+        q_lora_rank=768,
+        kv_lora_rank=256,
+        qk_nope_head_dim=64,
+        qk_rope_head_dim=32,
+        v_head_dim=64,
+    ),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="minicpm3-4b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=128, vocab=512, head_dim=16,
+    mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                  qk_rope_head_dim=8, v_head_dim=16),
+)

@@ -1,0 +1,23 @@
+"""minitron-4b — pruned Nemotron dense LM [arXiv:2407.14679; hf]."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=9216,
+    vocab=256000,
+    head_dim=128,
+    rope_theta=10_000.0,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="minitron-4b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab=512, head_dim=16,
+)

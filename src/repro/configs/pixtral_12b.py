@@ -1,0 +1,30 @@
+"""pixtral-12b — Pixtral ViT frontend (stub) + Mistral-Nemo backbone
+[hf:mistralai/Pixtral-12B-2409].
+
+The vision frontend is a STUB per the assignment: ``input_specs`` provides
+1024 precomputed patch embeddings that occupy the sequence prefix.
+"""
+
+import dataclasses
+
+from repro.models.config import FrontendStub, ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=131072,
+    head_dim=128,  # explicit (mistral-nemo style), not d_model/n_heads
+    rope_theta=1_000_000.0,
+    frontend=FrontendStub(kind="vision", n_positions=1024),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="pixtral-12b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab=512, head_dim=16,
+    frontend=FrontendStub(kind="vision", n_positions=8),
+)

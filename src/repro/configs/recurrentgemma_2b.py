@@ -1,0 +1,27 @@
+"""recurrentgemma-2b — RG-LRU + local attention hybrid, 1:2 [arXiv:2402.19427]."""
+
+import dataclasses
+
+from repro.models.config import HybridConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,  # MQA
+    d_ff=7680,
+    vocab=256000,
+    head_dim=256,
+    rope_theta=10_000.0,
+    hybrid=HybridConfig(pattern="RRA", window=2048, lru_width=2560,
+                        conv_width=4),
+    subquadratic=True,  # windowed attention + constant-size LRU state
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="recurrentgemma-2b-smoke", n_layers=3, d_model=64,
+    n_heads=2, n_kv_heads=1, d_ff=128, vocab=512, head_dim=32,
+    hybrid=HybridConfig(pattern="RRA", window=16, lru_width=64, conv_width=4),
+)

@@ -1,0 +1,31 @@
+"""seamless-m4t-large-v2 — enc-dec speech/text backbone [arXiv:2308.11596].
+
+The audio frontend (w2v-BERT conformer feature extractor) is a STUB per the
+assignment: ``input_specs`` provides precomputed frame embeddings with
+S_enc = seq_len // 4 (4x subsampling, typical for speech encoders).
+"""
+
+import dataclasses
+
+from repro.models.config import FrontendStub, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,  # decoder depth
+    enc_layers=24,
+    enc_subsample=4,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,  # MHA
+    d_ff=8192,
+    vocab=256206,
+    head_dim=64,
+    rope_theta=10_000.0,
+    frontend=FrontendStub(kind="audio", n_positions=0),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="seamless-m4t-large-v2-smoke", n_layers=2, enc_layers=2,
+    d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=512, head_dim=16,
+)

@@ -1,0 +1,82 @@
+"""Cloudburst core: stateful FaaS with LDPC + distributed session consistency."""
+
+from .cache import CacheFailure, ExecutorCache
+from .client import (
+    CloudburstClient,
+    CloudburstFuture,
+    CloudburstReference,
+    RegisteredDag,
+    RegisteredFunction,
+)
+from .consistency import (
+    MODES,
+    AnomalyTracker,
+    DagRestart,
+    ProtocolClient,
+    SessionContext,
+    ShadowLWWLattice,
+)
+from .dag import Dag
+from .executor import Executor, ExecutorFailure, UserLibrary
+from .kvs import AnnaKVS, StorageNode
+from .lattices import (
+    CausalLattice,
+    CausalVersion,
+    GCounter,
+    LamportClock,
+    Lattice,
+    LWWLattice,
+    MapLattice,
+    MaxIntLattice,
+    SetLattice,
+    VectorClock,
+    deencapsulate,
+    encapsulate,
+)
+from .netsim import LatencyModel, NetworkProfile, VirtualClock, DEFAULT_PROFILE
+from .runtime import Cluster, DagResult
+from .scheduler import LocalityPolicy, RandomPolicy, Scheduler, SchedulingPolicy
+
+__all__ = [
+    "AnnaKVS",
+    "AnomalyTracker",
+    "CacheFailure",
+    "CausalLattice",
+    "CausalVersion",
+    "CloudburstClient",
+    "CloudburstFuture",
+    "CloudburstReference",
+    "Cluster",
+    "Dag",
+    "DagResult",
+    "DagRestart",
+    "DEFAULT_PROFILE",
+    "Executor",
+    "ExecutorCache",
+    "ExecutorFailure",
+    "GCounter",
+    "LamportClock",
+    "LatencyModel",
+    "Lattice",
+    "LocalityPolicy",
+    "LWWLattice",
+    "MapLattice",
+    "MaxIntLattice",
+    "MODES",
+    "NetworkProfile",
+    "ProtocolClient",
+    "RandomPolicy",
+    "RegisteredDag",
+    "RegisteredFunction",
+    "Scheduler",
+    "SchedulingPolicy",
+    "SessionContext",
+    "SetLattice",
+    "ShadowLWWLattice",
+    "StorageNode",
+    "UserLibrary",
+    "VectorClock",
+    "VirtualClock",
+    "deencapsulate",
+    "encapsulate",
+]

@@ -1,0 +1,166 @@
+"""Monitoring + resource management (paper §4.4) and the Fig. 6 simulator.
+
+The monitoring engine aggregates metrics that executors/schedulers publish
+to the KVS and drives two policies:
+
+* **per-function replication**: if the incoming request rate exceeds the
+  completion rate, pin the function onto more executor threads;
+* **node elasticity**: average executor utilization > 70% -> add EC2 nodes
+  (respecting the ~2 minute boot latency the paper measures); < 20% ->
+  deallocate down to the floor.
+
+``AutoscaleSimulator`` reproduces the Fig. 6 experiment: 60 closed-loop
+clients, a sleep(50 ms) function, 10 initial nodes (30 threads) with one
+function replica pinned; the trace shows throughput stepping up as pinning
+and node boots complete, then draining within ~30 s of load removal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from .kvs import AnnaKVS
+from .lattices import LamportClock, LWWLattice
+from .netsim import NetworkProfile, DEFAULT_PROFILE
+
+UP_THRESHOLD = 0.70
+DOWN_THRESHOLD = 0.20
+
+
+@dataclasses.dataclass
+class MonitorConfig:
+    up_threshold: float = UP_THRESHOLD
+    down_threshold: float = DOWN_THRESHOLD
+    executors_per_node: int = 3
+    min_nodes: int = 10
+    scale_up_nodes: int = 4
+    policy_interval: float = 5.0  # seconds between policy evaluations
+    downscale_grace: float = 30.0  # paper: threads drop within 30 s of drain
+
+
+class MonitoringEngine:
+    """Aggregates KVS-published metrics and emits scaling decisions (§4.4)."""
+
+    def __init__(self, kvs: AnnaKVS, config: Optional[MonitorConfig] = None):
+        self.kvs = kvs
+        self.config = config or MonitorConfig()
+        self.lamport = LamportClock("monitor")
+
+    def publish(self, key: str, value) -> None:
+        self.kvs.put(f"__metrics_{key}", LWWLattice(self.lamport.tick(), value))
+
+    def read(self, key: str):
+        lat = self.kvs.get_merged(f"__metrics_{key}")
+        return None if lat is None else lat.reveal()
+
+    def decide(
+        self,
+        avg_utilization: float,
+        arrival_rate: float,
+        completion_rate: float,
+        pending_boots: int,
+    ) -> Tuple[bool, bool, int]:
+        """-> (scale_nodes_up, scale_nodes_down, thread_replica_delta)."""
+        cfg = self.config
+        up = avg_utilization > cfg.up_threshold and pending_boots == 0
+        down = avg_utilization < cfg.down_threshold
+        replica_delta = 0
+        if arrival_rate > 1.1 * max(completion_rate, 1e-9):
+            replica_delta = cfg.executors_per_node
+        elif arrival_rate < cfg.down_threshold * max(completion_rate, 1e-9):
+            replica_delta = -1
+        return up, down, replica_delta
+
+
+@dataclasses.dataclass
+class TraceSample:
+    t: float
+    throughput: float  # requests/second completed
+    threads: int
+    nodes: int
+
+
+class AutoscaleSimulator:
+    """Time-stepped closed-loop simulation of the Fig. 6 scenario."""
+
+    def __init__(
+        self,
+        initial_nodes: int = 10,
+        executors_per_node: int = 3,
+        service_time: float = 0.050,
+        n_clients: int = 60,
+        profile: NetworkProfile = DEFAULT_PROFILE,
+        config: Optional[MonitorConfig] = None,
+        dt: float = 1.0,
+    ):
+        self.cfg = config or MonitorConfig(
+            executors_per_node=executors_per_node, min_nodes=initial_nodes
+        )
+        self.profile = profile
+        self.kvs = AnnaKVS(num_nodes=2, replication=1, profile=profile)
+        self.monitor = MonitoringEngine(self.kvs, self.cfg)
+        self.nodes = initial_nodes
+        self.executors_per_node = executors_per_node
+        self.service_time = service_time
+        self.n_clients = n_clients
+        self.dt = dt
+        # paper: one replica of the function deployed initially
+        self.pinned_threads = executors_per_node
+        self.pending_boots: List[float] = []  # boot completion times
+        self.drained_since: Optional[float] = None
+
+    def run(self, duration: float, load_until: float) -> List[TraceSample]:
+        samples: List[TraceSample] = []
+        t = 0.0
+        next_policy = 0.0
+        while t < duration:
+            # complete pending node boots
+            finished = [b for b in self.pending_boots if b <= t]
+            if finished:
+                self.pending_boots = [b for b in self.pending_boots if b > t]
+                self.nodes += len(finished)
+                # resources allocated to the function as soon as available
+                self.pinned_threads = min(
+                    self.pinned_threads + len(finished) * self.executors_per_node,
+                    self.nodes * self.executors_per_node,
+                )
+            capacity = min(self.pinned_threads, self.nodes * self.executors_per_node)
+            active_clients = self.n_clients if t < load_until else 0
+            # closed loop: each client keeps one request outstanding ->
+            # concurrency = min(clients, threads); each completes 1/s_t req/s
+            busy = min(active_clients, capacity)
+            throughput = busy / self.service_time
+            utilization = busy / max(self.nodes * self.executors_per_node, 1)
+            self.monitor.publish("avg_util", utilization)
+            if t >= next_policy:
+                arrival_rate = active_clients / self.service_time
+                up, down, replica_delta = self.monitor.decide(
+                    utilization, arrival_rate, throughput, len(self.pending_boots)
+                )
+                if replica_delta > 0:
+                    self.pinned_threads = min(
+                        self.pinned_threads + replica_delta * 4,
+                        self.nodes * self.executors_per_node,
+                    )
+                if up:
+                    boot = self.profile.sample(self.profile.ec2_boot)
+                    self.pending_boots.extend(
+                        t + boot for _ in range(self.cfg.scale_up_nodes)
+                    )
+                if active_clients == 0:
+                    if self.drained_since is None:
+                        self.drained_since = t
+                    if t - self.drained_since >= self.cfg.downscale_grace:
+                        self.pinned_threads = 2  # paper: 66 -> 2 threads
+                    if down and t - self.drained_since >= 300.0:
+                        self.nodes = self.cfg.min_nodes  # paper: 22 -> 10 in 5 min
+                        self.pending_boots.clear()
+                else:
+                    self.drained_since = None
+                next_policy = t + self.cfg.policy_interval
+            samples.append(
+                TraceSample(t=t, throughput=throughput, threads=capacity, nodes=self.nodes)
+            )
+            t += self.dt
+        return samples

@@ -1,0 +1,199 @@
+"""Executor-colocated mutable cache (paper §4.2) + bolt-on causal cut (§5.3).
+
+One cache process per VM.  Executors talk to the cache over IPC; the cache
+talks to Anna.  Semantics reproduced:
+
+* **write-back**: updates are applied locally, acknowledged, and flushed to
+  the KVS asynchronously (``tick``);
+* **miss path**: reads of absent keys fetch from the KVS;
+* **keyset publishing**: the cache periodically publishes its key set; Anna
+  pushes updates for those keys (lattice-merged on arrival);
+* **repeatable-read snapshots**: on first read within a DAG the cache pins a
+  snapshot version for the DAG's lifetime; downstream caches may fetch it;
+* **causal-cut maintenance** (bolt-on causal consistency [10]): a causal
+  version only becomes visible once the cache holds every dependency at a
+  dominating-or-concurrent vector clock; otherwise the update is buffered.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Optional, Set, Tuple
+
+from .kvs import AnnaKVS
+from .lattices import CausalLattice, Lattice, LWWLattice
+from .netsim import NetworkProfile, VirtualClock, DEFAULT_PROFILE
+
+
+class CacheFailure(RuntimeError):
+    """Raised when a (failed) cache is asked for data — triggers DAG restart."""
+
+
+class ExecutorCache:
+    def __init__(
+        self,
+        cache_id: str,
+        kvs: AnnaKVS,
+        profile: NetworkProfile = DEFAULT_PROFILE,
+    ):
+        self.cache_id = cache_id
+        self.kvs = kvs
+        self.profile = profile
+        self.data: Dict[str, Lattice] = {}
+        self.pending_flush: List[Tuple[str, Lattice]] = []
+        # (dag_id, key) -> pinned lattice version
+        self.snapshots: Dict[Tuple[str, str], Lattice] = {}
+        self.pending_causal: List[Tuple[str, CausalLattice]] = []
+        self.alive = True
+        self.hits = 0
+        self.misses = 0
+
+    # -- basic data path ----------------------------------------------------
+    def _check_alive(self):
+        if not self.alive:
+            raise CacheFailure(self.cache_id)
+
+    def read(self, key: str, clock: Optional[VirtualClock] = None) -> Optional[Lattice]:
+        """Local read; on miss, fetch from the KVS and insert."""
+        self._check_alive()
+        if clock is not None:
+            clock.advance(self.profile.sample(self.profile.ipc))
+        val = self.data.get(key)
+        if val is not None:
+            self.hits += 1
+            return val
+        self.misses += 1
+        val = self.kvs.get(key, clock=clock)
+        if val is not None:
+            self.insert(key, val)
+        return val
+
+    def read_local(self, key: str) -> Optional[Lattice]:
+        self._check_alive()
+        return self.data.get(key)
+
+    def write(self, key: str, value: Lattice, clock: Optional[VirtualClock] = None) -> Lattice:
+        """Write-back: merge locally, ack, flush to KVS asynchronously."""
+        self._check_alive()
+        if clock is not None:
+            clock.advance(self.profile.sample(self.profile.ipc))
+        merged = self.insert(key, value)
+        self.pending_flush.append((key, value))
+        return merged
+
+    def insert(self, key: str, value: Lattice) -> Lattice:
+        """Merge a value into the cache, honoring causal-cut maintenance."""
+        if isinstance(value, CausalLattice):
+            if not self._deps_covered(value):
+                # Buffer until the cut can be maintained (bolt-on write buffer)
+                self.pending_causal.append((key, value))
+                return self.data.get(key, value)
+        cur = self.data.get(key)
+        merged = value if cur is None else cur.merge(value)
+        self.data[key] = merged
+        return merged
+
+    def _deps_covered(self, value: CausalLattice, depth: int = 8) -> bool:
+        """Causal cut check: every dependency present at >= its clock.
+
+        Dependencies are installed *transitively* through the same check —
+        a dep fetched from the KVS only lands in the cache once its own
+        dependency closure is covered (bolt-on's causal-cut invariant);
+        otherwise the whole update stays buffered.
+        """
+        for version in value.versions:
+            for dep_key, dep_vc in version.dependencies:
+                if not self._ensure_dep(dep_key, dep_vc, depth):
+                    return False
+        return True
+
+    def _ensure_dep(self, dep_key: str, dep_vc, depth: int) -> bool:
+        held = self.data.get(dep_key)
+        if isinstance(held, CausalLattice) and held.dominates_or_concurrent(dep_vc):
+            return True
+        if depth <= 0:
+            return False
+        fetched = self.kvs.get_merged(dep_key)
+        if not isinstance(fetched, CausalLattice):
+            return False
+        merged = (fetched if not isinstance(held, CausalLattice)
+                  else held.merge(fetched))
+        if not merged.dominates_or_concurrent(dep_vc):
+            return False
+        if not self._deps_covered(merged, depth - 1):
+            return False
+        self.data[dep_key] = merged
+        return True
+
+    # -- repeatable-read snapshot support (paper §5.3) ------------------------
+    def pin_snapshot(self, dag_id: str, key: str, value: Lattice) -> None:
+        self.snapshots[(dag_id, key)] = value
+
+    def get_snapshot(self, dag_id: str, key: str) -> Optional[Lattice]:
+        self._check_alive()
+        return self.snapshots.get((dag_id, key))
+
+    def evict_dag(self, dag_id: str) -> None:
+        """Sink-notifies-upstream completion: drop the DAG's snapshots."""
+        for k in [k for k in self.snapshots if k[0] == dag_id]:
+            del self.snapshots[k]
+
+    # -- background work -------------------------------------------------------
+    def tick(self, clock: Optional[VirtualClock] = None,
+             defer_prob: float = 0.0) -> None:
+        """Flush pending writes, receive KVS pushes, retry buffered causal.
+
+        ``defer_prob`` randomly postpones individual flushes/pushes to the
+        next tick — continuous, out-of-order background propagation, which
+        lattice merges make safe (ACI) but which creates the per-key
+        staleness skew behind the paper's Table 2 / Retwis anomalies.
+        """
+        if not self.alive:
+            return
+        rng = self.kvs.rng
+        still: List[Tuple[str, Lattice]] = []
+        for key, value in self.pending_flush:
+            if defer_prob > 0 and rng.random() < defer_prob:
+                still.append((key, value))
+            else:
+                self.kvs.put(key, value, clock=None)  # async: no session latency
+        self.pending_flush = still
+        for key, value in self.kvs.drain_cache_pushes(self.cache_id):
+            if defer_prob > 0 and rng.random() < defer_prob:
+                self.kvs._cache_pushes[self.cache_id].append((key, value))
+            else:
+                self.insert(key, value)
+        still_pending: List[Tuple[str, CausalLattice]] = []
+        for key, value in self.pending_causal:
+            if self._deps_covered(value):
+                cur = self.data.get(key)
+                self.data[key] = value if cur is None else cur.merge(value)
+            else:
+                still_pending.append((key, value))
+        self.pending_causal = still_pending
+
+    def publish_keyset(self) -> None:
+        self.kvs.publish_keyset(self.cache_id, set(self.data))
+
+    # -- failure ------------------------------------------------------------------
+    def fail(self) -> None:
+        self.alive = False
+
+    def recover(self) -> None:
+        self.alive = True
+        self.data.clear()
+        self.snapshots.clear()
+        self.pending_flush.clear()
+        self.pending_causal.clear()
+
+    @property
+    def keyset(self) -> Set[str]:
+        return set(self.data)
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "keys": len(self.data),
+            "hits": self.hits,
+            "misses": self.misses,
+            "pinned": len(self.snapshots),
+        }

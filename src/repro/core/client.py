@@ -1,0 +1,124 @@
+"""CloudburstClient — the user-facing API of Figure 2.
+
+.. code-block:: python
+
+    cloud = CloudburstClient(cluster)
+    cloud.put('key', 2)
+    reference = CloudburstReference('key')
+    sq = cloud.register(lambda x: x * x, name='square')
+    print(sq(reference))          # -> 4
+    future = sq(3, store_in_kvs=True)
+    print(future.get())           # -> 9
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+from .executor import CloudburstReference  # re-export: part of the public API
+from .netsim import VirtualClock
+from .runtime import Cluster, DagResult
+
+__all__ = [
+    "CloudburstClient",
+    "CloudburstReference",
+    "CloudburstFuture",
+    "RegisteredFunction",
+    "RegisteredDag",
+]
+
+
+class CloudburstFuture:
+    """Result stored in the KVS; retrieved on ``get()`` (Fig. 2 lines 11-12)."""
+
+    def __init__(self, key: str, cluster: Cluster, clock: Optional[VirtualClock]):
+        self.key = key
+        self._cluster = cluster
+        self._clock = clock
+
+    def get(self) -> Any:
+        value = self._cluster.get(self.key, clock=self._clock)
+        while value is None:  # not yet flushed: force background progress
+            self._cluster.tick()
+            value = self._cluster.get(self.key, clock=self._clock)
+        return value
+
+
+@dataclasses.dataclass
+class RegisteredFunction:
+    name: str
+    client: "CloudburstClient"
+
+    def __call__(self, *args: Any, store_in_kvs: bool = False) -> Any:
+        return self.client.call(self.name, *args, store_in_kvs=store_in_kvs)
+
+
+@dataclasses.dataclass
+class RegisteredDag:
+    name: str
+    client: "CloudburstClient"
+
+    def __call__(
+        self, args_by_fn: Optional[Dict[str, Sequence]] = None, **kw
+    ) -> DagResult:
+        return self.client.call_dag(self.name, args_by_fn, **kw)
+
+
+class CloudburstClient:
+    def __init__(self, cluster: Optional[Cluster] = None, **cluster_kwargs):
+        self.cluster = cluster or Cluster(**cluster_kwargs)
+        self.clock = VirtualClock()
+        self._future_seq = 0
+
+    # -- KVS access --------------------------------------------------------------
+    def put(self, key: str, value: Any) -> None:
+        self.cluster.put(key, value, clock=self.clock)
+
+    def get(self, key: str) -> Any:
+        return self.cluster.get(key, clock=self.clock)
+
+    # -- registration -------------------------------------------------------------
+    def register(self, fn: Callable, name: str) -> RegisteredFunction:
+        self.cluster.register(fn, name)
+        return RegisteredFunction(name, self)
+
+    def register_dag(
+        self,
+        name: str,
+        functions: Sequence[str],
+        edges: Optional[Sequence[Tuple[str, str]]] = None,
+    ) -> RegisteredDag:
+        self.cluster.register_dag(name, functions, edges)
+        return RegisteredDag(name, self)
+
+    # -- invocation ------------------------------------------------------------------
+    def call(self, fn_name: str, *args: Any, store_in_kvs: bool = False) -> Any:
+        result, _latency = self.cluster.call(fn_name, *args, clock=self.clock)
+        if store_in_kvs:
+            self._future_seq += 1
+            key = f"__result_{fn_name}_{self._future_seq}"
+            self.cluster.put(key, result, clock=self.clock)
+            return CloudburstFuture(key, self.cluster, self.clock)
+        return result
+
+    def call_dag(
+        self,
+        dag_name: str,
+        args_by_fn: Optional[Dict[str, Sequence]] = None,
+        store_in_kvs: bool = False,
+        mode: Optional[str] = None,
+    ) -> DagResult:
+        key = None
+        if store_in_kvs:
+            self._future_seq += 1
+            key = f"__result_{dag_name}_{self._future_seq}"
+        result = self.cluster.call_dag(
+            dag_name, args_by_fn, clock=self.clock, mode=mode, store_in_kvs=key
+        )
+        if store_in_kvs:
+            result.value = CloudburstFuture(key, self.cluster, self.clock)
+        return result
+
+    def tick(self) -> None:
+        self.cluster.tick()

@@ -1,0 +1,433 @@
+"""Distributed session consistency (paper §5).
+
+A DAG execution is a *session*: all reads/writes across the executors that
+run the DAG's functions must jointly satisfy one consistency contract, even
+though they hit different physical caches.  Five levels are implemented,
+matching the paper's evaluation (§6.2):
+
+* ``lww``  — last-writer-wins encapsulation, no session guarantees;
+* ``dsrr`` — distributed-session repeatable read (§5.3 protocol 1):
+  snapshot-on-first-read, version metadata shipped downstream, exact-version
+  fetch from the upstream cache on mismatch, restart on upstream failure;
+* ``sk``   — single-key causality: causal encapsulation only;
+* ``mk``   — multi-key causality: bolt-on causal-cut maintenance [10]
+  within each cache, no cross-cache metadata;
+* ``dsc``  — distributed-session causal consistency (§5.3 protocol 2):
+  mk + read-set and dependency-set metadata shipped downstream, upstream
+  version-snapshot retrieval to build a *distributed* causal cut.
+
+Also here: the anomaly trackers used for Table 2 — the system runs in LWW
+mode while shadow causal metadata lets us count, per level, the anomalies
+that level would have prevented.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from .cache import CacheFailure, ExecutorCache
+from .lattices import (
+    CausalLattice,
+    CausalVersion,
+    LamportClock,
+    Lattice,
+    LWWLattice,
+    VectorClock,
+)
+from .netsim import NetworkProfile, VirtualClock, DEFAULT_PROFILE
+
+MODES = ("lww", "dsrr", "sk", "mk", "dsc")
+
+
+class DagRestart(RuntimeError):
+    """An upstream cache failed / a pinned snapshot was lost: rerun the DAG."""
+
+
+# ---------------------------------------------------------------------------
+# Session metadata shipped along DAG edges
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SessionContext:
+    dag_id: str
+    mode: str = "lww"
+    # dsrr: key -> (lww timestamp, cache_id of the snapshot holder)
+    rr_snapshots: Dict[str, Tuple[Tuple[int, str], str]] = dataclasses.field(
+        default_factory=dict
+    )
+    # dsc: key -> vector-clock lower bound implied by reads + their deps
+    lower_bounds: Dict[str, VectorClock] = dataclasses.field(default_factory=dict)
+    # dsc: key -> cache that pinned a version snapshot usable downstream
+    snapshot_holders: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # versions read (or written) so far in the session: key -> VC
+    read_set: Dict[str, VectorClock] = dataclasses.field(default_factory=dict)
+    caches_visited: List[str] = dataclasses.field(default_factory=list)
+
+    def metadata_bytes(self) -> int:
+        """Wire size of the session metadata (drives the latency model)."""
+        n = 0
+        n += sum(len(k) + 24 for k in self.rr_snapshots)
+        for k, vc in self.lower_bounds.items():
+            n += len(k) + 12 * max(len(vc), 1)
+        for k, vc in self.read_set.items():
+            n += len(k) + 12 * max(len(vc), 1)
+        n += sum(len(k) + 12 for k in self.snapshot_holders)
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Protocol client: the executor-side read/write path
+# ---------------------------------------------------------------------------
+
+
+class ProtocolClient:
+    """Executes get/put for one function invocation under a session."""
+
+    def __init__(
+        self,
+        cache: ExecutorCache,
+        caches: Dict[str, ExecutorCache],
+        session: SessionContext,
+        node_id: str,
+        lamport: LamportClock,
+        clock: Optional[VirtualClock] = None,
+        profile: NetworkProfile = DEFAULT_PROFILE,
+        tracker: Optional["AnomalyTracker"] = None,
+    ):
+        self.cache = cache
+        self.caches = caches
+        self.session = session
+        self.node_id = node_id
+        self.lamport = lamport
+        self.clock = clock
+        self.profile = profile
+        self.tracker = tracker
+        if cache.cache_id not in session.caches_visited:
+            session.caches_visited.append(cache.cache_id)
+
+    # -- public API -----------------------------------------------------------
+    def get(self, key: str) -> Any:
+        lat = self.get_lattice(key)
+        return None if lat is None else lat.reveal()
+
+    def get_lattice(self, key: str) -> Optional[Lattice]:
+        mode = self.session.mode
+        if mode == "lww":
+            return self._get_plain(key)
+        if mode == "dsrr":
+            return self._get_rr(key)
+        if mode in ("sk", "mk"):
+            return self._get_plain(key)
+        if mode == "dsc":
+            return self._get_dsc(key)
+        raise ValueError(mode)
+
+    def put(self, key: str, value: Any) -> Lattice:
+        mode = self.session.mode
+        if mode in ("lww", "dsrr"):
+            if self.tracker is not None and mode == "lww":
+                # shadow causal metadata rides along for anomaly detection
+                prev = self.session.read_set.get(key, VectorClock.zero())
+                vc = prev.advance(self.node_id)
+                deps = tuple(sorted(
+                    (k, v) for k, v in self.session.read_set.items() if k != key
+                ))
+                lat: Lattice = ShadowLWWLattice(self.lamport.tick(), vc, deps, value)
+                self.cache.write(key, lat, clock=self.clock)
+                self.session.read_set[key] = vc
+                self.tracker.on_write(self.session, self.cache.cache_id, key, lat)
+                return lat
+            lat = LWWLattice(self.lamport.tick(), value)
+            self.cache.write(key, lat, clock=self.clock)
+            if mode == "dsrr":
+                # RR invariant: subsequent reads see the most recent update
+                # *within the DAG* — pin the written version.
+                self.cache.pin_snapshot(self.session.dag_id, key, lat)
+                self.session.rr_snapshots[key] = (lat.timestamp, self.cache.cache_id)
+            if self.tracker is not None:
+                self.tracker.on_write(self.session, self.cache.cache_id, key, lat)
+            return lat
+        # causal modes --------------------------------------------------------
+        prev = self.session.read_set.get(key, VectorClock.zero())
+        vc = prev.advance(self.node_id)
+        if mode == "sk":
+            deps: Dict[str, VectorClock] = {}
+        else:
+            deps = {
+                k: v for k, v in self.session.read_set.items() if k != key
+            }
+        lat = CausalLattice.of(vc, value, deps)
+        self.cache.write(key, lat, clock=self.clock)
+        self.session.read_set[key] = vc
+        if mode == "dsc":
+            self.session.lower_bounds[key] = self._lb(key).merge(vc)
+            self.cache.pin_snapshot(self.session.dag_id, key, lat)
+            self.session.snapshot_holders[key] = self.cache.cache_id
+        if self.tracker is not None:
+            self.tracker.on_write(self.session, self.cache.cache_id, key, lat)
+        return lat
+
+    # -- lww / sk / mk ----------------------------------------------------------
+    def _get_plain(self, key: str) -> Optional[Lattice]:
+        val = self.cache.read(key, clock=self.clock)
+        if val is not None and isinstance(val, (CausalLattice, ShadowLWWLattice)):
+            version = val.pick()
+            self.session.read_set[key] = version.vector_clock
+        if self.tracker is not None and val is not None:
+            self.tracker.on_read(self.session, self.cache.cache_id, key, val)
+        return val
+
+    # -- distributed session repeatable read -------------------------------------
+    def _get_rr(self, key: str) -> Optional[Lattice]:
+        snap = self.session.rr_snapshots.get(key)
+        if snap is not None:
+            ts, holder_id = snap
+            local = self.cache.read_local(key)
+            if isinstance(local, LWWLattice) and local.timestamp == ts:
+                if self.clock is not None:
+                    self.clock.advance(self.profile.sample(self.profile.ipc))
+                return local
+            # exact version required: fetch the pinned snapshot upstream
+            holder = self.caches.get(holder_id)
+            if holder is None:
+                raise DagRestart(f"snapshot holder {holder_id} unknown")
+            if self.clock is not None:
+                self.clock.advance(self.profile.sample(self.profile.tcp))
+            try:
+                pinned = holder.get_snapshot(self.session.dag_id, key)
+            except CacheFailure as e:
+                raise DagRestart(str(e))
+            if pinned is None:
+                raise DagRestart(f"snapshot for {key} lost at {holder_id}")
+            # adopt the snapshot locally for the DAG's lifetime
+            self.cache.pin_snapshot(self.session.dag_id, key, pinned)
+            return pinned
+        val = self.cache.read(key, clock=self.clock)
+        if val is None:
+            return None
+        assert isinstance(val, LWWLattice), "dsrr requires LWW encapsulation"
+        self.cache.pin_snapshot(self.session.dag_id, key, val)
+        self.session.rr_snapshots[key] = (val.timestamp, self.cache.cache_id)
+        if self.tracker is not None:
+            self.tracker.on_read(self.session, self.cache.cache_id, key, val)
+        return val
+
+    # -- distributed session causal ------------------------------------------------
+    def _lb(self, key: str) -> VectorClock:
+        return self.session.lower_bounds.get(key, VectorClock.zero())
+
+    def _get_dsc(self, key: str) -> Optional[Lattice]:
+        lb = self._lb(key)
+        if self.clock is not None:
+            self.clock.advance(self.profile.sample(self.profile.ipc))
+
+        def local() -> Optional[CausalLattice]:
+            v = self.cache.read_local(key)
+            return v if isinstance(v, CausalLattice) else None
+
+        def satisfied(c: Optional[CausalLattice]) -> bool:
+            return c is not None and c.dominates_or_concurrent(lb)
+
+        candidate = local()
+        if candidate is None:
+            # cold cache: pull from the KVS *through* the cut-maintaining
+            # insert — versions with unavailable dependencies stay buffered
+            # (bolt-on write buffering), so the cut is never violated.
+            fetched = self.cache.kvs.get_merged(key, clock=self.clock)
+            if isinstance(fetched, CausalLattice):
+                self.cache.insert(key, fetched)
+            candidate = local()
+            if candidate is None:
+                return None  # key causally does-not-exist-yet here
+        if not satisfied(candidate):
+            # 1) the upstream cache that pinned a version snapshot (§5.3)
+            holder_id = self.session.snapshot_holders.get(key)
+            if holder_id is not None and holder_id != self.cache.cache_id:
+                holder = self.caches.get(holder_id)
+                if holder is not None:
+                    if self.clock is not None:
+                        self.clock.advance(self.profile.sample(self.profile.tcp))
+                    try:
+                        pinned = holder.get_snapshot(self.session.dag_id, key)
+                    except CacheFailure as e:
+                        raise DagRestart(str(e))
+                    if isinstance(pinned, CausalLattice):
+                        self.cache.insert(key, pinned)
+                        candidate = local() or candidate
+            # 2) fall back to a merged KVS read
+            if not satisfied(candidate):
+                fetched = self.cache.kvs.get_merged(key, clock=self.clock)
+                if isinstance(fetched, CausalLattice):
+                    self.cache.insert(key, fetched)
+                    fresher = local()
+                    if fresher is not None:
+                        candidate = fresher
+                    elif satisfied(fetched):
+                        candidate = fetched  # serve-over (cut pending deps)
+        version = candidate.pick()
+        # pin for downstream functions + record holder
+        self.cache.pin_snapshot(self.session.dag_id, key, candidate)
+        self.session.snapshot_holders.setdefault(key, self.cache.cache_id)
+        # session bookkeeping: monotonic reads + dependency lower bounds
+        self.session.read_set[key] = self.session.read_set.get(
+            key, VectorClock.zero()
+        ).merge(version.vector_clock)
+        self.session.lower_bounds[key] = lb.merge(version.vector_clock)
+        for dep_key, dep_vc in version.dependencies:
+            self.session.lower_bounds[dep_key] = self._lb(dep_key).merge(dep_vc)
+            # upstream cache stores snapshots of the causal dependencies too
+            dep_local = self.cache.read_local(dep_key)
+            if dep_local is not None:
+                self.cache.pin_snapshot(self.session.dag_id, dep_key, dep_local)
+                self.session.snapshot_holders.setdefault(dep_key, self.cache.cache_id)
+        if self.tracker is not None:
+            self.tracker.on_read(self.session, self.cache.cache_id, key, candidate)
+        return candidate
+
+
+# ---------------------------------------------------------------------------
+# Anomaly tracking (Table 2)
+# ---------------------------------------------------------------------------
+#
+# The system executes in LWW mode; values additionally carry shadow causal
+# metadata so we can count — per consistency level — the anomalies that the
+# level would have prevented.  Counts accrue left-to-right for the causal
+# levels (SK ⊂ MK ⊂ DSC); DSRR anomalies are independent, as in the paper.
+
+
+@dataclasses.dataclass(frozen=True)
+class ShadowLWWLattice(Lattice):
+    """LWW register carrying shadow causal metadata for anomaly detection."""
+
+    timestamp: Tuple[int, str]
+    vector_clock: VectorClock
+    dependencies: Tuple[Tuple[str, VectorClock], ...]
+    value: Any
+
+    def merge(self, other: Lattice) -> "ShadowLWWLattice":
+        assert isinstance(other, ShadowLWWLattice)
+        winner, loser = (
+            (self, other) if self.timestamp >= other.timestamp else (other, self)
+        )
+        if winner.vector_clock.concurrent_with(loser.vector_clock):
+            AnomalyTracker.record_sk_drop()
+        return winner
+
+    def reveal(self) -> Any:
+        return self.value
+
+    def pick(self) -> CausalVersion:
+        return CausalVersion(self.vector_clock, self.dependencies, self.value)
+
+
+@dataclasses.dataclass
+class ReadEvent:
+    dag_exec: str
+    cache_id: str
+    key: str
+    vector_clock: VectorClock
+    dependencies: Tuple[Tuple[str, VectorClock], ...]
+    lww_ts: Optional[Tuple[int, str]] = None
+
+
+class AnomalyTracker:
+    """Counts Table-2 anomalies during LWW-mode execution."""
+
+    _active: Optional["AnomalyTracker"] = None
+
+    def __init__(self):
+        self.sk = 0  # concurrent update dropped by LWW merge
+        self.mk = 0  # single-cache read set not a causal cut
+        self.dsc = 0  # cross-cache read set not a causal cut
+        self.dsrr = 0  # repeated read saw a different version
+        self._reads: Dict[str, List[ReadEvent]] = {}
+        self._writes: Dict[Tuple[str, str], List[Tuple[int, str]]] = {}
+
+    # -- global SK hook (merges happen deep inside KVS/caches) -----------------
+    @classmethod
+    def record_sk_drop(cls) -> None:
+        if cls._active is not None:
+            cls._active.sk += 1
+
+    def __enter__(self) -> "AnomalyTracker":
+        AnomalyTracker._active = self
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        AnomalyTracker._active = None
+        return False
+
+    # -- per-operation hooks -----------------------------------------------------
+    def on_read(self, session: SessionContext, cache_id: str, key: str, lat: Lattice):
+        vc, deps, ts = VectorClock.zero(), (), None
+        if isinstance(lat, ShadowLWWLattice):
+            vc, deps, ts = lat.vector_clock, lat.dependencies, lat.timestamp
+        elif isinstance(lat, CausalLattice):
+            v = lat.pick()
+            vc, deps = v.vector_clock, v.dependencies
+        elif isinstance(lat, LWWLattice):
+            ts = lat.timestamp
+        self._reads.setdefault(session.dag_id, []).append(
+            ReadEvent(session.dag_id, cache_id, key, vc, deps, ts)
+        )
+
+    def on_write(self, session: SessionContext, cache_id: str, key: str, lat: Lattice):
+        if isinstance(lat, (LWWLattice, ShadowLWWLattice)):
+            self._writes.setdefault((session.dag_id, key), []).append(lat.timestamp)
+
+    # -- end-of-DAG analysis ---------------------------------------------------------
+    def finish_dag(self, dag_exec_id: str) -> None:
+        reads = self._reads.pop(dag_exec_id, [])
+        # DSRR: repeated read of a key must see the first version read (or a
+        # version written within the DAG).
+        first_seen: Dict[str, Tuple[int, str]] = {}
+        dag_writes = {
+            k[1]: set(v)
+            for k, v in self._writes.items()
+            if k[0] == dag_exec_id
+        }
+        flagged_rr = False
+        for ev in reads:
+            if ev.lww_ts is None:
+                continue
+            if ev.key in first_seen:
+                ok = ev.lww_ts == first_seen[ev.key] or ev.lww_ts in dag_writes.get(
+                    ev.key, ()
+                )
+                if not ok and not flagged_rr:
+                    self.dsrr += 1
+                    flagged_rr = True
+            else:
+                first_seen[ev.key] = ev.lww_ts
+        # MK/DSC: for each read with dependencies, a (same-session) read of a
+        # dependency key at an older version violates the causal cut.  Same
+        # cache -> MK anomaly; different caches -> DSC-only anomaly.
+        flagged_mk = False
+        flagged_dsc = False
+        for ev in reads:
+            for dep_key, dep_vc in ev.dependencies:
+                for other in reads:
+                    if other.key != dep_key:
+                        continue
+                    if dep_vc.strictly_dominates(other.vector_clock):
+                        if other.cache_id == ev.cache_id:
+                            flagged_mk = True
+                        else:
+                            flagged_dsc = True
+        if flagged_mk:
+            self.mk += 1
+        if flagged_dsc:
+            self.dsc += 1
+        for k in [k for k in self._writes if k[0] == dag_exec_id]:
+            del self._writes[k]
+
+    def counts(self) -> Dict[str, int]:
+        return {
+            "lww": 0,
+            "sk": self.sk,
+            "mk": self.sk + self.mk,
+            "dsc": self.sk + self.mk + self.dsc,
+            "dsrr": self.dsrr,
+        }

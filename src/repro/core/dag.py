@@ -1,0 +1,73 @@
+"""Function-composition DAGs (paper §3).
+
+Users register arbitrary compositions of functions; results flow along the
+edges automatically.  DAG topologies are the scheduler's only persistent
+metadata and live in the KVS.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict, deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class Dag:
+    name: str
+    functions: List[str]
+    edges: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        fset = set(self.functions)
+        for u, v in self.edges:
+            assert u in fset and v in fset, f"edge ({u},{v}) uses unknown function"
+        self._down: Dict[str, List[str]] = defaultdict(list)
+        self._up: Dict[str, List[str]] = defaultdict(list)
+        for u, v in self.edges:
+            self._down[u].append(v)
+            self._up[v].append(u)
+        assert self.topo_order(), "DAG has a cycle"
+
+    @staticmethod
+    def linear(name: str, functions: Sequence[str]) -> "Dag":
+        fns = list(functions)
+        return Dag(name, fns, [(fns[i], fns[i + 1]) for i in range(len(fns) - 1)])
+
+    def downstream(self, fn: str) -> List[str]:
+        return self._down.get(fn, [])
+
+    def upstream(self, fn: str) -> List[str]:
+        return self._up.get(fn, [])
+
+    def sources(self) -> List[str]:
+        return [f for f in self.functions if not self._up.get(f)]
+
+    def sinks(self) -> List[str]:
+        return [f for f in self.functions if not self._down.get(f)]
+
+    def is_linear(self) -> bool:
+        return all(
+            len(self._down.get(f, [])) <= 1 and len(self._up.get(f, [])) <= 1
+            for f in self.functions
+        )
+
+    def topo_order(self) -> Optional[List[str]]:
+        indeg = {f: len(self._up.get(f, [])) for f in self.functions}
+        q = deque([f for f in self.functions if indeg[f] == 0])
+        out: List[str] = []
+        while q:
+            f = q.popleft()
+            out.append(f)
+            for g in self._down.get(f, []):
+                indeg[g] -= 1
+                if indeg[g] == 0:
+                    q.append(g)
+        return out if len(out) == len(self.functions) else None
+
+    def longest_path_len(self) -> int:
+        """Depth of the DAG in functions (used to normalize latencies, §6.2)."""
+        depth: Dict[str, int] = {}
+        for f in self.topo_order():
+            depth[f] = 1 + max((depth[u] for u in self.upstream(f)), default=0)
+        return max(depth.values(), default=0)

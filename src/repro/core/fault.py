@@ -1,0 +1,120 @@
+"""Failure injection + fault-tolerance helpers (paper §4.5).
+
+The storage layer tolerates k-1 replica failures (Anna replication, hinted
+handoff on recovery).  The compute layer restarts whole DAGs after a
+timeout — re-executed writes are lattice merges, so they are idempotent by
+construction.  This module provides deterministic fault schedules used by
+the integration tests and benchmarks, plus a chaos wrapper for property
+tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .runtime import Cluster
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    at_request: int  # inject before the Nth request
+    kind: str  # 'fail_vm' | 'recover_vm' | 'fail_kvs' | 'recover_kvs' | 'straggle'
+    target: str
+    factor: float = 1.0  # for 'straggle': slow-down multiplier
+
+
+class FaultInjector:
+    """Applies a schedule of fault events keyed by request index."""
+
+    def __init__(self, cluster: Cluster, schedule: List[FaultEvent]):
+        self.cluster = cluster
+        self.schedule = sorted(schedule, key=lambda e: e.at_request)
+        self._next = 0
+        self.applied: List[FaultEvent] = []
+
+    def before_request(self, request_index: int) -> None:
+        while (
+            self._next < len(self.schedule)
+            and self.schedule[self._next].at_request <= request_index
+        ):
+            ev = self.schedule[self._next]
+            self._apply(ev)
+            self.applied.append(ev)
+            self._next += 1
+
+    def _apply(self, ev: FaultEvent) -> None:
+        if ev.kind == "fail_vm":
+            self.cluster.fail_vm(ev.target)
+        elif ev.kind == "recover_vm":
+            self.cluster.recover_vm(ev.target)
+        elif ev.kind == "fail_kvs":
+            self.cluster.kvs.fail_node(ev.target)
+        elif ev.kind == "recover_kvs":
+            self.cluster.kvs.recover_node(ev.target)
+        elif ev.kind == "straggle":
+            for ex in self.cluster.executors.values():
+                if ex.vm_id == ev.target or ex.executor_id == ev.target:
+                    ex.slow_factor = ev.factor
+        else:
+            raise ValueError(ev.kind)
+
+
+class ChaosMonkey:
+    """Random fault injection with bounded blast radius (property tests)."""
+
+    def __init__(self, cluster: Cluster, seed: int = 0, p_fail: float = 0.05,
+                 p_recover: float = 0.5, max_failed_vms: int = 1,
+                 max_failed_kvs: int = None):
+        self.cluster = cluster
+        self.rng = random.Random(seed)
+        self.p_fail = p_fail
+        self.p_recover = p_recover
+        self.max_failed_vms = max_failed_vms
+        self.max_failed_kvs = (
+            max_failed_kvs
+            if max_failed_kvs is not None
+            else max(cluster.kvs.replication - 1, 0)
+        )
+        self.failed_vms: List[str] = []
+        self.failed_kvs: List[str] = []
+
+    def step(self) -> None:
+        # recover first so the system heals over time
+        if self.failed_vms and self.rng.random() < self.p_recover:
+            vm = self.failed_vms.pop()
+            self.cluster.recover_vm(vm)
+        if self.failed_kvs and self.rng.random() < self.p_recover:
+            node = self.failed_kvs.pop()
+            self.cluster.kvs.recover_node(node)
+        if (
+            len(self.failed_vms) < self.max_failed_vms
+            and self.rng.random() < self.p_fail
+        ):
+            vms = sorted({ex.vm_id for ex in self.cluster.executors.values()})
+            live = [v for v in vms if v not in self.failed_vms]
+            if len(live) > 1:  # keep at least one VM alive
+                vm = self.rng.choice(live)
+                self.cluster.fail_vm(vm)
+                self.failed_vms.append(vm)
+        if (
+            len(self.failed_kvs) < self.max_failed_kvs
+            and self.rng.random() < self.p_fail
+        ):
+            live = [
+                n for n, node in self.cluster.kvs.nodes.items()
+                if node.alive and n not in self.failed_kvs
+            ]
+            if len(live) > 1:
+                node = self.rng.choice(live)
+                self.cluster.kvs.fail_node(node)
+                self.failed_kvs.append(node)
+
+    def heal_all(self) -> None:
+        for vm in self.failed_vms:
+            self.cluster.recover_vm(vm)
+        for node in self.failed_kvs:
+            self.cluster.kvs.recover_node(node)
+        self.failed_vms.clear()
+        self.failed_kvs.clear()

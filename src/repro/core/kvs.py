@@ -1,0 +1,270 @@
+"""Anna-style autoscaling key-value store (paper §2.2, §4).
+
+Key properties reproduced from Anna [86, 87]:
+
+* every stored value is a :class:`~repro.core.lattices.Lattice`; replica
+  convergence is by lattice merge (ACI), never by coordination;
+* consistent-hash ring with virtual nodes; per-key replication factor
+  (default ``k``) with *selective replication* for hot keys;
+* **asynchronous multi-master replication**: a ``put`` is applied at the
+  coordinator replica immediately and propagated to the other replicas via
+  gossip on ``tick()`` — this is what makes stale reads (and hence the
+  anomalies of Table 2) possible, exactly as in the real system;
+* cached-keyset index: executor caches publish the set of keys they hold;
+  Anna pushes key updates to the caches that subscribe to them (§4.2);
+* storage-node elasticity: nodes can join/leave; ownership moves with the
+  ring and data is handed off by merge;
+* k-fault tolerance: reads fall back to surviving replicas; writes to a
+  failed node are queued as hinted handoff and delivered on recovery.
+"""
+
+from __future__ import annotations
+
+import bisect
+import hashlib
+import random
+from collections import defaultdict
+from typing import Dict, List, Optional, Set, Tuple
+
+from .lattices import Lattice
+from .netsim import NetworkProfile, VirtualClock, DEFAULT_PROFILE
+
+
+def _hash(s: str) -> int:
+    return int.from_bytes(hashlib.md5(s.encode()).digest()[:8], "big")
+
+
+class StorageNode:
+    """One Anna storage node: a lattice map + gossip inbox."""
+
+    def __init__(self, node_id: str):
+        self.node_id = node_id
+        self.store: Dict[str, Lattice] = {}
+        self.inbox: List[Tuple[str, Lattice]] = []  # pending gossip
+        self.alive = True
+        self.puts = 0
+        self.gets = 0
+
+    def merge_in(self, key: str, value: Lattice) -> Lattice:
+        cur = self.store.get(key)
+        merged = value if cur is None else cur.merge(value)
+        self.store[key] = merged
+        return merged
+
+    def drain_inbox(self, rng: Optional[random.Random] = None,
+                    defer_prob: float = 0.0) -> int:
+        """Apply pending gossip; each item may defer to the next round.
+
+        Out-of-order delivery is safe *because* values are lattices: merge
+        is ACI, so replicas converge regardless of interleaving (§2.2).
+        """
+        deferred: List[Tuple[str, Lattice]] = []
+        n = 0
+        for key, value in self.inbox:
+            if rng is not None and defer_prob > 0 and rng.random() < defer_prob:
+                deferred.append((key, value))
+            else:
+                self.merge_in(key, value)
+                n += 1
+        self.inbox = deferred
+        return n
+
+
+class AnnaKVS:
+    """The storage tier.  All methods optionally account virtual latency."""
+
+    VNODES = 16
+
+    def __init__(
+        self,
+        num_nodes: int = 4,
+        replication: int = 2,
+        profile: NetworkProfile = DEFAULT_PROFILE,
+        sync_replication: bool = False,
+    ):
+        self.profile = profile
+        self.replication = replication
+        self.sync_replication = sync_replication
+        self.rng = random.Random(profile.seed if hasattr(profile, "seed") else 0)
+        self.nodes: Dict[str, StorageNode] = {}
+        self._ring: List[Tuple[int, str]] = []  # (hash, node_id), sorted
+        self._key_replication: Dict[str, int] = {}  # selective replication
+        # cached-keyset index (paper §4.2): key -> caches that hold it
+        self._cache_index: Dict[str, Set[str]] = defaultdict(set)
+        self._cache_pushes: Dict[str, List[Tuple[str, Lattice]]] = defaultdict(list)
+        self._hints: Dict[str, List[Tuple[str, Lattice]]] = defaultdict(list)
+        for i in range(num_nodes):
+            self.add_node(f"anna-{i}")
+
+    # -- membership -----------------------------------------------------------
+    def add_node(self, node_id: str) -> None:
+        assert node_id not in self.nodes
+        self.nodes[node_id] = StorageNode(node_id)
+        for v in range(self.VNODES):
+            bisect.insort(self._ring, (_hash(f"{node_id}#{v}"), node_id))
+        # New owner: existing replicas re-gossip their keys so ownership
+        # converges (merge makes this idempotent / safe).
+        for other in self.nodes.values():
+            if other.node_id == node_id:
+                continue
+            for key, val in list(other.store.items()):
+                if node_id in self._owners(key):
+                    self.nodes[node_id].inbox.append((key, val))
+
+    def remove_node(self, node_id: str) -> None:
+        node = self.nodes.pop(node_id)
+        self._ring = [(h, n) for (h, n) in self._ring if n != node_id]
+        # hand off data to the new owners by merge
+        for key, val in node.store.items():
+            for owner in self._owners(key):
+                self.nodes[owner].inbox.append((key, val))
+
+    def fail_node(self, node_id: str) -> None:
+        self.nodes[node_id].alive = False
+
+    def recover_node(self, node_id: str) -> None:
+        node = self.nodes[node_id]
+        node.alive = True
+        for key, val in self._hints.pop(node_id, []):
+            node.inbox.append((key, val))
+
+    # -- ring routing -----------------------------------------------------------
+    def _owners(self, key: str) -> List[str]:
+        if not self._ring:
+            return []
+        k = self._key_replication.get(key, self.replication)
+        k = min(k, len(self.nodes))
+        h = _hash(key)
+        idx = bisect.bisect_left(self._ring, (h, ""))
+        owners: List[str] = []
+        i = idx
+        while len(owners) < k and len(owners) < len(self.nodes):
+            _, node_id = self._ring[i % len(self._ring)]
+            if node_id not in owners:
+                owners.append(node_id)
+            i += 1
+        return owners
+
+    def set_replication(self, key: str, k: int) -> None:
+        """Selective replication for hot keys (Anna [87])."""
+        self._key_replication[key] = k
+
+    # -- data path --------------------------------------------------------------
+    def put(
+        self,
+        key: str,
+        value: Lattice,
+        clock: Optional[VirtualClock] = None,
+        sync: Optional[bool] = None,
+    ) -> Lattice:
+        """``sync=True`` writes all replicas before acking (client puts
+        block for durability); the default async path acks after the
+        coordinator and gossips the rest (cache flush path)."""
+        owners = self._owners(key)
+        if clock is not None:
+            clock.advance(
+                self.profile.sample(self.profile.kvs_op, value.byte_size())
+            )
+        sync = self.sync_replication if sync is None else sync
+        merged: Optional[Lattice] = None
+        coordinator_seen = False
+        for i, owner in enumerate(owners):
+            node = self.nodes[owner]
+            if not node.alive:
+                self._hints[owner].append((key, value))
+                continue
+            if not coordinator_seen or sync:
+                merged = node.merge_in(key, value)
+                node.puts += 1
+                coordinator_seen = True
+            else:
+                node.inbox.append((key, value))  # async gossip
+        if merged is None:
+            raise RuntimeError(f"no live replica for {key}")
+        # push-based cache invalidation/update (paper §4.2)
+        for cache_id in self._cache_index.get(key, ()):
+            self._cache_pushes[cache_id].append((key, value))
+        return merged
+
+    def get(
+        self,
+        key: str,
+        clock: Optional[VirtualClock] = None,
+        prefer: Optional[str] = None,
+    ) -> Optional[Lattice]:
+        owners = self._owners(key)
+        if not owners:
+            return None
+        # Anna routes to ANY replica: reads may be stale under async
+        # replication — the source of Table 2's anomalies.
+        if prefer is None:
+            order = list(owners)
+            self.rng.shuffle(order)
+        else:
+            order = sorted(owners, key=lambda o: o != prefer)
+        for owner in order:
+            node = self.nodes[owner]
+            if not node.alive:
+                continue
+            node.gets += 1
+            val = node.store.get(key)
+            if clock is not None:
+                size = val.byte_size() if val is not None else 0
+                clock.advance(self.profile.sample(self.profile.kvs_op, size))
+            return val
+        return None
+
+    def get_merged(self, key: str, clock: Optional[VirtualClock] = None) -> Optional[Lattice]:
+        """Read-repair style read: merge across all live replicas."""
+        owners = self._owners(key)
+        result: Optional[Lattice] = None
+        for owner in owners:
+            node = self.nodes[owner]
+            if not node.alive:
+                continue
+            val = node.store.get(key)
+            if val is not None:
+                result = val if result is None else result.merge(val)
+        if clock is not None:
+            size = result.byte_size() if result is not None else 0
+            clock.advance(self.profile.sample(self.profile.kvs_op, size))
+        return result
+
+    def delete(self, key: str) -> None:
+        for node in self.nodes.values():
+            node.store.pop(key, None)
+
+    # -- cache keyset index (paper §4.2) -----------------------------------------
+    def publish_keyset(self, cache_id: str, keys: Set[str]) -> None:
+        # drop stale subscriptions, add new ones
+        for key, caches in list(self._cache_index.items()):
+            if cache_id in caches and key not in keys:
+                caches.discard(cache_id)
+        for key in keys:
+            self._cache_index[key].add(cache_id)
+
+    def drain_cache_pushes(self, cache_id: str) -> List[Tuple[str, Lattice]]:
+        out = self._cache_pushes.pop(cache_id, [])
+        return out
+
+    def caches_holding(self, key: str) -> Set[str]:
+        return set(self._cache_index.get(key, ()))
+
+    # -- gossip / background ------------------------------------------------------
+    def tick(self, defer_prob: float = 0.0) -> int:
+        """Deliver pending replica gossip; returns #messages applied."""
+        return sum(n.drain_inbox(self.rng, defer_prob)
+                   for n in self.nodes.values() if n.alive)
+
+    # -- introspection --------------------------------------------------------------
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        return {
+            nid: {"keys": len(n.store), "puts": n.puts, "gets": n.gets}
+            for nid, n in self.nodes.items()
+        }
+
+    def total_keys(self) -> int:
+        keys: Set[str] = set()
+        for n in self.nodes.values():
+            keys |= set(n.store)
+        return len(keys)

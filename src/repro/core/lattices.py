@@ -1,0 +1,418 @@
+"""Lattice data types and lattice capsules (paper §5.2).
+
+Anna-style coordination-free consistency rests on values being join
+semi-lattices: ``merge`` must be Associative, Commutative and Idempotent
+(ACI), so replicas converge regardless of message batching, ordering or
+repetition.  Cloudburst transparently *encapsulates* opaque program values
+into lattices:
+
+* default mode: ``LWWLattice`` — (timestamp, value); merge keeps the higher
+  timestamp.  Timestamps are Lamport pairs ``(logical_clock, node_id)``.
+* causal mode: ``CausalLattice`` — (vector clock, dependency map, value);
+  merge keeps the dominating version, or the *set* of concurrent siblings.
+
+Tensor-valued payloads (model parameters, KV pages, metric vectors) are the
+storage-layer compute hot-spot: batched merges of those run through the
+Pallas kernels in :mod:`repro.kernels` (see ``repro.state.tensorstore``).
+The classes here are the pure-Python semantics those kernels mirror.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, FrozenSet, Iterable, Mapping, Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Timestamps and vector clocks
+# ---------------------------------------------------------------------------
+
+
+class LamportClock:
+    """Per-node logical clock producing globally ordered LWW timestamps."""
+
+    __slots__ = ("node_id", "_time")
+
+    def __init__(self, node_id: str):
+        self.node_id = node_id
+        self._time = 0
+
+    def tick(self) -> Tuple[int, str]:
+        self._time += 1
+        return (self._time, self.node_id)
+
+    def observe(self, ts: Tuple[int, str]) -> None:
+        """Lamport receive rule: advance past an observed timestamp."""
+        if ts[0] > self._time:
+            self._time = ts[0]
+
+    @property
+    def time(self) -> int:
+        return self._time
+
+
+# Vector clocks are immutable mappings node_id -> counter.  Missing entries
+# are implicitly zero.  They form a lattice under pointwise max.
+class VectorClock:
+    __slots__ = ("_entries", "_hash")
+
+    def __init__(self, entries: Optional[Mapping[str, int]] = None):
+        # Drop zero entries so representations are canonical.
+        self._entries: Dict[str, int] = {
+            k: v for k, v in (entries or {}).items() if v > 0
+        }
+        self._hash: Optional[int] = None
+
+    # -- construction helpers ------------------------------------------------
+    @staticmethod
+    def zero() -> "VectorClock":
+        return VectorClock()
+
+    def advance(self, node_id: str, by: int = 1) -> "VectorClock":
+        e = dict(self._entries)
+        e[node_id] = e.get(node_id, 0) + by
+        return VectorClock(e)
+
+    # -- lattice operations ----------------------------------------------------
+    def merge(self, other: "VectorClock") -> "VectorClock":
+        e = dict(self._entries)
+        for k, v in other._entries.items():
+            if v > e.get(k, 0):
+                e[k] = v
+        return VectorClock(e)
+
+    def dominates(self, other: "VectorClock") -> bool:
+        """True iff self >= other pointwise (i.e. other happened-before-or-eq)."""
+        for k, v in other._entries.items():
+            if self._entries.get(k, 0) < v:
+                return False
+        return True
+
+    def strictly_dominates(self, other: "VectorClock") -> bool:
+        return self.dominates(other) and self._entries != other._entries
+
+    def concurrent_with(self, other: "VectorClock") -> bool:
+        return not self.dominates(other) and not other.dominates(self)
+
+    # -- plumbing -------------------------------------------------------------
+    def entries(self) -> Mapping[str, int]:
+        return dict(self._entries)
+
+    def get(self, node_id: str) -> int:
+        return self._entries.get(node_id, 0)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __eq__(self, other: object) -> bool:
+        return isinstance(other, VectorClock) and self._entries == other._entries
+
+    def __hash__(self) -> int:
+        if self._hash is None:
+            self._hash = hash(frozenset(self._entries.items()))
+        return self._hash
+
+    def __repr__(self) -> str:
+        inner = ",".join(f"{k}:{v}" for k, v in sorted(self._entries.items()))
+        return f"VC({inner})"
+
+
+# ---------------------------------------------------------------------------
+# Lattice base + concrete lattices
+# ---------------------------------------------------------------------------
+
+
+class Lattice:
+    """Join semi-lattice interface.  ``merge`` must be ACI."""
+
+    def merge(self, other: "Lattice") -> "Lattice":  # pragma: no cover
+        raise NotImplementedError
+
+    def reveal(self) -> Any:  # pragma: no cover
+        raise NotImplementedError
+
+    def byte_size(self) -> int:
+        """Approximate wire size; used by the latency models."""
+        return _estimate_size(self.reveal())
+
+
+@dataclasses.dataclass(frozen=True)
+class LWWLattice(Lattice):
+    """Last-writer-wins register: (Lamport timestamp, payload)."""
+
+    timestamp: Tuple[int, str]
+    value: Any
+
+    def merge(self, other: Lattice) -> "LWWLattice":
+        assert isinstance(other, LWWLattice), type(other)
+        # Total order on (clock, node_id) tuples -> deterministic winner.
+        return self if self.timestamp >= other.timestamp else other
+
+    def reveal(self) -> Any:
+        return self.value
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxIntLattice(Lattice):
+    value: int = 0
+
+    def merge(self, other: Lattice) -> "MaxIntLattice":
+        assert isinstance(other, MaxIntLattice)
+        return self if self.value >= other.value else other
+
+    def reveal(self) -> int:
+        return self.value
+
+
+@dataclasses.dataclass(frozen=True)
+class SetLattice(Lattice):
+    """Grow-only set."""
+
+    value: FrozenSet[Any] = frozenset()
+
+    @staticmethod
+    def of(items: Iterable[Any]) -> "SetLattice":
+        return SetLattice(frozenset(items))
+
+    def merge(self, other: Lattice) -> "SetLattice":
+        assert isinstance(other, SetLattice)
+        return SetLattice(self.value | other.value)
+
+    def reveal(self) -> FrozenSet[Any]:
+        return self.value
+
+
+class MapLattice(Lattice):
+    """Map whose values are lattices; merge is pointwise merge."""
+
+    __slots__ = ("_entries",)
+
+    def __init__(self, entries: Optional[Mapping[str, Lattice]] = None):
+        self._entries: Dict[str, Lattice] = dict(entries or {})
+
+    def merge(self, other: Lattice) -> "MapLattice":
+        assert isinstance(other, MapLattice)
+        merged = dict(self._entries)
+        for k, v in other._entries.items():
+            merged[k] = merged[k].merge(v) if k in merged else v
+        return MapLattice(merged)
+
+    def reveal(self) -> Dict[str, Any]:
+        return {k: v.reveal() for k, v in self._entries.items()}
+
+    def get(self, key: str) -> Optional[Lattice]:
+        return self._entries.get(key)
+
+    def items(self):
+        return self._entries.items()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __eq__(self, other: object) -> bool:
+        return isinstance(other, MapLattice) and self._entries == other._entries
+
+
+class GCounter(Lattice):
+    """Grow-only counter: per-node contributions merged by max."""
+
+    __slots__ = ("_counts",)
+
+    def __init__(self, counts: Optional[Mapping[str, int]] = None):
+        self._counts: Dict[str, int] = dict(counts or {})
+
+    def increment(self, node_id: str, by: int = 1) -> "GCounter":
+        c = dict(self._counts)
+        c[node_id] = c.get(node_id, 0) + by
+        return GCounter(c)
+
+    def merge(self, other: Lattice) -> "GCounter":
+        assert isinstance(other, GCounter)
+        c = dict(self._counts)
+        for k, v in other._counts.items():
+            if v > c.get(k, 0):
+                c[k] = v
+        return GCounter(c)
+
+    def reveal(self) -> int:
+        return sum(self._counts.values())
+
+    def __eq__(self, other: object) -> bool:
+        return isinstance(other, GCounter) and self._counts == other._counts
+
+
+# ---------------------------------------------------------------------------
+# Causal lattice
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CausalVersion:
+    """One version of a key: vector clock + dependency map + payload.
+
+    ``dependencies`` maps key -> VectorClock lower bound: the versions this
+    write causally depends on (read before the write, paper §5.3).
+    """
+
+    vector_clock: VectorClock
+    dependencies: Tuple[Tuple[str, VectorClock], ...]
+    value: Any
+
+    def dep_map(self) -> Dict[str, VectorClock]:
+        return dict(self.dependencies)
+
+    @staticmethod
+    def make(vc: VectorClock, deps: Mapping[str, VectorClock], value: Any) -> "CausalVersion":
+        return CausalVersion(vc, tuple(sorted(deps.items())), value)
+
+
+class CausalLattice(Lattice):
+    """Multi-version causal register (Anna causal lattice).
+
+    Merge keeps the version whose vector clock dominates; causally
+    concurrent versions are *both* retained as siblings.  De-encapsulation
+    picks one sibling by a deterministic tie-break but the cache layer keeps
+    all of them for the DSC protocol (paper §5.2).
+    """
+
+    __slots__ = ("_versions",)
+
+    def __init__(self, versions: Iterable[CausalVersion]):
+        self._versions: Tuple[CausalVersion, ...] = _prune(tuple(versions))
+
+    @staticmethod
+    def of(vc: VectorClock, value: Any, deps: Optional[Mapping[str, VectorClock]] = None) -> "CausalLattice":
+        return CausalLattice([CausalVersion.make(vc, deps or {}, value)])
+
+    def merge(self, other: Lattice) -> "CausalLattice":
+        assert isinstance(other, CausalLattice)
+        return CausalLattice(self._versions + other._versions)
+
+    @property
+    def versions(self) -> Tuple[CausalVersion, ...]:
+        return self._versions
+
+    def joined_clock(self) -> VectorClock:
+        vc = VectorClock.zero()
+        for v in self._versions:
+            vc = vc.merge(v.vector_clock)
+        return vc
+
+    def pick(self) -> CausalVersion:
+        """Deterministic tie-break across concurrent siblings (paper §5.2)."""
+        return max(
+            self._versions,
+            key=lambda v: tuple(sorted(v.vector_clock.entries().items())),
+        )
+
+    def reveal(self) -> Any:
+        return self.pick().value
+
+    def dominates_or_concurrent(self, vc: VectorClock) -> bool:
+        """True if reading this lattice cannot violate a dep lower bound vc."""
+        joined = self.joined_clock()
+        return joined.dominates(vc) or joined.concurrent_with(vc)
+
+    def __eq__(self, other: object) -> bool:
+        return (
+            isinstance(other, CausalLattice)
+            and set(self._versions) == set(other._versions)
+        )
+
+    def __repr__(self) -> str:
+        return f"CausalLattice({len(self._versions)} versions)"
+
+
+def _prune(versions: Tuple[CausalVersion, ...]) -> Tuple[CausalVersion, ...]:
+    """Drop dominated versions; keep a canonical ordering of survivors."""
+    survivors = []
+    for v in versions:
+        dominated = False
+        for w in versions:
+            if w is v:
+                continue
+            if w.vector_clock.strictly_dominates(v.vector_clock):
+                dominated = True
+                break
+            # Identical clocks: deterministic de-dup by repr of value id
+            if w.vector_clock == v.vector_clock and w != v:
+                # keep the one with the larger canonical key
+                if _canon(w) > _canon(v):
+                    dominated = True
+                    break
+        if not dominated and v not in survivors:
+            survivors.append(v)
+    return tuple(sorted(survivors, key=_canon))
+
+
+def _canon(v: CausalVersion) -> str:
+    return repr(sorted(v.vector_clock.entries().items())) + repr(v.dependencies)
+
+
+# ---------------------------------------------------------------------------
+# Capsules: wrap opaque program values (paper §5.2)
+# ---------------------------------------------------------------------------
+
+
+LWW_MODE = "lww"
+CAUSAL_MODE = "causal"
+
+
+def encapsulate(
+    value: Any,
+    *,
+    mode: str = LWW_MODE,
+    clock: Optional[LamportClock] = None,
+    vector_clock: Optional[VectorClock] = None,
+    dependencies: Optional[Mapping[str, VectorClock]] = None,
+) -> Lattice:
+    """Wrap a bare program value into the lattice for the consistency mode."""
+    if isinstance(value, Lattice):
+        return value
+    if mode == LWW_MODE:
+        assert clock is not None, "LWW encapsulation needs a LamportClock"
+        return LWWLattice(clock.tick(), value)
+    if mode == CAUSAL_MODE:
+        assert vector_clock is not None, "causal encapsulation needs a VectorClock"
+        return CausalLattice.of(vector_clock, value, dependencies or {})
+    raise ValueError(f"unknown consistency mode {mode!r}")
+
+
+def deencapsulate(lattice: Lattice) -> Any:
+    return lattice.reveal()
+
+
+# ---------------------------------------------------------------------------
+# Size estimation (for the wire-latency models)
+# ---------------------------------------------------------------------------
+
+
+def _estimate_size(obj: Any) -> int:
+    try:
+        import numpy as np
+
+        if isinstance(obj, np.ndarray):
+            return int(obj.nbytes)
+    except Exception:  # pragma: no cover
+        pass
+    if hasattr(obj, "nbytes"):  # jax arrays
+        try:
+            return int(obj.nbytes)
+        except Exception:
+            pass
+    if isinstance(obj, (bytes, bytearray)):
+        return len(obj)
+    if isinstance(obj, str):
+        return len(obj.encode())
+    if isinstance(obj, (int, float, bool)) or obj is None:
+        return 8
+    if isinstance(obj, (list, tuple, set, frozenset)):
+        return 16 + sum(_estimate_size(x) for x in obj)
+    if isinstance(obj, dict):
+        return 16 + sum(_estimate_size(k) + _estimate_size(v) for k, v in obj.items())
+    try:
+        import pickle
+
+        return len(pickle.dumps(obj, protocol=4))
+    except Exception:
+        return 64

@@ -1,0 +1,342 @@
+"""Cluster wiring + DAG execution engine (paper §4) with fault tolerance.
+
+``Cluster`` builds the whole deployment: Anna storage nodes, VMs (one cache
+per VM, several executor processes per VM — the paper uses 3 executor cores
++ 1 cache core per c5.2xlarge), schedulers, and the monitoring engine.
+
+DAG execution is synchronous-in-process with virtual-latency accounting:
+scheduler hop -> trigger source executor -> execute -> trigger downstream
+(shipping session metadata per the consistency protocol) -> sink responds.
+
+Fault tolerance (paper §4.5): if an executor/cache fails mid-DAG, the whole
+DAG is re-executed after a configurable timeout (idempotence is the user's
+concern, exactly as in AWS Lambda).  Beyond-paper: straggler speculation —
+if a function runs beyond a p99-based budget, it is duplicated on a second
+executor and the faster result wins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from .cache import CacheFailure, ExecutorCache
+from .consistency import AnomalyTracker, DagRestart, SessionContext
+from .dag import Dag
+from .executor import CloudburstReference, Executor, ExecutorFailure
+from .kvs import AnnaKVS
+from .lattices import LamportClock, Lattice, LWWLattice, encapsulate
+from .netsim import NetworkProfile, VirtualClock
+from .scheduler import Scheduler, SchedulingPolicy
+
+
+@dataclasses.dataclass
+class DagResult:
+    value: Any
+    latency: float  # virtual seconds, end-to-end
+    schedule: Dict[str, str]
+    retries: int = 0
+    speculated: int = 0
+
+
+class Cluster:
+    def __init__(
+        self,
+        n_vms: int = 3,
+        executors_per_vm: int = 3,
+        n_kvs_nodes: int = 4,
+        replication: int = 2,
+        mode: str = "lww",
+        profile: Optional[NetworkProfile] = None,
+        seed: int = 0,
+        scheduler_policy: Optional[SchedulingPolicy] = None,
+        dag_timeout: float = 5.0,
+        max_retries: int = 3,
+        straggler_speculation: bool = False,
+        tick_jitter: float = 0.0,
+    ):
+        self.profile = profile or NetworkProfile(seed=seed)
+        self.rng = random.Random(seed)
+        self.mode = mode
+        self.dag_timeout = dag_timeout
+        self.max_retries = max_retries
+        self.straggler_speculation = straggler_speculation
+        self.tick_jitter = tick_jitter
+        self.kvs = AnnaKVS(
+            num_nodes=n_kvs_nodes, replication=replication, profile=self.profile
+        )
+        self.caches: Dict[str, ExecutorCache] = {}
+        self.executors: Dict[str, Executor] = {}
+        self._vm_count = 0
+        for _ in range(n_vms):
+            self.add_vm(executors_per_vm)
+        self.scheduler = Scheduler(
+            "sched-0",
+            self.kvs,
+            self.executors,
+            profile=self.profile,
+            policy=scheduler_policy,
+            seed=seed,
+        )
+        self.client_clock = LamportClock("client")
+        self.tracker: Optional[AnomalyTracker] = None
+        self._dag_seq = 0
+        self._fn_latency_stats: Dict[str, List[float]] = {}
+
+    # -- elasticity ---------------------------------------------------------------
+    def add_vm(self, executors_per_vm: int = 3) -> List[str]:
+        vm_id = f"vm-{self._vm_count}"
+        self._vm_count += 1
+        cache = ExecutorCache(f"cache-{vm_id}", self.kvs, profile=self.profile)
+        self.caches[cache.cache_id] = cache
+        ids = []
+        for t in range(executors_per_vm):
+            eid = f"{vm_id}/exec-{t}"
+            ex = Executor(eid, cache, vm_id, profile=self.profile, registry=None)
+            ex.registry = {}  # filled by _refresh_registry
+            self.executors[eid] = ex
+            ids.append(eid)
+        self._refresh_registry()
+        if hasattr(self, "scheduler"):
+            for eid in ids:
+                self.scheduler.add_executor(self.executors[eid])
+        return ids
+
+    def remove_vm(self, vm_id: str) -> None:
+        for eid in [e for e, ex in self.executors.items() if ex.vm_id == vm_id]:
+            self.scheduler.remove_executor(eid)
+            del self.executors[eid]
+        self.caches.pop(f"cache-{vm_id}", None)
+        self._refresh_registry()
+
+    def _refresh_registry(self) -> None:
+        registry = {eid: ex for eid, ex in self.executors.items()}
+        for ex in self.executors.values():
+            ex.registry = registry
+
+    # -- client API (used by client.py) ----------------------------------------------
+    def register(self, fn: Callable, name: str) -> None:
+        self.scheduler.register_function(name, fn)
+
+    def register_dag(
+        self,
+        name: str,
+        functions: Sequence[str],
+        edges: Optional[Sequence[Tuple[str, str]]] = None,
+    ) -> Dag:
+        dag = (
+            Dag.linear(name, functions)
+            if edges is None
+            else Dag(name, list(functions), list(edges))
+        )
+        self.scheduler.register_dag(dag)
+        return dag
+
+    def put(self, key: str, value: Any, clock: Optional[VirtualClock] = None) -> None:
+        lat = value if isinstance(value, Lattice) else LWWLattice(
+            self.client_clock.tick(), value
+        )
+        # client puts block until all replicas ack (read-your-writes for
+        # the issuing client); executor cache flushes stay async
+        self.kvs.put(key, lat, clock=clock, sync=True)
+
+    def get(self, key: str, clock: Optional[VirtualClock] = None) -> Any:
+        lat = self.kvs.get_merged(key, clock=clock)
+        return None if lat is None else lat.reveal()
+
+    # -- single-function call (paper §4.3 "single function execution") ----------------
+    def call(
+        self,
+        fn_name: str,
+        *args: Any,
+        clock: Optional[VirtualClock] = None,
+        mode: Optional[str] = None,
+    ) -> Tuple[Any, float]:
+        clock = clock or VirtualClock()
+        t0 = clock.now
+        clock.advance(self.profile.sample(self.profile.tcp, 128))  # client->sched
+        eid = self.scheduler.pick_executor(fn_name, args)
+        executor = self.executors[eid]
+        if not executor.has_function(fn_name):
+            executor.pin_function(fn_name, self.scheduler.load_function(fn_name))
+        clock.advance(self.profile.sample(self.profile.tcp, 128))  # sched->exec
+        self._dag_seq += 1
+        session = SessionContext(
+            dag_id=f"call-{self._dag_seq}", mode=mode or self.mode
+        )
+        result = executor.invoke(
+            fn_name, args, session, self.caches, clock=clock, tracker=self.tracker
+        )
+        clock.advance(self.profile.sample(self.profile.tcp, 256))  # exec->client
+        return result, clock.now - t0
+
+    # -- DAG call with restart-on-failure (paper §4.5) ---------------------------------
+    def call_dag(
+        self,
+        dag_name: str,
+        args_by_fn: Optional[Dict[str, Sequence]] = None,
+        clock: Optional[VirtualClock] = None,
+        mode: Optional[str] = None,
+        store_in_kvs: Optional[str] = None,
+    ) -> DagResult:
+        dag = self.scheduler.dags[dag_name]
+        args_by_fn = args_by_fn or {}
+        clock = clock or VirtualClock()
+        t0 = clock.now
+        exclude: Set[str] = set()
+        last_err: Optional[Exception] = None
+        for attempt in range(self.max_retries + 1):
+            self._dag_seq += 1
+            session = SessionContext(
+                dag_id=f"{dag_name}-{self._dag_seq}", mode=mode or self.mode
+            )
+            clock.advance(self.profile.sample(self.profile.tcp, 256))  # client->sched
+            schedule = self.scheduler.schedule_dag(dag, args_by_fn, exclude=exclude)
+            try:
+                value, speculated = self._execute(
+                    dag, schedule, args_by_fn, session, clock
+                )
+                if store_in_kvs is not None:
+                    self.put(store_in_kvs, value, clock=clock)
+                clock.advance(self.profile.sample(self.profile.tcp, 256))
+                if self.tracker is not None:
+                    self.tracker.finish_dag(session.dag_id)
+                self._evict_snapshots(session)
+                return DagResult(
+                    value, clock.now - t0, schedule, retries=attempt,
+                    speculated=speculated,
+                )
+            except (DagRestart, ExecutorFailure, CacheFailure) as e:
+                last_err = e
+                # configurable timeout before whole-DAG re-execution (§4.5)
+                clock.advance(self.dag_timeout)
+                exclude |= {
+                    eid
+                    for eid in schedule.values()
+                    if not self.executors[eid].alive
+                }
+        raise RuntimeError(
+            f"DAG {dag_name} failed after {self.max_retries} retries"
+        ) from last_err
+
+    def _execute(
+        self,
+        dag: Dag,
+        schedule: Dict[str, str],
+        args_by_fn: Dict[str, Sequence],
+        session: SessionContext,
+        clock: VirtualClock,
+    ) -> Tuple[Any, int]:
+        results: Dict[str, Any] = {}
+        speculated = 0
+        order = dag.topo_order()
+        for i, fn_name in enumerate(order):
+            upstream = [results[u] for u in dag.upstream(fn_name)]
+            args = tuple(upstream) + tuple(args_by_fn.get(fn_name, ()))
+            # executor->executor trigger carries session metadata (§5.3)
+            meta_bytes = session.metadata_bytes() + 256
+            clock.advance(self.profile.sample(self.profile.tcp, meta_bytes))
+            eid = schedule[fn_name]
+            executor = self.executors[eid]
+            if not executor.has_function(fn_name):
+                # cold executor: pull + deserialize the function from Anna
+                executor.pin_function(fn_name, self.scheduler.load_function(fn_name))
+                clock.advance(self.profile.sample(self.profile.kvs_op, 1024))
+            t_before = clock.now
+            result = executor.invoke(
+                fn_name, args, session, self.caches, clock=clock,
+                tracker=self.tracker,
+            )
+            elapsed = clock.now - t_before
+            budget = self._straggler_budget(fn_name)
+            if (
+                self.straggler_speculation
+                and budget is not None
+                and elapsed > budget
+            ):
+                # speculative re-execution on another executor; faster wins
+                alt = self._pick_alternate(fn_name, eid)
+                if alt is not None:
+                    spec_clock = VirtualClock(t_before)
+                    alt_result = alt.invoke(
+                        fn_name, args, session, self.caches, clock=spec_clock,
+                        tracker=self.tracker,
+                    )
+                    speculated += 1
+                    if spec_clock.now < clock.now:
+                        clock.now = spec_clock.now
+                        result = alt_result
+            self._record_latency(fn_name, elapsed)
+            results[fn_name] = result
+        sinks = dag.sinks()
+        # sink notifies upstream caches of completion -> snapshots evictable
+        return (results[sinks[0]] if len(sinks) == 1 else [results[s] for s in sinks]), speculated
+
+    def _evict_snapshots(self, session: SessionContext) -> None:
+        for cache in self.caches.values():
+            cache.evict_dag(session.dag_id)
+
+    # -- straggler mitigation helpers -----------------------------------------------
+    def _record_latency(self, fn_name: str, seconds: float) -> None:
+        hist = self._fn_latency_stats.setdefault(fn_name, [])
+        hist.append(seconds)
+        if len(hist) > 512:
+            del hist[:256]
+
+    def _straggler_budget(self, fn_name: str) -> Optional[float]:
+        hist = self._fn_latency_stats.get(fn_name)
+        if not hist or len(hist) < 16:
+            return None
+        s = sorted(hist)
+        p99 = s[min(len(s) - 1, int(0.99 * len(s)))]
+        return max(p99 * 2.0, 1e-4)
+
+    def _pick_alternate(self, fn_name: str, exclude: str) -> Optional[Executor]:
+        cands = [
+            self.executors[e]
+            for e in self.scheduler.function_locations.get(fn_name, [])
+            if e != exclude and self.executors[e].alive
+        ]
+        if not cands:
+            cands = [
+                ex
+                for eid, ex in self.executors.items()
+                if eid != exclude and ex.alive
+            ]
+            for ex in cands:
+                if not ex.has_function(fn_name):
+                    ex.pin_function(fn_name, self.scheduler.load_function(fn_name))
+        return self.rng.choice(cands) if cands else None
+
+    # -- background work ("periodically" in the paper) -------------------------------
+    def tick(self, defer_prob: Optional[float] = None) -> None:
+        # replica gossip delivers first: writes flushed in THIS tick reach
+        # the other replicas only on the NEXT tick (async replication lag);
+        # with tick_jitter > 0 individual items defer randomly, modeling
+        # continuous out-of-order background propagation (legal because
+        # merges are ACI) — the staleness skew behind Table 2's anomalies.
+        p = self.tick_jitter if defer_prob is None else defer_prob
+        self.kvs.tick(p)
+        for cache in self.caches.values():
+            cache.tick(defer_prob=p)
+        for cache in self.caches.values():
+            cache.publish_keyset()
+        self.scheduler.refresh_index()
+
+    # -- fault injection -----------------------------------------------------------------
+    def fail_vm(self, vm_id: str) -> None:
+        for ex in self.executors.values():
+            if ex.vm_id == vm_id:
+                ex.alive = False
+        cache = self.caches.get(f"cache-{vm_id}")
+        if cache is not None:
+            cache.fail()
+
+    def recover_vm(self, vm_id: str) -> None:
+        cache = self.caches.get(f"cache-{vm_id}")
+        if cache is not None:
+            cache.recover()
+        for ex in self.executors.values():
+            if ex.vm_id == vm_id:
+                ex.alive = True

@@ -1,0 +1,193 @@
+"""Function schedulers (paper §4.3): mechanisms + locality/load heuristics.
+
+Mechanisms: function registration (stored in Anna + a shared registered-
+function list), DAG registration (verify functions, pick executors to cache
+each function), per-request executor selection, schedule broadcast.
+
+Policy (the paper's default heuristics, pluggable):
+* prefer the executor with the most KVS-reference arguments already cached
+  (via the scheduler-local cached-key index built from published keysets);
+* avoid executors above 70% utilization — backpressure makes hot data/
+  functions replicate onto fresh executors (§4.3 "Scheduling Policy");
+* otherwise pick uniformly at random.
+"""
+
+from __future__ import annotations
+
+import random
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional, Sequence, Set
+
+from .dag import Dag
+from .executor import CloudburstReference, Executor
+from .kvs import AnnaKVS
+from .lattices import LamportClock, LWWLattice, SetLattice
+from .netsim import NetworkProfile, VirtualClock, DEFAULT_PROFILE
+
+OVERLOAD_THRESHOLD = 0.70
+FUNCS_KEY = "__cloudburst_registered_functions"
+
+
+class SchedulingPolicy:
+    """Pluggable policy interface (paper: 'pluggable policies')."""
+
+    def pick(
+        self,
+        scheduler: "Scheduler",
+        fn_name: str,
+        args: Sequence,
+        candidates: List[str],
+    ) -> str:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class LocalityPolicy(SchedulingPolicy):
+    """The paper's default: data locality first, then load, then random."""
+
+    def pick(self, scheduler, fn_name, args, candidates):
+        ref_keys = [a.key for a in args if isinstance(a, CloudburstReference)]
+        not_overloaded = [
+            e for e in candidates if scheduler.utilization.get(e, 0.0) <= OVERLOAD_THRESHOLD
+        ] or candidates
+        if ref_keys:
+            best, best_score = None, -1
+            for e in not_overloaded:
+                cached = scheduler.executor_keysets.get(e, set())
+                score = sum(1 for k in ref_keys if k in cached)
+                if score > best_score:
+                    best, best_score = e, score
+            if best is not None and best_score > 0:
+                return best
+        return scheduler.rng.choice(not_overloaded)
+
+
+class RandomPolicy(SchedulingPolicy):
+    def pick(self, scheduler, fn_name, args, candidates):
+        return scheduler.rng.choice(candidates)
+
+
+class Scheduler:
+    def __init__(
+        self,
+        scheduler_id: str,
+        kvs: AnnaKVS,
+        executors: Dict[str, Executor],
+        profile: NetworkProfile = DEFAULT_PROFILE,
+        policy: Optional[SchedulingPolicy] = None,
+        seed: int = 0,
+        pin_replicas: int = 2,
+    ):
+        self.scheduler_id = scheduler_id
+        self.kvs = kvs
+        self.executors = executors
+        self.profile = profile
+        self.policy = policy or LocalityPolicy()
+        self.rng = random.Random(seed)
+        self.pin_replicas = pin_replicas
+        self.lamport = LamportClock(scheduler_id)
+        # scheduler-local indexes (paper: each scheduler constructs a local
+        # index tracking the keys stored by each cache)
+        self.executor_keysets: Dict[str, Set[str]] = defaultdict(set)
+        self.utilization: Dict[str, float] = {}
+        self.function_locations: Dict[str, List[str]] = defaultdict(list)
+        self.dags: Dict[str, Dag] = {}
+        self.call_counts: Dict[str, int] = defaultdict(int)
+
+    # -- registration mechanisms ---------------------------------------------------
+    def register_function(self, name: str, fn: Callable) -> None:
+        """Store the function in Anna + update the registered-function set."""
+        self.kvs.put(f"__func_{name}", LWWLattice(self.lamport.tick(), fn))
+        cur = self.kvs.get_merged(FUNCS_KEY) or SetLattice()
+        self.kvs.put(FUNCS_KEY, cur.merge(SetLattice.of([name])))
+
+    def registered_functions(self) -> Set[str]:
+        lat = self.kvs.get_merged(FUNCS_KEY)
+        return set(lat.reveal()) if lat is not None else set()
+
+    def load_function(self, name: str) -> Callable:
+        lat = self.kvs.get_merged(f"__func_{name}")
+        if lat is None:
+            raise KeyError(f"function {name!r} not registered")
+        return lat.reveal()
+
+    def register_dag(self, dag: Dag) -> None:
+        registered = self.registered_functions()
+        missing = [f for f in dag.functions if f not in registered]
+        if missing:
+            raise KeyError(f"DAG {dag.name}: unregistered functions {missing}")
+        # pick executors to cache each function (deserialize-and-pin, §4.1)
+        for fn_name in dag.functions:
+            fn = self.load_function(fn_name)
+            replicas = min(self.pin_replicas, len(self.executors))
+            alive = [e for e in self.executors.values() if e.alive]
+            for executor in self.rng.sample(alive, min(replicas, len(alive))):
+                executor.pin_function(fn_name, fn)
+                self.function_locations[fn_name].append(executor.executor_id)
+        # DAG topologies are the scheduler's only persistent metadata (§4.3)
+        self.kvs.put(f"__dag_{dag.name}", LWWLattice(self.lamport.tick(), dag))
+        self.dags[dag.name] = dag
+
+    # -- index maintenance -------------------------------------------------------------
+    def refresh_index(self, window_seconds: float = 1.0) -> None:
+        """Pull cached keysets + executor metrics (published via the KVS)."""
+        for eid, ex in self.executors.items():
+            self.executor_keysets[eid] = set(ex.cache.keyset)
+            self.utilization[eid] = ex.utilization(window_seconds)
+
+    # -- per-request scheduling -----------------------------------------------------------
+    def pick_executor(
+        self,
+        fn_name: str,
+        args: Sequence,
+        exclude: Optional[Set[str]] = None,
+    ) -> str:
+        exclude = exclude or set()
+        candidates = [
+            e
+            for e in self.function_locations.get(fn_name, [])
+            if e not in exclude and self.executors[e].alive
+        ]
+        if not candidates:
+            # cold function: any live executor can pull + deserialize it
+            candidates = [
+                e for e, ex in self.executors.items() if ex.alive and e not in exclude
+            ]
+        if not candidates:
+            raise RuntimeError("no live executors")
+        self.call_counts[fn_name] += 1
+        return self.policy.pick(self, fn_name, args, candidates)
+
+    def schedule_dag(
+        self,
+        dag: Dag,
+        args_by_fn: Dict[str, Sequence],
+        exclude: Optional[Set[str]] = None,
+    ) -> Dict[str, str]:
+        """Create the schedule broadcast to all participating executors."""
+        schedule: Dict[str, str] = {}
+        for fn_name in dag.topo_order():
+            schedule[fn_name] = self.pick_executor(
+                fn_name, args_by_fn.get(fn_name, ()), exclude=exclude
+            )
+        return schedule
+
+    # -- autoscaler hooks ---------------------------------------------------------------
+    def add_executor(self, executor: Executor) -> None:
+        self.executors[executor.executor_id] = executor
+
+    def remove_executor(self, executor_id: str) -> None:
+        self.executors.pop(executor_id, None)
+        for locs in self.function_locations.values():
+            if executor_id in locs:
+                locs.remove(executor_id)
+
+    def pin_function_replica(self, fn_name: str, executor_id: str) -> None:
+        fn = self.load_function(fn_name)
+        self.executors[executor_id].pin_function(fn_name, fn)
+        if executor_id not in self.function_locations[fn_name]:
+            self.function_locations[fn_name].append(executor_id)
+
+    def unpin_function_replica(self, fn_name: str, executor_id: str) -> None:
+        self.executors[executor_id].unpin_function(fn_name)
+        if executor_id in self.function_locations[fn_name]:
+            self.function_locations[fn_name].remove(executor_id)

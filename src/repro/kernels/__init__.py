@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the compute hot-spots, with pure-jnp oracles.
+
+Storage layer (paper-core): ``lww_merge`` / ``lww_merge_many`` (Anna LWW
+lattice merges), ``vc_join_classify`` / ``causal_merge`` (vector clocks).
+
+Compute tier (assigned architectures): ``flash_attention`` (prefill, causal
++ GQA + sliding window), ``decode_attention`` (one token vs. big KV cache),
+``rglru_scan`` (RG-LRU log-depth linear recurrence), ``ssd_scan`` (Mamba-2
+chunked state-space duality).
+
+Always call through :mod:`repro.kernels.ops` — it handles interpret-mode
+dispatch on CPU and falls back to :mod:`repro.kernels.ref` oracles for
+unsupported tilings.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

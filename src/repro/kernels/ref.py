@@ -1,0 +1,154 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ``*_ref`` mirrors the corresponding kernel's semantics with the most
+direct (naive) jnp implementation: O(T^2) materialized attention, per-step
+``lax.scan`` recurrences, per-key Python-free merges.  The kernel tests in
+``tests/test_kernels.py`` sweep shapes/dtypes and assert_allclose against
+these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# lattice merges
+# ---------------------------------------------------------------------------
+
+
+def lww_merge_ref(clock_a, node_a, val_a, clock_b, node_b, val_b):
+    pred = (clock_a > clock_b) | ((clock_a == clock_b) & (node_a >= node_b))
+    val = jnp.where(pred, val_a, val_b)
+    clock = jnp.where(pred, clock_a, clock_b)
+    node = jnp.where(pred, node_a, node_b)
+    return val, clock, node
+
+
+def lww_merge_many_ref(clocks, nodes, vals):
+    """clocks/nodes (R,K,1), vals (R,K,D): sequential pairwise reduce."""
+    val, clock, node = vals[0], clocks[0], nodes[0]
+    for r in range(1, vals.shape[0]):
+        pred = (clock > clocks[r]) | ((clock == clocks[r]) & (node >= nodes[r]))
+        val = jnp.where(pred, val, vals[r])
+        clock = jnp.where(pred, clock, clocks[r])
+        node = jnp.where(pred, node, nodes[r])
+    return val, clock, node
+
+
+def vc_join_classify_ref(a, b):
+    join = jnp.maximum(a, b)
+    adom = jnp.all(a >= b, axis=1, keepdims=True)
+    bdom = jnp.all(b >= a, axis=1, keepdims=True)
+    return join, adom, bdom
+
+
+def causal_merge_ref(vc_a, val_a, vc_b, val_b):
+    a_dom = jnp.all(vc_a >= vc_b, axis=1, keepdims=True)
+    b_dom = jnp.all(vc_b >= vc_a, axis=1, keepdims=True)
+    suma = jnp.sum(vc_a, axis=1, keepdims=True)
+    sumb = jnp.sum(vc_b, axis=1, keepdims=True)
+    neq = vc_a != vc_b
+    first = jnp.argmax(neq, axis=1)[:, None]
+    a_first = jnp.take_along_axis(vc_a, first, axis=1)
+    b_first = jnp.take_along_axis(vc_b, first, axis=1)
+    tie_a = jnp.where(suma != sumb, suma > sumb, a_first > b_first)
+    pick_a = a_dom | (~b_dom & tie_a)
+    return jnp.maximum(vc_a, vc_b), jnp.where(pick_a, val_a, val_b)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, q_start=0):
+    """q (B,Hq,T,Dh), k/v (B,Hkv,S,Dh) -> (B,Hq,T,Dh). Materialized softmax."""
+    B, Hq, T, Dh = q.shape
+    _, Hkv, S, _ = k.shape
+    group = Hq // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhtd,bhsd->bhts", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / (Dh ** 0.5)
+    rows = q_start + jnp.arange(T)[:, None]
+    cols = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None], p, 0.0)
+    return jnp.einsum("bhts,bhsd->bhtd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q (B,Hq,Dh), caches (B,Hkv,S,Dh), lengths (B,) -> (B,Hq,Dh)."""
+    B, Hq, Dh = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    group = Hq // Hkv
+    k = jnp.repeat(k_cache, group, axis=1)
+    v = jnp.repeat(v_cache, group, axis=1)
+    s = jnp.einsum(
+        "bhd,bhsd->bhs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / (Dh ** 0.5)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]  # (B, S)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, :], p, 0.0)
+    return jnp.einsum("bhs,bhsd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# recurrences
+# ---------------------------------------------------------------------------
+
+
+def rglru_scan_ref(a, u, h0):
+    """h_t = a_t h_{t-1} + u_t via lax.scan.  a,u (B,T,D); h0 (B,D)."""
+
+    def step(h, au):
+        a_t, u_t = au
+        h = a_t * h + u_t
+        return h, h
+
+    a32 = a.astype(jnp.float32).swapaxes(0, 1)  # (T,B,D)
+    u32 = u.astype(jnp.float32).swapaxes(0, 1)
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), (a32, u32))
+    return ys.swapaxes(0, 1).astype(a.dtype), hT.astype(a.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, h0):
+    """Naive per-step SSD recurrence.
+
+    x (B,T,H,P); dt (B,T,H); A (H,); Bm/Cm (B,T,G,N); h0 (B,H,N,P).
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T ;  y_t = C_t h_t.
+    """
+    B, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hg = H // G
+    Bh = jnp.repeat(Bm, hg, axis=2)  # (B,T,H,N)
+    Ch = jnp.repeat(Cm, hg, axis=2)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dt_t * A[None, :])[..., None, None]  # (B,H,1,1)
+        outer = b_t[..., :, None] * x_t[..., None, :]  # (B,H,N,P)
+        h = decay * h + dt_t[..., None, None] * outer
+        y = jnp.einsum("bhn,bhnp->bhp", c_t, h)
+        return h, y
+
+    xs = (
+        x.astype(jnp.float32).swapaxes(0, 1),
+        dt.astype(jnp.float32).swapaxes(0, 1),
+        Bh.astype(jnp.float32).swapaxes(0, 1),
+        Ch.astype(jnp.float32).swapaxes(0, 1),
+    )
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), hT.astype(x.dtype)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: RG-LRU / diagonal linear recurrence scan.
+
+Computes  h_t = a_t * h_{t-1} + u_t  over the time axis, with an initial
+state and a final-state output (RecurrentGemma's RG-LRU reduces to this
+after its gates are applied; so does any diagonal SSM).
+
+GPU implementations do a warp-parallel sequential scan; the TPU-native
+rethink is a **Hillis–Steele log-depth scan inside the time block**: the
+recurrence composes as (A1,U1)∘(A2,U2) = (A1·A2, A2·U1 + U2), so log2(L)
+shift+fma passes over a (L, BD) VMEM tile compute all prefix states, all on
+8x128 VPU lanes, no serial loop.  Chunks are chained through a VMEM scratch
+carry along a sequential grid axis.
+
+Layout: a, u (B, T, D); h0 (B, D) -> y (B, T, D), hT (B, D).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 256
+DEFAULT_BD = 256
+
+
+def _scan_block(A, U):
+    """Hillis–Steele inclusive scan of the linear recurrence on (L, BD)."""
+    L = A.shape[0]
+    step = 1
+    while step < L:
+        A_sh = jnp.concatenate([jnp.ones_like(A[:step]), A[:-step]], axis=0)
+        U_sh = jnp.concatenate([jnp.zeros_like(U[:step]), U[:-step]], axis=0)
+        U = U + A * U_sh
+        A = A * A_sh
+        step *= 2
+    return A, U  # A[t] = prod a_{<=t};  U[t] = h_t given h_{-1} = 0
+
+
+def _rglru_kernel(a_ref, u_ref, h0_ref, y_ref, hT_ref, carry):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        carry[...] = h0_ref[...].astype(jnp.float32)
+
+    A = a_ref[0].astype(jnp.float32)  # (L, BD)
+    U = u_ref[0].astype(jnp.float32)
+    A_cum, H = _scan_block(A, U)
+    h_in = carry[...]  # (1, BD)
+    y = H + A_cum * h_in
+    y_ref[0] = y.astype(y_ref.dtype)
+    carry[...] = y[-1:, :]
+
+    @pl.when(c == pl.num_programs(2) - 1)
+    def _final():
+        hT_ref[...] = carry[...].astype(hT_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "block_d", "interpret")
+)
+def rglru_scan(
+    a, u, h0, *,
+    chunk: int = DEFAULT_CHUNK,
+    block_d: int = DEFAULT_BD,
+    interpret: bool = True,
+):
+    """Linear recurrence scan.  a, u: (B, T, D); h0: (B, D)."""
+    B, T, D = a.shape
+    L = min(chunk, T)
+    bd = min(block_d, D)
+    assert T % L == 0 and D % bd == 0, (T, L, D, bd)
+    grid = (B, D // bd, T // L)  # time axis last => sequential carry
+    seq_spec = pl.BlockSpec((1, L, bd), lambda b, d, c: (b, c, d))
+    state_spec = pl.BlockSpec((1, bd), lambda b, d, c: (b, d))
+    y, hT = pl.pallas_call(
+        _rglru_kernel,
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, state_spec],
+        out_specs=[seq_spec, state_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, D), a.dtype),
+            jax.ShapeDtypeStruct((B, D), a.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+        interpret=interpret,
+    )(a, u, h0)
+    return y, hT

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: batched vector-clock join + dominance classification.
+
+The causal-consistency path (paper §5.2-5.3) compares and joins vector
+clocks on every cached read, merge, and causal-cut check.  Dense VC batches
+are (K, N): K keys, N clock entries (node slots).  One kernel pass emits:
+
+* ``join``       (K, N): pointwise max (the VC lattice join);
+* ``a_dom_b``    (K, 1): all(a >= b)  — version a dominates b;
+* ``b_dom_a``    (K, 1): all(b >= a);
+
+``concurrent = ~a_dom_b & ~b_dom_a`` falls out in the wrapper.  On TPU the
+row reductions ride the VPU cross-lane units while the join streams; doing
+all three in one pass halves HBM traffic vs. separate jnp ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BK = 8
+
+
+def _vc_kernel(a_ref, b_ref, join_ref, adom_ref, bdom_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    join_ref[...] = jnp.maximum(a, b)
+    adom_ref[...] = jnp.all(a >= b, axis=1, keepdims=True).astype(jnp.int32)
+    bdom_ref[...] = jnp.all(b >= a, axis=1, keepdims=True).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def vc_join_classify(a, b, *, interpret=True):
+    """a, b: (K, N) int32 vector clocks. Returns (join, a_dom_b, b_dom_a)."""
+    K, N = a.shape
+    bk = min(BK, K)
+    assert K % bk == 0, (K, bk)
+    grid = (K // bk,)
+    vc_spec = pl.BlockSpec((bk, N), lambda i: (i, 0))
+    flag_spec = pl.BlockSpec((bk, 1), lambda i: (i, 0))
+    join, adom, bdom = pl.pallas_call(
+        _vc_kernel,
+        grid=grid,
+        in_specs=[vc_spec, vc_spec],
+        out_specs=[vc_spec, flag_spec, flag_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, N), a.dtype),
+            jax.ShapeDtypeStruct((K, 1), jnp.int32),
+            jax.ShapeDtypeStruct((K, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, b)
+    return join, adom.astype(bool), bdom.astype(bool)
+
+
+def _causal_merge_kernel(a_ref, va_ref, b_ref, vb_ref, vc_o_ref, val_o_ref):
+    """Keep the dominating version; on concurrency keep the canonical max.
+
+    This is the *siblings-collapsed* fast path used for dense tensor state,
+    mirroring ``CausalLattice.pick`` (deterministic tie-break): concurrent
+    versions resolve to the one with the lexicographically larger clock,
+    while the emitted clock is the join — so replicas still converge.
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    a_dom = jnp.all(a >= b, axis=1, keepdims=True)
+    b_dom = jnp.all(b >= a, axis=1, keepdims=True)
+    # lexicographic tie-break on clock rows for concurrent versions:
+    # compare summed clocks, then first-difference sign.
+    suma = jnp.sum(a, axis=1, keepdims=True)
+    sumb = jnp.sum(b, axis=1, keepdims=True)
+    neq = a != b
+    first = jnp.argmax(neq, axis=1)[:, None]
+    a_first = jnp.take_along_axis(a, first, axis=1)
+    b_first = jnp.take_along_axis(b, first, axis=1)
+    tie_a = jnp.where(
+        suma != sumb, suma > sumb, a_first > b_first
+    )
+    pick_a = a_dom | (~b_dom & tie_a)
+    vc_o_ref[...] = jnp.maximum(a, b)
+    val_o_ref[...] = jnp.where(pick_a, va_ref[...], vb_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def causal_merge(vc_a, val_a, vc_b, val_b, *, interpret=True):
+    """Dense causal merge: vc_* (K, N) int32, val_* (K, D)."""
+    K, N = vc_a.shape
+    D = val_a.shape[1]
+    bk = min(BK, K)
+    assert K % bk == 0
+    grid = (K // bk,)
+    vc_spec = pl.BlockSpec((bk, N), lambda i: (i, 0))
+    val_spec = pl.BlockSpec((bk, D), lambda i: (i, 0))
+    return pl.pallas_call(
+        _causal_merge_kernel,
+        grid=grid,
+        in_specs=[vc_spec, val_spec, vc_spec, val_spec],
+        out_specs=[vc_spec, val_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, N), vc_a.dtype),
+            jax.ShapeDtypeStruct((K, D), val_a.dtype),
+        ],
+        interpret=interpret,
+    )(vc_a, val_a, vc_b, val_b)

@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the step function (train_step / prefill /
+decode_step), the in/out shardings from the arch's MeshPlan, lowers against
+ShapeDtypeStruct inputs (zero allocation), compiles for the production mesh
+(single-pod 16x16 = 256 chips, multi-pod 2x16x16 = 512 chips), and records:
+
+  * ``compiled.memory_analysis()``   — per-chip bytes (proves it fits);
+  * flops / HBM bytes / collective wire bytes for §Roofline;
+  * the collective schedule parsed from the partitioned HLO.
+
+Measurement methodology (XLA cost quirks, validated by probes):
+``cost_analysis()`` counts a while-loop body ONCE, not per trip — so the
+production compile (scan-over-layers) undercounts flops/bytes/collectives
+by ~n_layers.  The dry-run therefore adds two *auxiliary* compiles at
+reduced depth with every scan unrolled (see ``models.layers.scan_layers``)
+and linearly extrapolates:  total(L) = rest + L * per_layer.  Pallas kernel
+*forward* bodies are invisible to the XLA cost model even unrolled (the
+grid is an internal loop), so their closed-form flops/bytes are added from
+``roofline.analysis.pallas_fwd_corrections``; kernel backwards are pure-jnp
+scans and are measured.
+
+Results merge into ``experiments/dryrun_results.json`` incrementally.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ARCH_IDS, Model, SHAPES, get_config
+from repro.models.layers import set_scan_unroll
+from repro.launch.mesh import make_production_mesh, mesh_info
+from repro.launch import sharding as shlib
+from repro.pshard import sharding_ctx
+from repro.roofline.analysis import (
+    Roofline,
+    analytic_hbm_bytes,
+    model_flops_for,
+    pallas_fwd_corrections,
+    parse_collectives,
+)
+from repro.train import AdamWConfig, init_state, make_train_step
+
+RESULTS_PATH = Path(__file__).resolve().parents[3] / "experiments" / "dryrun_results.json"
+
+
+def _activation_estimate(cfg, cell, plan, chips: int) -> int:
+    """Analytic per-chip activation/workspace bytes (TPU scheduling model).
+
+    Train: per-layer remat checkpoints (3 residual-stream copies of the
+    (B_loc, T, D) hidden state in bf16) + the dominant streaming buffers
+    (CE chunk logits fp32 x4, flash-backward block workspace, fp32 grad of
+    the largest param shard x2).  Prefill: one layer's activations + the
+    emitted KV cache (in outputs).  Decode: token-sized buffers only.
+    """
+    dp_total = max(1, (chips // 256) * plan.dp * (plan.ep if plan.batch_over_ep else 1))
+    b_loc = max(1, cell.global_batch // dp_total)
+    T = cell.seq_len
+    D = cfg.d_model
+    if cell.kind == "train":
+        layers = cfg.n_layers + cfg.enc_layers
+        remat_ckpt = layers * 3 * b_loc * T * D * 2
+        ce_chunk = 4 * b_loc * 256 * max(cfg.vocab // max(plan.tp, 1), 1) * 4
+        flash_ws = 4 * b_loc * T * 128 * 4
+        embed_grad = 2 * (cfg.vocab // max(plan.tp, 1)) * max(D // plan.dp, 1) * 4
+        return int(remat_ckpt + ce_chunk + flash_ws + embed_grad)
+    if cell.kind == "prefill":
+        per_layer = 6 * b_loc * T * D * 2
+        return int(per_layer + b_loc * T * D * 2 * 4)
+    return int(8 * b_loc * D * 2 * 16)
+
+
+def _compile_cell(cfg, cell, plan, multi_pod: bool, unroll: bool):
+    """Lower + compile one configuration; returns (compiled, chips, mesh)."""
+    model = Model(cfg)
+    prod_mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = plan.derived(prod_mesh)
+    rules = shlib.logical_rules(plan, mesh)
+    set_scan_unroll(unroll)
+    try:
+        with sharding_ctx(rules):
+            params_abs = model.abstract_params()
+            p_shard = shlib.param_shardings(rules, params_abs)
+            if cell.kind == "train":
+                opt_cfg = AdamWConfig(state_dtype=plan.opt_state_dtype)
+                opt_abs = jax.eval_shape(lambda p: init_state(opt_cfg, p),
+                                         params_abs)
+                o_shard = {
+                    "m": shlib.zero1_shardings(rules, params_abs, plan),
+                    "v": shlib.zero1_shardings(rules, params_abs, plan),
+                    "step": shlib.replicated(rules, jnp.zeros((), jnp.int32)),
+                }
+                batch_abs = model.input_specs(cell)
+                b_shard = shlib.batch_shardings(rules, batch_abs)
+                step = make_train_step(
+                    model, opt_cfg, remat=plan.remat,
+                    microbatches=plan.microbatches,
+                    grad_shardings=o_shard["m"])
+                metrics_abs = jax.eval_shape(step, params_abs, opt_abs,
+                                             batch_abs)[2]
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(p_shard, o_shard, b_shard),
+                    out_shardings=(p_shard, o_shard,
+                                   shlib.replicated(rules, metrics_abs)),
+                    donate_argnums=(0, 1),
+                )
+                lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+            elif cell.kind == "prefill":
+                batch_abs = model.input_specs(cell)
+                b_shard = shlib.batch_shardings(rules, batch_abs)
+                jitted = jax.jit(lambda p, b: model.prefill(p, b),
+                                 in_shardings=(p_shard, b_shard))
+                lowered = jitted.lower(params_abs, batch_abs)
+            else:  # decode
+                specs = model.input_specs(cell)
+                tokens_abs, cache_abs = specs["tokens"], specs["cache"]
+                t_shard = shlib.batch_shardings(
+                    rules, {"tokens": tokens_abs})["tokens"]
+                c_shard = shlib.cache_shardings(rules, cache_abs)
+                jitted = jax.jit(lambda p, t, c: model.decode_step(p, t, c),
+                                 in_shardings=(p_shard, t_shard, c_shard),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(params_abs, tokens_abs, cache_abs)
+            compiled = lowered.compile()
+    finally:
+        set_scan_unroll(False)
+    return compiled, int(prod_mesh.devices.size), mesh
+
+
+def _depth_variants(cfg):
+    """Two reduced depths for the unrolled measurement compiles."""
+    if cfg.family == "hybrid":
+        pat = len(cfg.hybrid.pattern)
+        return pat, 2 * pat
+    return 2, 4
+
+
+def _with_depth(cfg, d: int):
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, n_layers=d, enc_layers=d)
+    return dataclasses.replace(cfg, n_layers=d)
+
+
+def _wire_and_cost(compiled):
+    cost = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    wire = sum(c.wire_bytes for c in colls)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), wire, colls)
+
+
+def measure_cell(cfg, cell, plan, multi_pod: bool):
+    """Production compile + two unrolled reduced-depth measurement passes."""
+    t0 = time.time()
+    compiled, chips, mesh = _compile_cell(cfg, cell, plan, multi_pod,
+                                          unroll=False)
+    t_main = time.time() - t0
+    mem = compiled.memory_analysis()
+    _, _, _, colls_main = _wire_and_cost(compiled)
+
+    d1, d2 = _depth_variants(cfg)
+    t0 = time.time()
+    c1, _, _ = _compile_cell(_with_depth(cfg, d1), cell, plan, multi_pod,
+                             unroll=True)
+    f1, b1, w1, _ = _wire_and_cost(c1)
+    c2, _, _ = _compile_cell(_with_depth(cfg, d2), cell, plan, multi_pod,
+                             unroll=True)
+    f2, b2, w2, _ = _wire_and_cost(c2)
+    t_aux = time.time() - t0
+
+    L_eff = cfg.n_layers  # encdec scales enc+dec together (equal depths)
+    per_layer = [(x2 - x1) / (d2 - d1) for x1, x2 in ((f1, f2), (b1, b2), (w1, w2))]
+    rest = [x1 - d1 * pl for x1, pl in zip((f1, b1, w1), per_layer)]
+    flops, hbm, wire = (r + L_eff * pl for r, pl in zip(rest, per_layer))
+
+    corr = pallas_fwd_corrections(cfg, cell, plan.remat)
+    flops += corr["flops"] / chips
+    # memory term: first-principles traffic model (the measured
+    # bytes-accessed is kept as an upper bound in the record)
+    hbm_model = analytic_hbm_bytes(cfg, cell, plan, chips) \
+        + corr["hbm_bytes"] / chips
+
+    return {
+        "compiled": compiled, "chips": chips, "mesh": mesh, "mem": mem,
+        "colls": colls_main,
+        "flops_per_chip": max(flops, 0.0),
+        "hbm_per_chip": max(hbm_model, 0.0),
+        "hbm_upper_bound_per_chip": max(hbm, 0.0),
+        "wire_per_chip": max(wire, 0.0),
+        "t_main": t_main, "t_aux": t_aux,
+        "extrapolation": {"d1": d1, "d2": d2, "f1": f1, "f2": f2,
+                          "kernel_corr_flops": corr["flops"] / chips,
+                          "kernel_corr_bytes": corr["hbm_bytes"] / chips},
+    }
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               plan=None, verbose: bool = True):
+    cfg = get_config(arch)
+    model = Model(cfg)
+    cell = SHAPES[shape_name]
+    ok, why = model.runnable(cell)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    plan = plan or shlib.plan_for(arch, shape_name)
+    m = measure_cell(cfg, cell, plan, multi_pod)
+    mem = m["mem"]
+    chips = m["chips"]
+    roof = Roofline(
+        arch=arch, shape=shape_name,
+        mesh="multi" if multi_pod else "single", chips=chips,
+        flops_per_chip=m["flops_per_chip"],
+        hbm_bytes_per_chip=m["hbm_per_chip"],
+        wire_bytes_per_chip=m["wire_per_chip"],
+        model_flops=model_flops_for(cfg, cell),
+        collective_counts={},
+    )
+    counts = {}
+    for c in m["colls"]:
+        counts[c.kind] = counts.get(c.kind, 0) + 1
+    roof.collective_counts.update(counts)
+
+    per_dev_bytes = {
+        "arguments": int(mem.argument_size_in_bytes),
+        "outputs": int(mem.output_size_in_bytes),
+        "temps": int(mem.temp_size_in_bytes),
+        "aliased": int(mem.alias_size_in_bytes),
+    }
+    peak = (per_dev_bytes["arguments"] + per_dev_bytes["outputs"]
+            + per_dev_bytes["temps"] - per_dev_bytes["aliased"])
+    structural = per_dev_bytes["arguments"] + _activation_estimate(
+        cfg, cell, plan, chips)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "chips": chips,
+        "mesh_axes": mesh_info(m["mesh"]),
+        "plan": {"dp": plan.dp, "ep": plan.ep, "tp": plan.tp,
+                 "fsdp": plan.fsdp, "zero1": plan.zero1,
+                 "batch_over_ep": plan.batch_over_ep,
+                 "seq_shard": plan.seq_shard,
+                 "remat": plan.remat, "microbatches": plan.microbatches,
+                 "opt_state_dtype": plan.opt_state_dtype},
+        "per_device_bytes": per_dev_bytes,
+        "per_device_peak_bytes": int(peak),
+        "per_device_structural_bytes": int(structural),
+        "fits_v5e_16gb": bool(structural < 16e9),
+        "roofline": roof.summary(),
+        "hbm_bytes_accessed_upper_bound": m["hbm_upper_bound_per_chip"],
+        "extrapolation": m["extrapolation"],
+        "collectives_top": [c.describe() for c in
+                            sorted(m["colls"], key=lambda c: -c.wire_bytes)[:10]],
+        "n_collectives": len(m["colls"]),
+        "compile_s": round(m["t_main"], 1),
+        "aux_compile_s": round(m["t_aux"], 1),
+    }
+    if verbose:
+        print(f"[{result['mesh']:6s}] {arch:24s} {shape_name:12s} "
+              f"args={per_dev_bytes['arguments']/1e9:5.2f}GB "
+              f"struct={structural/1e9:5.2f}GB/chip "
+              f"t_c={roof.t_compute*1e3:8.1f}ms t_m={roof.t_memory*1e3:8.1f}ms "
+              f"t_x={roof.t_collective*1e3:8.1f}ms -> {roof.bottleneck:10s} "
+              f"useful={roof.useful_flops_ratio:5.2f} "
+              f"rl={roof.roofline_fraction:5.3f} "
+              f"({m['t_main']:.0f}s+{m['t_aux']:.0f}s)", flush=True)
+        print("  memory_analysis:", mem, flush=True)
+    return result
+
+
+def merge_results(new_results):
+    RESULTS_PATH.parent.mkdir(parents=True, exist_ok=True)
+    existing = {}
+    if RESULTS_PATH.exists():
+        existing = {tuple(r["key"]): r for r in json.loads(RESULTS_PATH.read_text())}
+    for r in new_results:
+        r["key"] = [r["arch"], r["shape"], r["mesh"]]
+        existing[tuple(r["key"])] = r
+    RESULTS_PATH.write_text(json.dumps(list(existing.values()), indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                try:
+                    r = lower_cell(arch, shape, multi)
+                except Exception as e:  # a failure here is a bug in our system
+                    traceback.print_exc()
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "multi" if multi else "single",
+                         "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures.append(r)
+                if r.get("status") == "skipped":
+                    print(f"[{r['mesh']:6s}] {arch:24s} {shape:12s} "
+                          f"SKIP ({r['reason']})", flush=True)
+                results.append(r)
+                merge_results([r])
+    print(f"\n{len(results)} cells, {len(failures)} failures "
+          f"-> {RESULTS_PATH}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Production meshes (multi-pod dry-run spec) + per-arch derived views.
+
+``make_production_mesh`` is the canonical deployment topology:
+single pod = (16, 16) ("data", "model") = 256 chips (one TPU v5e pod);
+multi-pod = (2, 16, 16) ("pod", "data", "model") = 512 chips.
+
+Architectures do not all want the same (data, model) split — head counts,
+expert counts and state widths impose divisibility — so sharding plans run
+on a *derived view*: the same device array reshaped to
+("pod", "data", "expert", "model") with data*expert*model = 256.  The
+derived mesh is a pure relabeling; the physical topology (and therefore the
+dry-run's collectives) is the production mesh's.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+PER_POD = 256  # 16 x 16 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def derive_mesh(prod_mesh: Mesh, *, dp: int, ep: int, tp: int) -> Mesh:
+    """Reshape the production mesh's devices to (pod, data, expert, model)."""
+    assert dp * ep * tp == PER_POD, (dp, ep, tp)
+    n_pods = prod_mesh.devices.size // PER_POD
+    devices = prod_mesh.devices.reshape(n_pods, dp, ep, tp)
+    return Mesh(devices, ("pod", "data", "expert", "model"),
+                axis_types=(jax.sharding.AxisType.Auto,) * 4)
+
+
+def mesh_info(mesh: Mesh) -> str:
+    return " x ".join(f"{k}={v}" for k, v in mesh.shape.items())

@@ -1,0 +1,26 @@
+"""Compute substrate: the 10 assigned architectures as selectable configs."""
+
+from .config import (
+    FrontendStub,
+    HybridConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+)
+from .model import Model, ShapeCell, SHAPES
+from .registry import ARCH_IDS, get_config
+
+__all__ = [
+    "ARCH_IDS",
+    "FrontendStub",
+    "HybridConfig",
+    "MLAConfig",
+    "Model",
+    "ModelConfig",
+    "MoEConfig",
+    "SHAPES",
+    "ShapeCell",
+    "SSMConfig",
+    "get_config",
+]

@@ -1,0 +1,169 @@
+"""Model configuration covering all assigned architecture families."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    expert_d_ff: int
+    dense_residual_d_ff: int = 0  # arctic: dense MLP in parallel with MoE
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_inner: int
+    head_dim: int  # P
+    state_dim: int  # N
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 128
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """RecurrentGemma-style mix: pattern of 'R' (RG-LRU) / 'A' (local attn)."""
+
+    pattern: str = "RRA"
+    window: int = 2048
+    lru_width: int = 0  # 0 => d_model
+    conv_width: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (MiniCPM3 / DeepSeek-V2 style)."""
+
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendStub:
+    """Modality frontend stub ([vlm]/[audio]): precomputed embeddings."""
+
+    kind: str  # 'vision' | 'audio'
+    n_positions: int  # patches / frames occupying the sequence prefix
+    embed_dim: int = 0  # 0 => d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # 'dense' | 'mla' | 'moe' | 'ssm' | 'hybrid' | 'encdec'
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 => d_model // n_heads
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # family extensions
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    mla: Optional[MLAConfig] = None
+    frontend: Optional[FrontendStub] = None
+    enc_layers: int = 0  # encdec: encoder depth (n_layers = decoder depth)
+    enc_subsample: int = 4  # audio frames per decoder token position scale
+    # attention capability flags
+    subquadratic: bool = False  # can run long_500k
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def jnp_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (for 6ND model-flops)."""
+        D, V, L = self.d_model, self.vocab, self.n_layers
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            s = self.ssm
+            per = (
+                D * (2 * s.d_inner + 2 * s.n_groups * s.state_dim + s.n_heads)
+                + s.d_inner * D
+                + s.conv_width * (s.d_inner + 2 * s.n_groups * s.state_dim)
+                + 2 * s.n_heads  # A, D(skip)
+                + s.d_inner  # out norm
+                + D
+            )
+            return emb + L * per
+        hd = self.hd
+        attn = D * self.n_heads * hd + 2 * D * self.n_kv_heads * hd + self.n_heads * hd * D
+        if self.family == "mla":
+            m = self.mla
+            qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+            attn = (
+                D * m.q_lora_rank
+                + m.q_lora_rank * self.n_heads * qk_hd
+                + D * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                + self.n_heads * m.v_head_dim * D
+            )
+        mlp = 3 * D * self.d_ff
+        per = attn + mlp + 2 * D
+        if self.family == "moe":
+            moe = self.moe
+            experts = moe.n_experts * 3 * D * moe.expert_d_ff
+            dense = 3 * D * moe.dense_residual_d_ff
+            router = D * moe.n_experts
+            per = attn + experts + dense + router + 2 * D
+        if self.family == "hybrid":
+            h = self.hybrid
+            lw = h.lru_width or D
+            rec = (
+                2 * D * lw + lw * D  # x/y branches + out
+                + h.conv_width * lw
+                + 2 * lw * (lw // 8 if lw >= 8 else lw)  # rg-lru gates (block-diag /8)
+                + 2 * lw
+            )
+            n_attn = sum(1 for c in self._hybrid_layout() if c == "A")
+            n_rec = L - n_attn
+            per_attn = attn + mlp + 2 * D
+            per_rec = rec + mlp + 2 * D
+            return emb + n_attn * per_attn + n_rec * per_rec
+        if self.family == "encdec":
+            enc_per = attn + mlp + 2 * D
+            dec_per = 2 * attn + mlp + 3 * D  # self + cross attention
+            return emb + self.enc_layers * enc_per + L * dec_per
+        return emb + L * per
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: routed experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        moe = self.moe
+        D, L = self.d_model, self.n_layers
+        inactive = (moe.n_experts - moe.top_k) * 3 * D * moe.expert_d_ff
+        return self.param_count() - L * inactive
+
+    def _hybrid_layout(self) -> str:
+        """Layer types for the hybrid family, e.g. 'RRARRA...'."""
+        assert self.hybrid is not None
+        pat = self.hybrid.pattern
+        return (pat * ((self.n_layers + len(pat) - 1) // len(pat)))[: self.n_layers]

@@ -1,0 +1,151 @@
+"""Dense decoder LM (minitron / llama3.2 / granite-8b / pixtral backbone).
+
+Layer stack is scanned (stacked params) so HLO size is depth-independent.
+The VLM variant consumes precomputed patch embeddings (frontend stub) that
+overwrite the first ``frontend.n_positions`` sequence slots.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+from ..pshard import constrain
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    dtype = cfg.jnp_dtype
+
+    def block(k):
+        ka, km = jax.random.split(k)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": L.attn_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    blocks = jax.vmap(block)(jnp.stack(keys[: cfg.n_layers]))
+    params = {
+        "embed": L.embed_init(keys[-3], cfg.vocab, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(keys[-2], cfg.d_model, cfg.vocab, dtype)
+    return params
+
+
+def _head(params, cfg):
+    return params.get("head", params["embed"].T)
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, patches):
+    h = L.embed_tokens(params["embed"], tokens)
+    if cfg.frontend is not None and patches is not None:
+        n = cfg.frontend.n_positions
+        h = jnp.concatenate([patches.astype(h.dtype), h[:, n:, :]], axis=1)
+    return h
+
+
+def _block_apply(cfg: ModelConfig, p, h, positions):
+    a, _ = L.attention_prefill(
+        p["attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps), positions,
+        cfg.rope_theta, causal=True, window=None,
+    )
+    h = h + a
+    h = h + L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+    return h
+
+
+def forward(params, cfg: ModelConfig, tokens, patches=None, *,
+            remat: str = "none", return_hidden: bool = False) -> jax.Array:
+    """tokens (B,T) -> fp32 logits (B,T,V) (or final hidden states)."""
+    B, T = tokens.shape
+    h = _embed_inputs(params, cfg, tokens, patches)
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+
+    def body(h, p):
+        return _block_apply(cfg, p, h, positions), None
+
+    if remat != "none":
+        policy = L.remat_policy(remat)
+        body = jax.checkpoint(body, policy=policy)
+    h, _ = L.scan_layers(body, h, params["blocks"])
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return h
+    return L.logits_out(_head(params, cfg), h)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat="none") -> jax.Array:
+    h = forward(params, cfg, batch["tokens"], batch.get("patches"),
+                remat=remat, return_hidden=True)
+    return L.chunked_cross_entropy(_head(params, cfg), h, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, cfg.jnp_dtype),
+        "v": jnp.zeros(shape, cfg.jnp_dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens, patches=None):
+    """Full-sequence forward that also returns the KV cache."""
+    B, T = tokens.shape
+    h = _embed_inputs(params, cfg, tokens, patches)
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+
+    def body(h, p):
+        a, kv = L.attention_prefill(
+            p["attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps), positions,
+            cfg.rope_theta,
+        )
+        h = h + a
+        h = h + L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+        return h, kv
+
+    h, (ks, vs) = L.scan_layers(body, h, params["blocks"])
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(_head(params, cfg), h[:, -1:, :])
+    cache = {"k": ks, "v": vs, "length": jnp.array(T, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    """tokens (B,1) -> logits (B,1,V); cache updated in place (ring)."""
+    B = tokens.shape[0]
+    h = L.embed_tokens(params["embed"], tokens)
+    length = cache["length"]
+    pos = jnp.broadcast_to(length, (B,))
+
+    def body(h, inputs):
+        p, k_c, v_c = inputs
+        a, (k_c, v_c) = L.attention_decode(
+            p["attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps), pos,
+            cfg.rope_theta, (k_c, v_c), length,
+        )
+        h = h + a
+        h = h + L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+        return h, (k_c, v_c)
+
+    h, (ks, vs) = L.scan_layers(body, h, (params["blocks"], cache["k"], cache["v"]))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(_head(params, cfg), h)
+    new_cache = {"k": ks, "v": vs, "length": length + 1}
+    return logits, new_cache

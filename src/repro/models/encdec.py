@@ -1,0 +1,201 @@
+"""Seamless-M4T-v2 backbone: speech encoder + text decoder (enc-dec).
+
+The audio frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, D) — w2v-BERT conformer features —
+with S_enc = seq_len // enc_subsample.  The transformer backbone (24L
+bidirectional encoder, 24L causal decoder with cross-attention) is real.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+from ..kernels import ops
+from ..pshard import constrain
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = cfg.jnp_dtype
+    keys = jax.random.split(key, 4)
+
+    def enc_block(k):
+        ka, km = jax.random.split(k)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": L.attn_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def dec_block(k):
+        ka, kc, km = jax.random.split(k, 3)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "self_attn": L.attn_init(ka, cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd, dtype),
+            "ln_x": jnp.zeros((cfg.d_model,), dtype),
+            "cross_attn": L.attn_init(kc, cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.hd, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    enc_keys = jax.random.split(keys[0], cfg.enc_layers)
+    dec_keys = jax.random.split(keys[1], cfg.n_layers)
+    return {
+        "embed": L.embed_init(keys[2], cfg.vocab, cfg.d_model, dtype),
+        "enc_blocks": jax.vmap(enc_block)(enc_keys),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "dec_blocks": jax.vmap(dec_block)(dec_keys),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "head": L.dense_init(keys[3], cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames (B, S_enc, D) stub embeddings -> encoder states."""
+    B, S, _ = frames.shape
+    h = constrain(frames.astype(cfg.jnp_dtype), "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(h, p):
+        a, _ = L.attention_prefill(
+            p["attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps), positions,
+            cfg.rope_theta, causal=False)
+        h = h + a
+        h = h + L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+        return h, None
+
+    h, _ = L.scan_layers(body, h, params["enc_blocks"])
+    return L.rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attend(p, cfg, x, enc_kv):
+    """x (B,T,D) queries vs. precomputed encoder k/v (B,Hkv,S,hd)."""
+    k, v = enc_kv
+    q = jnp.einsum("btd,dhk->bhtk", x, p["wq"])
+    o = ops.flash_attention(q, k, v, causal=False)
+    return jnp.einsum("bhtk,hkd->btd", o, p["wo"])
+
+
+def _enc_kv(p, cfg, enc_out):
+    k = jnp.einsum("btd,dhk->bhtk", enc_out, p["wk"])
+    v = jnp.einsum("btd,dhk->bhtk", enc_out, p["wv"])
+    return k, v
+
+
+def decode_train(params, cfg: ModelConfig, tokens, enc_out,
+                 return_hidden: bool = False) -> jax.Array:
+    B, T = tokens.shape
+    h = L.embed_tokens(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+
+    def body(h, p):
+        a, _ = L.attention_prefill(
+            p["self_attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps), positions,
+            cfg.rope_theta, causal=True)
+        h = h + a
+        x = L.rms_norm(h, p["ln_x"], cfg.norm_eps)
+        h = h + _cross_attend(p["cross_attn"], cfg, x,
+                              _enc_kv(p["cross_attn"], cfg, enc_out))
+        h = h + L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+        return h, None
+
+    h, _ = L.scan_layers(body, h, params["dec_blocks"])
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return h
+    return L.logits_out(params["head"], h)
+
+
+def forward(params, cfg: ModelConfig, tokens, frames, *, remat="none",
+            return_hidden: bool = False):
+    enc_out = encode(params, cfg, frames)
+    return decode_train(params, cfg, tokens, enc_out, return_hidden)
+
+
+def loss_fn(params, cfg, batch, *, remat="none"):
+    h = forward(params, cfg, batch["tokens"], batch["frames"],
+                return_hidden=True)
+    return L.chunked_cross_entropy(params["head"], h, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving: encoder output + cross K/V cached once; decoder self-KV ring
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0):
+    enc_len = enc_len or max(max_len // cfg.enc_subsample, 1)
+    kv = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.hd)
+    xkv = (cfg.n_layers, batch, cfg.n_kv_heads, enc_len, cfg.hd)
+    return {
+        "k": jnp.zeros(kv, cfg.jnp_dtype),
+        "v": jnp.zeros(kv, cfg.jnp_dtype),
+        "xk": jnp.zeros(xkv, cfg.jnp_dtype),
+        "xv": jnp.zeros(xkv, cfg.jnp_dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens, frames):
+    """Encode + decoder prefill; returns logits and the full cache."""
+    B, T = tokens.shape
+    enc_out = encode(params, cfg, frames)
+    h = L.embed_tokens(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+
+    def body(h, p):
+        a, kv = L.attention_prefill(
+            p["self_attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps), positions,
+            cfg.rope_theta, causal=True)
+        h = h + a
+        xk, xv = _enc_kv(p["cross_attn"], cfg, enc_out)
+        x = L.rms_norm(h, p["ln_x"], cfg.norm_eps)
+        h = h + _cross_attend(p["cross_attn"], cfg, x, (xk, xv))
+        h = h + L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+        return h, (kv[0], kv[1], xk, xv)
+
+    h, (ks, vs, xks, xvs) = L.scan_layers(body, h, params["dec_blocks"])
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(params["head"], h[:, -1:, :])
+    return logits, {"k": ks, "v": vs, "xk": xks, "xv": xvs,
+                    "length": jnp.array(T, jnp.int32)}
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    B = tokens.shape[0]
+    h = L.embed_tokens(params["embed"], tokens)
+    length = cache["length"]
+    pos = jnp.broadcast_to(length, (B,))
+    S_enc = cache["xk"].shape[3]
+    enc_lengths = jnp.full((B,), S_enc, jnp.int32)
+
+    def body(h, inputs):
+        p, k_c, v_c, xk, xv = inputs
+        a, (k_c, v_c) = L.attention_decode(
+            p["self_attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps), pos,
+            cfg.rope_theta, (k_c, v_c), length)
+        h = h + a
+        x = L.rms_norm(h, p["ln_x"], cfg.norm_eps)
+        q = jnp.einsum("btd,dhk->bhtk", x, p["cross_attn"]["wq"])[:, :, 0]
+        o = ops.decode_attention(q, xk, xv, enc_lengths)
+        xa = jnp.einsum("bhk,hkd->bd", o, p["cross_attn"]["wo"])[:, None]
+        h = h + xa
+        h = h + L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+        return h, (k_c, v_c)
+
+    h, (ks, vs) = L.scan_layers(
+        body, h, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(params["head"], h)
+    return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"],
+                    "length": length + 1}

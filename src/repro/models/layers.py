@@ -1,0 +1,316 @@
+"""Shared model building blocks: norms, RoPE, attention, SwiGLU, embeddings.
+
+All layers are plain functions over parameter dicts (pytrees).  Per-layer
+parameters are *stacked* along a leading layer axis so the forward pass is
+a ``jax.lax.scan`` — compile time and HLO size stay flat in depth.
+
+Attention runs through :mod:`repro.kernels.ops` (Pallas flash/decode
+kernels on TPU, interpret/reference on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from ..kernels import ops
+from ..pshard import constrain
+
+Params = Dict[str, Any]
+
+# Dry-run FLOP accounting: XLA's cost_analysis counts a while-loop body
+# once, not per trip — so for the flop/byte/collective measurement passes
+# the dry-run re-lowers with every lax.scan unrolled (see
+# launch/dryrun.py's depth-extrapolation).  All layer/chunk scans in the
+# model code route through ``scan_layers`` so one flag flips them.
+_SCAN_UNROLL = [False]
+
+
+def set_scan_unroll(value: bool) -> None:
+    _SCAN_UNROLL[0] = bool(value)
+
+
+def scan_layers(body, carry, xs, length=None):
+    return jax.lax.scan(body, carry, xs, length=length,
+                        unroll=True if _SCAN_UNROLL[0] else 1)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dims, dtype) -> jax.Array:
+    """Truncated-normal fan-in init; out_dims may be a tuple (fused heads)."""
+    if isinstance(out_dims, int):
+        out_dims = (out_dims,)
+    shape = (in_dim, *out_dims)
+    scale = in_dim ** -0.5
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * (d ** -0.5)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., T, Dh) rotated at ``positions`` (broadcastable to (..., T))."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA) — params + prefill/decode application
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, hd: int, dtype) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d_model, (n_heads, hd), dtype),
+        "wk": dense_init(k2, d_model, (n_kv, hd), dtype),
+        "wv": dense_init(k3, d_model, (n_kv, hd), dtype),
+        "wo": dense_init(k4, n_heads * hd, d_model, dtype).reshape(n_heads, hd, d_model),
+    }
+
+
+def attn_qkv(p: Params, x: jax.Array, positions: jax.Array, theta: float):
+    """x (B,T,D) -> q (B,H,T,hd), k/v (B,Hkv,T,hd), roped."""
+    q = jnp.einsum("btd,dhk->bhtk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bhtk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bhtk", x, p["wv"])
+    q = apply_rope(q, positions[:, None, :], theta)
+    k = apply_rope(k, positions[:, None, :], theta)
+    q = constrain(q, "batch", "heads", "seq", None)
+    k = constrain(k, "batch", "kv_heads", "seq", None)
+    v = constrain(v, "batch", "kv_heads", "seq", None)
+    return q, k, v
+
+
+def attn_out(p: Params, o: jax.Array) -> jax.Array:
+    """o (B,H,T,hd) -> (B,T,D)."""
+    y = jnp.einsum("bhtk,hkd->btd", o, p["wo"])
+    y = constrain(y, "batch", "seq", None)
+    # named for the 'outs' remat policy: saving the post-all-reduce output
+    # means the recompute pass skips the TP collective entirely
+    return checkpoint_name(y, "attn_out")
+
+
+def attention_prefill(
+    p: Params, x: jax.Array, positions: jax.Array, theta: float,
+    *, causal=True, window=None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    q, k, v = attn_qkv(p, x, positions, theta)
+    o = ops.flash_attention(q, k, v, causal=causal, window=window)
+    o = constrain(o, "batch", "heads", "seq", None)
+    return attn_out(p, o), (k, v)
+
+
+def attention_decode(
+    p: Params, x: jax.Array, pos: jax.Array, theta: float,
+    kv_cache: Tuple[jax.Array, jax.Array], length: jax.Array,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """x (B,1,D); kv_cache k/v (B,Hkv,S,hd) ring-written at ``length``."""
+    B = x.shape[0]
+    q = jnp.einsum("btd,dhk->bhtk", x, p["wq"])  # (B,H,1,hd)
+    k_new = jnp.einsum("btd,dhk->bhtk", x, p["wk"])
+    v_new = jnp.einsum("btd,dhk->bhtk", x, p["wv"])
+    q = apply_rope(q, pos[:, None, None], theta)[:, :, 0]  # (B,H,hd)
+    k_new = apply_rope(k_new, pos[:, None, None], theta)
+    k_cache, v_cache = kv_cache
+    S = k_cache.shape[2]
+    slot = length % S  # ring buffer (windowed caches wrap; full caches don't)
+    k_cache = _scatter_slot(k_cache, k_new, slot)
+    v_cache = _scatter_slot(v_cache, v_new, slot)
+    lengths = jnp.minimum(length + 1, S) * jnp.ones((B,), jnp.int32)
+    o = ops.decode_attention(q, k_cache, v_cache, lengths)  # (B,H,hd)
+    y = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None, :]
+    return constrain(y, "batch", "seq", None), (k_cache, v_cache)
+
+
+def _scatter_slot(cache: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
+    """Write new (B,Hkv,1,hd) into cache (B,Hkv,S,hd) at position ``slot``."""
+    return jax.lax.dynamic_update_slice(
+        cache, new.astype(cache.dtype), (0, 0, slot, 0)
+    )
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, dtype),
+        "wg": dense_init(k2, d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("btd,df->btf", x, p["wi"])
+    g = jnp.einsum("btd,df->btf", x, p["wg"])
+    h = jax.nn.silu(g) * h
+    h = constrain(h, "batch", "seq", "ff")
+    y = jnp.einsum("btf,fd->btd", h, p["wo"])
+    y = constrain(y, "batch", "seq", None)
+    return checkpoint_name(y, "mlp_out")
+
+
+def remat_policy(name: str):
+    """Activation-checkpoint policies selectable per MeshPlan.
+
+    'none'  — no remat (memory-heavy);
+    'full'  — recompute everything (max memory savings, +1 fwd of compute
+              AND of TP collectives);
+    'dots'  — save weight-stationary dots (no batch dims);
+    'outs'  — save the named post-all-reduce layer outputs: recompute does
+              the elementwise work but never re-runs the TP collectives —
+              the collective-optimal remat point.
+    """
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    if name == "outs":
+        return jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "mlp_out")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(embed, tokens, axis=0)
+    return constrain(out, "batch", "seq", None)
+
+
+def logits_out(head: jax.Array, x: jax.Array) -> jax.Array:
+    """head (D, V); x (B,T,D) -> fp32 logits."""
+    logits = jnp.einsum("btd,dv->btv", x.astype(jnp.float32),
+                        head.astype(jnp.float32))
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_id: int = -1) -> jax.Array:
+    """Mean next-token CE; logits (B,T,V) fp32, labels (B,T)."""
+    mask = labels != ignore_id
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def _ce_chunks(head, h, labels, chunk, ignore_id):
+    B, T, D = h.shape
+    nb = T // chunk
+    hc = h.reshape(B, nb, chunk, D).swapaxes(0, 1)  # (nb, B, chunk, D)
+    lc = labels.reshape(B, nb, chunk).swapaxes(0, 1)
+    return nb, hc, lc
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _chunked_ce(head, h, labels, chunk, ignore_id):
+    nb, hc, lc = _ce_chunks(head, h, labels, chunk, ignore_id)
+
+    def body(carry, inp):
+        hh, ll = inp
+        logits = jnp.einsum("btd,dv->btv", hh.astype(jnp.float32),
+                            head.astype(jnp.float32))
+        logits = constrain(logits, "batch", "seq", "vocab")
+        mask = ll != ignore_id
+        safe = jnp.where(mask, ll, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = jnp.sum((logz - gold) * mask)
+        cnt = jnp.sum(mask)
+        return (carry[0] + nll, carry[1] + cnt), None
+
+    (nll, cnt), _ = scan_layers(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hc, lc))
+    return nll / jnp.maximum(cnt, 1)
+
+
+def _chunked_ce_fwd(head, h, labels, chunk, ignore_id):
+    loss = _chunked_ce(head, h, labels, chunk, ignore_id)
+    mask_cnt = jnp.maximum(jnp.sum(labels != ignore_id), 1)
+    return loss, (head, h, labels, mask_cnt)
+
+
+def _chunked_ce_bwd(chunk, ignore_id, res, g):
+    """Hand-written backward: a plain (non-differentiated) scan over chunks
+    so XLA keeps ONE while loop with per-iteration buffer reuse — the
+    autodiff-of-scan path unrolls on some backends and multiplies the
+    chunk-logits live set by the trip count."""
+    head, h, labels, cnt = res
+    nb, hc, lc = _ce_chunks(head, h, labels, chunk, ignore_id)
+    scale = (g / cnt.astype(jnp.float32)).astype(jnp.float32)
+    head32 = head.astype(jnp.float32)
+
+    def body(dhead_acc, inp):
+        hh, ll = inp  # (B, chunk, D), (B, chunk)
+        h32 = hh.astype(jnp.float32)
+        logits = jnp.einsum("btd,dv->btv", h32, head32)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        mask = (ll != ignore_id)
+        safe = jnp.where(mask, ll, 0)
+        p = jax.nn.softmax(logits, axis=-1)
+        onehot = jax.nn.one_hot(safe, logits.shape[-1], dtype=jnp.float32)
+        d = (p - onehot) * mask[..., None] * scale  # (B, chunk, V)
+        dh = jnp.einsum("btv,dv->btd", d, head32).astype(h.dtype)
+        dhead_acc = dhead_acc + jnp.einsum("btd,btv->dv", h32, d)
+        return dhead_acc, dh
+
+    dhead0 = jnp.zeros(head.shape, jnp.float32)
+    dhead, dhs = scan_layers(body, dhead0, (hc, lc))
+    B, T, D = h.shape
+    dh = dhs.swapaxes(0, 1).reshape(B, T, D)
+    dlabels = jnp.zeros(labels.shape, jax.dtypes.float0)
+    return dhead.astype(head.dtype), dh, dlabels
+
+
+_chunked_ce.defvjp(_chunked_ce_fwd, _chunked_ce_bwd)
+
+
+def chunked_cross_entropy(head: jax.Array, h: jax.Array, labels: jax.Array,
+                          *, chunk: int = 256, ignore_id: int = -1) -> jax.Array:
+    """Next-token CE without materializing the full (B,T,V) logits.
+
+    Both forward and backward stream over sequence chunks with plain scans
+    (custom VJP), so peak logits memory is O(chunk·V) instead of O(T·V) —
+    at 256k-vocab training shapes that is ~40 GB -> ~1 GB of temps/chip.
+    """
+    B, T, D = h.shape
+    if T % chunk != 0 or T <= chunk:
+        return cross_entropy(logits_out(head, h), labels, ignore_id)
+    return _chunked_ce(head, h, labels, chunk, ignore_id)

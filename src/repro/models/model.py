@@ -1,0 +1,127 @@
+"""Unified model API over all families + input specs per benchmark shape.
+
+``Model`` dispatches to the family module; ``input_specs`` builds the
+ShapeDtypeStruct stand-ins the multi-pod dry-run lowers against (weak-type
+correct, shardable, zero allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import dense, encdec, mla, moe, rglru, ssm
+from .config import ModelConfig
+
+_FAMILIES = {
+    "dense": dense,
+    "mla": mla,
+    "moe": moe,
+    "ssm": ssm,
+    "hybrid": rglru,
+    "encdec": encdec,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One benchmark cell: (kind, seq_len, global_batch)."""
+
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.mod = _FAMILIES[cfg.family]
+
+    # -- parameters -----------------------------------------------------------
+    def init(self, key: jax.Array):
+        return self.mod.init_params(self.cfg, key)
+
+    def abstract_params(self):
+        """Param ShapeDtypeStructs without allocating (dry-run path)."""
+        return jax.eval_shape(lambda k: self.mod.init_params(self.cfg, k),
+                              jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    # -- steps -------------------------------------------------------------------
+    def loss(self, params, batch, *, remat: str = "none"):
+        return self.mod.loss_fn(params, self.cfg, batch, remat=remat)
+
+    def forward(self, params, batch, *, remat: str = "none"):
+        if self.cfg.family == "encdec":
+            return self.mod.forward(params, self.cfg, batch["tokens"],
+                                    batch["frames"], remat=remat)
+        out = self.mod.forward(params, self.cfg, batch["tokens"],
+                               batch.get("patches"), remat=remat)
+        return out[0] if isinstance(out, tuple) else out
+
+    def prefill(self, params, batch):
+        if self.cfg.family == "encdec":
+            return self.mod.prefill(params, self.cfg, batch["tokens"],
+                                    batch["frames"])
+        return self.mod.prefill(params, self.cfg, batch["tokens"],
+                                batch.get("patches"))
+
+    def decode_step(self, params, tokens, cache):
+        return self.mod.decode_step(params, self.cfg, tokens, cache)
+
+    def init_cache(self, batch: int, max_len: int):
+        return self.mod.init_cache(self.cfg, batch, max_len)
+
+    def abstract_cache(self, batch: int, max_len: int):
+        return jax.eval_shape(lambda: self.mod.init_cache(self.cfg, batch, max_len))
+
+    # -- input specs ----------------------------------------------------------------
+    def input_specs(self, cell: ShapeCell) -> Dict[str, Any]:
+        """ShapeDtypeStructs for the step the cell lowers (no allocation)."""
+        cfg = self.cfg
+        B = cell.global_batch
+        T = cell.seq_len
+        if cell.kind == "train":
+            batch: Dict[str, Any] = {
+                "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, T), jnp.int32),
+            }
+            if cfg.family == "encdec":
+                batch["frames"] = jax.ShapeDtypeStruct(
+                    (B, T // cfg.enc_subsample, cfg.d_model), cfg.jnp_dtype)
+            if cfg.frontend is not None:
+                batch["patches"] = jax.ShapeDtypeStruct(
+                    (B, cfg.frontend.n_positions, cfg.d_model), cfg.jnp_dtype)
+            return batch
+        if cell.kind == "prefill":
+            batch = {"tokens": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+            if cfg.family == "encdec":
+                batch["frames"] = jax.ShapeDtypeStruct(
+                    (B, T // cfg.enc_subsample, cfg.d_model), cfg.jnp_dtype)
+            if cfg.frontend is not None:
+                batch["patches"] = jax.ShapeDtypeStruct(
+                    (B, cfg.frontend.n_positions, cfg.d_model), cfg.jnp_dtype)
+            return batch
+        if cell.kind == "decode":
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "cache": self.abstract_cache(B, T),
+            }
+        raise ValueError(cell.kind)
+
+    def runnable(self, cell: ShapeCell) -> Tuple[bool, str]:
+        """Whether this (arch, shape) cell applies (long_500k gating)."""
+        if cell.name == "long_500k" and not self.cfg.subquadratic:
+            return False, "full quadratic attention; 500k decode infeasible"
+        return True, ""

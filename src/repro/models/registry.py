@@ -1,0 +1,30 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig (full or smoke)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from .config import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "minitron-4b": "repro.configs.minitron_4b",
+    "llama3.2-3b": "repro.configs.llama3_2_3b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "granite-8b": "repro.configs.granite_8b",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCH_IDS}")
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.SMOKE if smoke else mod.CONFIG

@@ -1,0 +1,264 @@
+"""RecurrentGemma-2B: RG-LRU recurrent blocks + local sliding-window MQA.
+
+Layer layout follows the 'RRA' pattern (two recurrent blocks per local-
+attention block).  The RG-LRU recurrence runs through the Pallas log-depth
+scan kernel; local attention uses the flash kernel with a sliding window.
+Decode state is a fixed-size (conv, h) pair for R layers and a W-entry
+ring KV cache for A layers — which is why this arch runs ``long_500k``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+from ..kernels import ops
+from ..pshard import constrain
+
+N_GATE_BLOCKS = 8
+LRU_C = 8.0
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block
+# ---------------------------------------------------------------------------
+
+
+def rec_init(cfg: ModelConfig, key) -> Dict[str, Any]:
+    lw = _lru_width(cfg)
+    dtype = cfg.jnp_dtype
+    blk = lw // N_GATE_BLOCKS
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "wx": L.dense_init(k1, cfg.d_model, lw, dtype),
+        "wy": L.dense_init(k2, cfg.d_model, lw, dtype),
+        "conv_w": (jax.random.normal(k3, (cfg.hybrid.conv_width, lw)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((lw,), dtype),
+        # block-diagonal input/recurrence gates
+        "w_i": (jax.random.normal(k4, (N_GATE_BLOCKS, blk, blk)) * blk ** -0.5).astype(dtype),
+        "b_i": jnp.zeros((lw,), dtype),
+        "w_r": (jax.random.normal(k5, (N_GATE_BLOCKS, blk, blk)) * blk ** -0.5).astype(dtype),
+        "b_r": jnp.zeros((lw,), dtype),
+        "lam": jnp.linspace(0.9, 5.0, lw).astype(jnp.float32),  # Λ
+        "w_out": L.dense_init(jax.random.fold_in(k1, 7), lw, cfg.d_model, dtype),
+    }
+
+
+def _block_diag(x, w):
+    """x (...,lw) @ block-diag w (G,blk,blk) -> (...,lw)."""
+    G, blk, _ = w.shape
+    xg = x.reshape(*x.shape[:-1], G, blk)
+    yg = jnp.einsum("...gc,gce->...ge", xg, w)
+    return yg.reshape(*x.shape)
+
+
+def _rg_lru(p, x, h0):
+    """x (B,T,lw); h0 (B,lw) -> (y, hT)."""
+    r = jax.nn.sigmoid(_block_diag(x, p["w_r"]) + p["b_r"])
+    i = jax.nn.sigmoid(_block_diag(x, p["w_i"]) + p["b_i"])
+    log_a = (-LRU_C * jax.nn.softplus(p["lam"])).astype(jnp.float32) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    u = gated * (i.astype(jnp.float32) * x.astype(jnp.float32))
+    y, hT = ops.rglru_scan(a.astype(x.dtype), u.astype(x.dtype), h0)
+    return y, hT
+
+
+def _rg_lru_step(p, x, h):
+    """Single-token RG-LRU update.  x, h (B,lw)."""
+    r = jax.nn.sigmoid(_block_diag(x, p["w_r"]) + p["b_r"])
+    i = jax.nn.sigmoid(_block_diag(x, p["w_i"]) + p["b_i"])
+    log_a = (-LRU_C * jax.nn.softplus(p["lam"])) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    u = gated * (i.astype(jnp.float32) * x.astype(jnp.float32))
+    h_new = a * h.astype(jnp.float32) + u
+    return h_new.astype(x.dtype)
+
+
+def rec_apply(p, cfg: ModelConfig, x, h0=None):
+    """Full-sequence recurrent branch.  Returns (out, (conv_tail, hT))."""
+    B, T, _ = x.shape
+    lw = _lru_width(cfg)
+    xb = jnp.einsum("btd,dl->btl", x, p["wx"])
+    yb = jax.nn.gelu(jnp.einsum("btd,dl->btl", x, p["wy"]))
+    xb = constrain(xb, "batch", "seq", "lru")
+    k = cfg.hybrid.conv_width
+    conv = xb * p["conv_w"][-1]
+    for ofs in range(1, k):
+        shifted = jnp.pad(xb, ((0, 0), (ofs, 0), (0, 0)))[:, :T, :]
+        conv = conv + shifted * p["conv_w"][k - 1 - ofs]
+    conv = conv + p["conv_b"]
+    if h0 is None:
+        h0 = jnp.zeros((B, lw), x.dtype)
+    lru, hT = _rg_lru(p, conv, h0)
+    out = jnp.einsum("btl,ld->btd", lru * yb, p["w_out"])
+    conv_tail = (xb[:, T - (k - 1):, :] if T >= k - 1
+                 else jnp.pad(xb, ((0, 0), (k - 1 - T, 0), (0, 0))))
+    return constrain(out, "batch", "seq", None), (conv_tail, hT)
+
+
+def rec_step(p, cfg: ModelConfig, x, conv_state, h):
+    """x (B,1,D); conv_state (B,k-1,lw); h (B,lw)."""
+    xb = jnp.einsum("btd,dl->btl", x, p["wx"])[:, 0]  # (B,lw)
+    yb = jax.nn.gelu(jnp.einsum("btd,dl->btl", x, p["wy"]))[:, 0]
+    window = jnp.concatenate([conv_state, xb[:, None, :]], axis=1)  # (B,k,lw)
+    conv = jnp.einsum("bkl,kl->bl", window.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    h_new = _rg_lru_step(p, conv.astype(x.dtype), h)
+    out = jnp.einsum("bl,ld->bd", h_new * yb, p["w_out"])[:, None]
+    return out, window[:, 1:, :], h_new
+
+
+# ---------------------------------------------------------------------------
+# full model (unrolled heterogeneous stack)
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = cfg.jnp_dtype
+    layout = cfg._hybrid_layout()
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    layer_params: List[Dict[str, Any]] = []
+    for i, kind in enumerate(layout):
+        ka, km = jax.random.split(keys[i])
+        p: Dict[str, Any] = {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+        }
+        if kind == "A":
+            p["attn"] = L.attn_init(ka, cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.hd, dtype)
+        else:
+            p["rec"] = rec_init(cfg, ka)
+        layer_params.append(p)
+    return {
+        "embed": L.embed_init(keys[-2], cfg.vocab, cfg.d_model, dtype),
+        "layers": layer_params,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "head": L.dense_init(keys[-1], cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def forward(params, cfg: ModelConfig, tokens, patches=None, *, remat="none",
+            return_hidden: bool = False):
+    B, T = tokens.shape
+    layout = cfg._hybrid_layout()
+    h = L.embed_tokens(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+
+    def layer(h, p, kind):
+        hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+        if kind == "A":
+            a, _ = L.attention_prefill(p["attn"], hn, positions, cfg.rope_theta,
+                                       causal=True, window=cfg.hybrid.window)
+        else:
+            a, _ = rec_apply(p["rec"], cfg, hn)
+        h = h + a
+        h = h + L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+        return h
+
+    for p, kind in zip(params["layers"], layout):
+        fn = layer
+        if remat != "none":
+            fn = jax.checkpoint(layer, static_argnums=(2,),
+                                policy=L.remat_policy(remat))
+        h = fn(h, p, kind)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return h
+    return L.logits_out(params["head"], h)
+
+
+def loss_fn(params, cfg, batch, *, remat="none"):
+    h = forward(params, cfg, batch["tokens"], remat=remat, return_hidden=True)
+    return L.chunked_cross_entropy(params["head"], h, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """R layers: (conv, h); A layers: ring KV of size min(window, max_len)."""
+    layout = cfg._hybrid_layout()
+    lw = _lru_width(cfg)
+    W = min(cfg.hybrid.window, max_len)
+    cache: List[Dict[str, Any]] = []
+    for kind in layout:
+        if kind == "A":
+            cache.append({
+                "k": jnp.zeros((batch, cfg.n_kv_heads, W, cfg.hd), cfg.jnp_dtype),
+                "v": jnp.zeros((batch, cfg.n_kv_heads, W, cfg.hd), cfg.jnp_dtype),
+            })
+        else:
+            cache.append({
+                "conv": jnp.zeros((batch, cfg.hybrid.conv_width - 1, lw),
+                                  cfg.jnp_dtype),
+                "h": jnp.zeros((batch, lw), cfg.jnp_dtype),
+            })
+    return {"layers": cache, "length": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg: ModelConfig, tokens, patches=None):
+    B, T = tokens.shape
+    layout = cfg._hybrid_layout()
+    W = min(cfg.hybrid.window, T)
+    h = L.embed_tokens(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    caches: List[Dict[str, Any]] = []
+    for p, kind in zip(params["layers"], layout):
+        hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+        if kind == "A":
+            a, (k, v) = L.attention_prefill(p["attn"], hn, positions,
+                                            cfg.rope_theta, causal=True,
+                                            window=cfg.hybrid.window)
+            # keep the trailing window in ring order (slot = pos % W)
+            tail_k = k[:, :, T - W:, :]
+            tail_v = v[:, :, T - W:, :]
+            roll = (-(T % W)) % W if W else 0
+            caches.append({"k": jnp.roll(tail_k, roll, axis=2),
+                           "v": jnp.roll(tail_v, roll, axis=2)})
+        else:
+            a, (conv_tail, hT) = rec_apply(p["rec"], cfg, hn)
+            caches.append({"conv": conv_tail, "h": hT})
+        h = h + a
+        h = h + L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(params["head"], h[:, -1:, :])
+    return logits, {"layers": caches, "length": jnp.array(T, jnp.int32)}
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    B = tokens.shape[0]
+    layout = cfg._hybrid_layout()
+    h = L.embed_tokens(params["embed"], tokens)
+    length = cache["length"]
+    pos = jnp.broadcast_to(length, (B,))
+    new_layers: List[Dict[str, Any]] = []
+    for p, kind, c in zip(params["layers"], layout, cache["layers"]):
+        hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+        if kind == "A":
+            W = c["k"].shape[2]
+            a, (k_c, v_c) = L.attention_decode(
+                p["attn"], hn, pos, cfg.rope_theta, (c["k"], c["v"]), length)
+            new_layers.append({"k": k_c, "v": v_c})
+        else:
+            a, conv_state, h_state = rec_step(p["rec"], cfg, hn, c["conv"], c["h"])
+            new_layers.append({"conv": conv_state, "h": h_state})
+        h = h + a
+        h = h + L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(params["head"], h)
+    return logits, {"layers": new_layers, "length": length + 1}

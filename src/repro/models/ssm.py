@@ -1,0 +1,232 @@
+"""Mamba-2 (SSD) LM — attention-free, constant-size recurrent state.
+
+The SSD scan runs through the Pallas chunked kernel
+(:func:`repro.kernels.ops.ssd_scan`).  Decode carries a (conv_state,
+ssd_state) pair per layer — cost independent of context length, which is
+why this arch runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+from ..kernels import ops
+from ..pshard import constrain
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    conv_ch = s.d_inner + 2 * s.n_groups * s.state_dim
+    proj_out = 2 * s.d_inner + 2 * s.n_groups * s.state_dim + s.n_heads
+    return s, conv_ch, proj_out
+
+
+def block_init(cfg: ModelConfig, key) -> Dict[str, Any]:
+    s, conv_ch, proj_out = _dims(cfg)
+    dtype = cfg.jnp_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln": jnp.zeros((cfg.d_model,), dtype),
+        "in_proj": L.dense_init(k1, cfg.d_model, proj_out, dtype),
+        "conv_w": (jax.random.normal(k2, (s.conv_width, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((s.n_heads,), jnp.float32),
+        "dt_bias": jnp.full((s.n_heads,), -2.0, jnp.float32),
+        "D_skip": jnp.ones((s.n_heads,), jnp.float32),
+        "out_norm": jnp.zeros((s.d_inner,), dtype),
+        "out_proj": L.dense_init(k3, s.d_inner, cfg.d_model, dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d, g = s.d_inner, s.n_groups * s.state_dim
+    z = zxbcdt[..., :d]
+    xbc = zxbcdt[..., d: d + d + 2 * g]
+    dt = zxbcdt[..., d + d + 2 * g:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d over (B,T,C) with width-k taps w (k,C)."""
+    k = w.shape[0]
+    out = xbc * w[-1]
+    for i in range(1, k):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1], :]
+        out = out + shifted * w[k - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def block_apply(p, cfg: ModelConfig, x) -> jax.Array:
+    s = cfg.ssm
+    B, T, _ = x.shape
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("btd,dk->btk", h, p["in_proj"])
+    zxbcdt = constrain(zxbcdt, "batch", "seq", "inner")
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., : s.d_inner]
+    g = s.n_groups * s.state_dim
+    Bm = xbc[..., s.d_inner: s.d_inner + g].reshape(B, T, s.n_groups, s.state_dim)
+    Cm = xbc[..., s.d_inner + g:].reshape(B, T, s.n_groups, s.state_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, T, s.n_heads, s.head_dim)
+    h0 = jnp.zeros((B, s.n_heads, s.state_dim, s.head_dim), xs.dtype)
+    y, _ = ops.ssd_scan(xh, dt.astype(xs.dtype), A.astype(jnp.float32),
+                        Bm, Cm, h0, chunk=s.chunk)
+    y = y + p["D_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, T, s.d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("btk,kd->btd", y, p["out_proj"])
+    return constrain(out, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = jax.vmap(lambda k: block_init(cfg, k))(jnp.stack(keys[: cfg.n_layers]))
+    return {
+        "embed": L.embed_init(keys[-2], cfg.vocab, cfg.d_model, cfg.jnp_dtype),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.jnp_dtype),
+        "head": L.dense_init(keys[-1], cfg.d_model, cfg.vocab, cfg.jnp_dtype),
+    }
+
+
+def forward(params, cfg: ModelConfig, tokens, patches=None, *, remat="none",
+            return_hidden: bool = False):
+    h = L.embed_tokens(params["embed"], tokens)
+
+    def body(h, p):
+        return h + block_apply(p, cfg, h), None
+
+    if remat != "none":
+        policy = L.remat_policy(remat)
+        body = jax.checkpoint(body, policy=policy)
+    h, _ = L.scan_layers(body, h, params["blocks"])
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return h
+    return L.logits_out(params["head"], h)
+
+
+def loss_fn(params, cfg, batch, *, remat="none"):
+    h = forward(params, cfg, batch["tokens"], remat=remat, return_hidden=True)
+    return L.chunked_cross_entropy(params["head"], h, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving: constant-size state
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """max_len is irrelevant for an SSM — the state is constant-size."""
+    s, conv_ch, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, s.conv_width - 1, conv_ch),
+                          cfg.jnp_dtype),
+        "ssd": jnp.zeros((cfg.n_layers, batch, s.n_heads, s.state_dim,
+                          s.head_dim), cfg.jnp_dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def _block_decode(p, cfg: ModelConfig, x, conv_state, ssd_state):
+    """x (B,1,D); states (B,k-1,C), (B,H,N,P)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("btd,dk->btk", h, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    u = xbc[:, 0]  # (B,C)
+    window = jnp.concatenate([conv_state, u[:, None, :]], axis=1)  # (B,k,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    new_conv_state = window[:, 1:, :]
+    xs = conv_out[:, : s.d_inner]
+    g = s.n_groups * s.state_dim
+    Bm = conv_out[:, s.d_inner: s.d_inner + g].reshape(B, s.n_groups, s.state_dim)
+    Cm = conv_out[:, s.d_inner + g:].reshape(B, s.n_groups, s.state_dim)
+    hg = s.n_heads // s.n_groups
+    Bh = jnp.repeat(Bm, hg, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(Cm, hg, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])[..., None, None]  # (B,H,1,1)
+    xh = xs.reshape(B, s.n_heads, s.head_dim)
+    outer = Bh[..., :, None] * xh[..., None, :]  # (B,H,N,P)
+    ssd32 = ssd_state.astype(jnp.float32)
+    new_ssd = decay * ssd32 + dt[..., None, None] * outer
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_ssd)
+    y = y + p["D_skip"][None, :, None] * xh
+    y = y.reshape(B, 1, s.d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("btk,kd->btd", y, p["out_proj"])
+    return out, new_conv_state, new_ssd.astype(ssd_state.dtype)
+
+
+def prefill(params, cfg: ModelConfig, tokens, patches=None):
+    """Sequence forward + final recurrent state as the 'cache'."""
+    s, conv_ch, _ = _dims(cfg)
+    B, T = tokens.shape
+    h = L.embed_tokens(params["embed"], tokens)
+
+    def body(h, p):
+        x = h
+        hn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        zxbcdt = jnp.einsum("btd,dk->btk", hn, p["in_proj"])
+        z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+        xbc_c = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        # last k-1 raw (pre-activation) conv inputs seed the decode state
+        if T >= s.conv_width - 1:
+            conv_tail = xbc[:, T - (s.conv_width - 1):, :]
+        else:
+            conv_tail = jnp.pad(xbc, ((0, 0), (s.conv_width - 1 - T, 0), (0, 0)))
+        xs = xbc_c[..., : s.d_inner]
+        g = s.n_groups * s.state_dim
+        Bm = xbc_c[..., s.d_inner: s.d_inner + g].reshape(B, T, s.n_groups, s.state_dim)
+        Cm = xbc_c[..., s.d_inner + g:].reshape(B, T, s.n_groups, s.state_dim)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        A = -jnp.exp(p["A_log"])
+        xh = xs.reshape(B, T, s.n_heads, s.head_dim)
+        h0 = jnp.zeros((B, s.n_heads, s.state_dim, s.head_dim), xs.dtype)
+        y, hT = ops.ssd_scan(xh, dt.astype(xs.dtype), A.astype(jnp.float32),
+                             Bm, Cm, h0, chunk=s.chunk)
+        y = y + p["D_skip"].astype(y.dtype)[None, None, :, None] * xh
+        y = y.reshape(B, T, s.d_inner)
+        y = L.rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+        out = jnp.einsum("btk,kd->btd", y, p["out_proj"])
+        return x + out, (conv_tail, hT)
+
+    h, (convs, ssds) = L.scan_layers(body, h, params["blocks"])
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(params["head"], h[:, -1:, :])
+    return logits, {"conv": convs, "ssd": ssds,
+                    "length": jnp.array(T, jnp.int32)}
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    h = L.embed_tokens(params["embed"], tokens)
+
+    def body(h, inputs):
+        p, conv_state, ssd_state = inputs
+        out, conv_state, ssd_state = _block_decode(p, cfg, h, conv_state, ssd_state)
+        return h + out, (conv_state, ssd_state)
+
+    h, (convs, ssds) = L.scan_layers(
+        body, h, (params["blocks"], cache["conv"], cache["ssd"]))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(params["head"], h)
+    return logits, {"conv": convs, "ssd": ssds, "length": cache["length"] + 1}

@@ -1,0 +1,116 @@
+"""Logical-axis sharding context (MaxText-style logical->mesh mapping).
+
+Model code annotates activations with *logical* axis names
+(``constrain(h, "batch", "seq", None)``); the launcher installs a
+:class:`ShardRules` context mapping logical names to mesh axis tuples.
+Outside any context (unit tests, single device) everything is a no-op.
+
+Divisibility fallback: if a tensor dimension is not divisible by the mesh
+axes assigned to it, those axes are dropped (replicated) for that tensor —
+every (arch x shape x mesh) cell compiles, and the roofline pass then shows
+where the fallback cost money.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass
+class ShardRules:
+    mesh: Mesh
+    rules: Dict[str, Axes]
+
+    def resolve(self, logical: Optional[str]) -> Axes:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+    def axis_size(self, axes: Axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    def spec_for(self, logical_axes: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> P:
+        """Logical names -> PartitionSpec with divisibility fallback."""
+        parts = []
+        used: set = set()
+        for dim, name in zip(shape, logical_axes):
+            axes = self.resolve(name)
+            if axes is None:
+                parts.append(None)
+                continue
+            if isinstance(axes, str):
+                axes = (axes,)
+            # an axis may appear at most once in a spec
+            axes = tuple(a for a in axes if a not in used)
+
+            def size_of(t):
+                s = 1
+                for a in t:
+                    s *= self.mesh.shape[a]
+                return s
+
+            # pick the LARGEST contiguous subsequence whose size divides
+            # the dim (e.g. batch=32 on (pod=2, data=32): full 64 fails,
+            # trailing (pod,)=2 is poor — (data,)=32 is right)
+            best: Tuple[str, ...] = ()
+            best_size = 1
+            n = len(axes)
+            for i in range(n):
+                for j in range(i + 1, n + 1):
+                    cand = axes[i:j]
+                    s = size_of(cand)
+                    if s > best_size and dim % s == 0:
+                        best, best_size = cand, s
+            if best and best_size > 1:
+                parts.append(best if len(best) > 1 else best[0])
+                used.update(best)
+            else:
+                parts.append(None)
+        return P(*parts)
+
+    def sharding_for(self, logical_axes: Sequence[Optional[str]],
+                     shape: Sequence[int]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical_axes, shape))
+
+
+_ACTIVE: Optional[ShardRules] = None
+
+
+def active_rules() -> Optional[ShardRules]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def sharding_ctx(rules: Optional[ShardRules]):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = rules
+    try:
+        yield rules
+    finally:
+        _ACTIVE = prev
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Apply with_sharding_constraint if a rules context is active."""
+    ctx = _ACTIVE
+    if ctx is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = ctx.spec_for(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

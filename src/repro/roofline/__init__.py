@@ -1,0 +1,23 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from .analysis import (
+    CollectiveOp,
+    Roofline,
+    build_roofline,
+    model_flops_for,
+    parse_collectives,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+)
+
+__all__ = [
+    "CollectiveOp",
+    "HBM_BW",
+    "ICI_BW",
+    "PEAK_FLOPS",
+    "Roofline",
+    "build_roofline",
+    "model_flops_for",
+    "parse_collectives",
+]

@@ -1,0 +1,5 @@
+"""Serving substrate: batched prefill/decode engine + pipeline stages."""
+
+from .engine import Request, ServingEngine, make_pipeline_stages
+
+__all__ = ["Request", "ServingEngine", "make_pipeline_stages"]

@@ -1,0 +1,6 @@
+"""Tensor state over the KVS: sharded storage + checkpoint/restore."""
+
+from .checkpoint import CheckpointConfig, CheckpointManager
+from .tensorstore import TensorRecord, TensorStore
+
+__all__ = ["CheckpointConfig", "CheckpointManager", "TensorRecord", "TensorStore"]

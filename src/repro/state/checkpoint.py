@@ -1,0 +1,95 @@
+"""Checkpoint/restore of training state through the Anna KVS (paper §4.5).
+
+The compute tier is allowed to die (restart-the-DAG semantics); durable
+progress lives in the storage tier.  A :class:`CheckpointManager` snapshots
+(params, opt_state, step) into the KVS under ``ckpt/<step>/...`` with
+k-replication, keeps the last ``keep`` snapshots, and restores the newest
+complete one on restart — including after an *elastic re-mesh* (the arrays
+are stored unsharded; the new mesh's in_shardings re-place them, which is
+what lets the autoscaler change the data-parallel degree between epochs).
+
+Writes are lattice merges, so a checkpoint written twice by a retried DAG
+is idempotent — the paper's answer to at-least-once execution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.kvs import AnnaKVS
+from ..core.lattices import LamportClock, LWWLattice, MaxIntLattice
+from .tensorstore import TensorStore
+
+
+@dataclasses.dataclass
+class CheckpointConfig:
+    every_steps: int = 50
+    keep: int = 2
+    replication: int = 3
+
+
+class CheckpointManager:
+    def __init__(self, kvs: AnnaKVS, cfg: Optional[CheckpointConfig] = None,
+                 prefix: str = "ckpt"):
+        self.kvs = kvs
+        self.cfg = cfg or CheckpointConfig()
+        self.prefix = prefix
+        self.store = TensorStore(kvs, node_id=f"{prefix}-writer")
+        self.clock = LamportClock(f"{prefix}-meta")
+
+    # -- write path -------------------------------------------------------------
+    def maybe_save(self, step: int, params, opt_state) -> bool:
+        if step % self.cfg.every_steps != 0:
+            return False
+        self.save(step, params, opt_state)
+        return True
+
+    def save(self, step: int, params, opt_state) -> None:
+        ns = f"{self.prefix}/{step}"
+        # hot keys: bump replication for checkpoint shards (Anna selective
+        # replication) before writing
+        for key in [f"{ns}/params", f"{ns}/opt"]:
+            self.kvs.set_replication(key + "/__manifest", self.cfg.replication)
+        self.store.put_tree(f"{ns}/params", params)
+        self.store.put_tree(f"{ns}/opt", opt_state)
+        # commit marker LAST: a crash mid-write leaves no committed marker
+        self.kvs.put(f"{ns}/__commit", LWWLattice(self.clock.tick(), step))
+        cur = self.kvs.get_merged(f"{self.prefix}/__latest") or MaxIntLattice(-1)
+        self.kvs.put(f"{self.prefix}/__latest",
+                     cur.merge(MaxIntLattice(step)))
+        self._gc(step)
+
+    def _gc(self, newest: int) -> None:
+        steps = self.committed_steps()
+        for old in steps[: max(0, len(steps) - self.cfg.keep)]:
+            ns = f"{self.prefix}/{old}"
+            for key in self.store.manifest(f"{ns}/params"):
+                self.kvs.delete(key)
+            for key in self.store.manifest(f"{ns}/opt"):
+                self.kvs.delete(key)
+            self.kvs.delete(f"{ns}/__commit")
+
+    # -- read path ---------------------------------------------------------------
+    def committed_steps(self) -> List[int]:
+        latest = self.kvs.get_merged(f"{self.prefix}/__latest")
+        if latest is None:
+            return []
+        steps = []
+        for s in range(0, latest.reveal() + 1):
+            if self.kvs.get_merged(f"{self.prefix}/{s}/__commit") is not None:
+                steps.append(s)
+        return steps
+
+    def restore_latest(self, params_like, opt_like) -> Optional[Tuple[int, Any, Any]]:
+        steps = self.committed_steps()
+        if not steps:
+            return None
+        step = steps[-1]
+        ns = f"{self.prefix}/{step}"
+        params = self.store.get_tree(f"{ns}/params", params_like)
+        opt = self.store.get_tree(f"{ns}/opt", opt_like)
+        return step, params, opt

@@ -1,0 +1,21 @@
+"""Training substrate: AdamW+ZeRO-1, grad accumulation, data pipeline."""
+
+from .data import DataConfig, SyntheticDataset
+from .optimizer import AdamWConfig, apply_updates, init_state, lr_at
+from .train_step import (
+    init_error_feedback,
+    make_train_step,
+    grads_with_accumulation,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "DataConfig",
+    "SyntheticDataset",
+    "apply_updates",
+    "grads_with_accumulation",
+    "init_error_feedback",
+    "init_state",
+    "lr_at",
+    "make_train_step",
+]

@@ -1,0 +1,57 @@
+"""Synthetic deterministic data pipeline (offline-reproducible).
+
+Generates a zipf-ish token stream with enough structure (copy spans,
+position-dependent bias) that a small LM's loss visibly drops within a few
+hundred steps — the quickstart/train-driver success signal.
+
+On a real multi-host deployment each host materializes only its
+``jax.process_index()`` slice of the global batch; here (single host) we
+materialize the whole batch and let pjit shard it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    copy_prob: float = 0.3
+    copy_span: int = 16
+
+
+class SyntheticDataset:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        # zipf-ish unigram distribution over the vocab
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        p = 1.0 / ranks
+        self.p = p / p.sum()
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, step))
+        toks = rng.choice(cfg.vocab, size=(cfg.global_batch, cfg.seq_len + 1),
+                          p=self.p).astype(np.int32)
+        # inject learnable structure: random spans get copied forward
+        n_copies = int(cfg.copy_prob * cfg.seq_len / cfg.copy_span)
+        for b in range(cfg.global_batch):
+            for _ in range(n_copies):
+                src = rng.integers(0, cfg.seq_len - 2 * cfg.copy_span)
+                dst = src + cfg.copy_span
+                toks[b, dst: dst + cfg.copy_span] = toks[b, src: src + cfg.copy_span]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1

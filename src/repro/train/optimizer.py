@@ -1,0 +1,97 @@
+"""AdamW with ZeRO-1 sharding hooks and low-precision state (no optax).
+
+Optimizer state memory is the binding constraint for arctic-480b on a
+single 256-chip pod: fp32 (m, v) alone is 3.7 TB (14.6 GB/chip).  The
+``state_dtype`` knob stores moments in bf16 (7.3 GB/chip) — combined with
+fully-sharded storage this is what makes the train_4k cell fit; the dry-run
+memory analysis in EXPERIMENTS.md quantifies it.
+
+ZeRO-1 is purely a *sharding* concern under pjit: the state pytree gets an
+extra mesh-axis assignment over 'data' (see ``launch.sharding.zero1_spec``)
+and XLA partitions the elementwise update + inserts the param all-gather.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"  # 'float32' | 'bfloat16'
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def _state_dtype(cfg: AdamWConfig):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.state_dtype]
+
+
+def init_state(cfg: AdamWConfig, params) -> dict:
+    dt = _state_dtype(cfg)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_at(cfg: AdamWConfig, step) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state) -> Tuple[Any, dict]:
+    """One AdamW step.  Grads may be any float dtype; math in fp32."""
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    dt = _state_dtype(cfg)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mh = m32 / bc1
+        vh = v32 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(dt), v32.astype(dt)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,118 @@
+"""Anna KVS + executor cache: replication, gossip, elasticity, faults."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import AnnaKVS, ExecutorCache, LamportClock, LWWLattice, SetLattice
+
+
+def test_put_get_roundtrip():
+    kvs = AnnaKVS(num_nodes=4, replication=2)
+    clk = LamportClock("w")
+    kvs.put("k", LWWLattice(clk.tick(), 42))
+    assert kvs.get("k").reveal() == 42
+
+
+def test_async_replication_then_gossip_converges():
+    kvs = AnnaKVS(num_nodes=4, replication=3)
+    clk = LamportClock("w")
+    kvs.put("k", LWWLattice(clk.tick(), "v1"))
+    owners = kvs._owners("k")
+    # only the coordinator has it so far
+    have = [o for o in owners if "k" in kvs.nodes[o].store]
+    assert len(have) == 1
+    kvs.tick()
+    have = [o for o in owners if "k" in kvs.nodes[o].store]
+    assert len(have) == len(owners)
+
+
+def test_replica_failure_and_hinted_handoff():
+    kvs = AnnaKVS(num_nodes=3, replication=2, sync_replication=True)
+    clk = LamportClock("w")
+    kvs.put("k", LWWLattice(clk.tick(), "v1"))
+    owners = kvs._owners("k")
+    kvs.fail_node(owners[0])
+    # reads survive k-1 replica failures
+    assert kvs.get("k").reveal() == "v1"
+    # writes to the failed node are hinted and delivered on recovery
+    kvs.put("k", LWWLattice(clk.tick(), "v2"))
+    kvs.recover_node(owners[0])
+    kvs.tick()
+    assert kvs.nodes[owners[0]].store["k"].reveal() == "v2"
+
+
+def test_node_join_leave_preserves_data():
+    kvs = AnnaKVS(num_nodes=3, replication=2, sync_replication=True)
+    clk = LamportClock("w")
+    keys = [f"key-{i}" for i in range(40)]
+    for i, k in enumerate(keys):
+        kvs.put(k, LWWLattice(clk.tick(), i))
+    kvs.add_node("anna-new")
+    kvs.tick()
+    for i, k in enumerate(keys):
+        assert kvs.get_merged(k).reveal() == i
+    kvs.remove_node("anna-0")
+    kvs.tick()
+    for i, k in enumerate(keys):
+        assert kvs.get_merged(k).reveal() == i
+
+
+def test_selective_replication_hot_key():
+    kvs = AnnaKVS(num_nodes=4, replication=1)
+    clk = LamportClock("w")
+    kvs.set_replication("hot", 3)
+    kvs.put("hot", LWWLattice(clk.tick(), "x"))
+    kvs.tick()
+    holders = [n for n in kvs.nodes.values() if "hot" in n.store]
+    assert len(holders) == 3
+
+
+def test_cache_pushes_on_kvs_update():
+    """Anna's keyset index pushes updates to subscribed caches (§4.2)."""
+    kvs = AnnaKVS(num_nodes=2, replication=1)
+    clk = LamportClock("w")
+    kvs.put("k", LWWLattice(clk.tick(), "v1"))
+    cache = ExecutorCache("c0", kvs)
+    assert cache.read("k").reveal() == "v1"
+    cache.publish_keyset()
+    kvs.put("k", LWWLattice(clk.tick(), "v2"))
+    cache.tick()  # receives the push
+    assert cache.read_local("k").reveal() == "v2"
+
+
+def test_cache_write_back_flush():
+    kvs = AnnaKVS(num_nodes=2, replication=1)
+    cache = ExecutorCache("c0", kvs)
+    clk = LamportClock("w")
+    cache.write("k", LWWLattice(clk.tick(), "v"))
+    assert kvs.get("k") is None  # ack'd locally, not yet flushed
+    cache.tick()
+    assert kvs.get("k").reveal() == "v"
+
+
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 100)),
+                min_size=1, max_size=30))
+@settings(max_examples=50, deadline=None)
+def test_convergence_under_arbitrary_gossip(writes):
+    """All replicas converge to the same value for every key after ticks,
+    regardless of write interleaving (coordination-free convergence)."""
+    kvs = AnnaKVS(num_nodes=3, replication=3)
+    clk = LamportClock("w")
+    for key_i, val in writes:
+        kvs.put(f"k{key_i}", LWWLattice(clk.tick(), val))
+    for _ in range(3):
+        kvs.tick()
+    for key_i, _ in writes:
+        key = f"k{key_i}"
+        vals = {n.store[key].reveal() for n in kvs.nodes.values()
+                if key in n.store}
+        assert len(vals) == 1
+
+
+def test_set_lattice_registered_functions_pattern():
+    kvs = AnnaKVS(num_nodes=2, replication=2, sync_replication=True)
+    cur = kvs.get_merged("funcs") or SetLattice()
+    kvs.put("funcs", cur.merge(SetLattice.of(["f1"])))
+    cur = kvs.get_merged("funcs") or SetLattice()
+    kvs.put("funcs", cur.merge(SetLattice.of(["f2"])))
+    assert kvs.get_merged("funcs").reveal() == frozenset({"f1", "f2"})

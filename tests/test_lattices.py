@@ -1,0 +1,141 @@
+"""Property tests: lattice algebra (ACI laws) + vector-clock semantics.
+
+Coordination-free convergence (paper §2.2, §5.2) rests entirely on merges
+being Associative, Commutative and Idempotent.  Hypothesis sweeps random
+lattice values and checks the laws hold for every lattice type, plus the
+causal-lattice invariants (dominated-version pruning, sibling retention).
+"""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.lattices import (
+    CausalLattice,
+    GCounter,
+    LWWLattice,
+    MapLattice,
+    MaxIntLattice,
+    SetLattice,
+    VectorClock,
+)
+
+NODES = ["a", "b", "c", "d"]
+
+
+# -- strategies --------------------------------------------------------------
+
+ts_strategy = st.tuples(st.integers(0, 50), st.sampled_from(NODES))
+# (clock, node) uniquely identifies a write in Anna, so the payload is a
+# function of the timestamp — matching the real system's invariant.
+lww_strategy = st.builds(
+    lambda ts: LWWLattice(ts, ts[0] * 7 + ord(ts[1][0])), ts_strategy)
+maxint_strategy = st.builds(MaxIntLattice, st.integers(-100, 100))
+set_strategy = st.builds(lambda xs: SetLattice(frozenset(xs)),
+                         st.lists(st.integers(0, 20), max_size=6))
+vc_strategy = st.builds(
+    VectorClock,
+    st.dictionaries(st.sampled_from(NODES), st.integers(1, 8), max_size=4),
+)
+gcounter_strategy = st.builds(
+    GCounter,
+    st.dictionaries(st.sampled_from(NODES), st.integers(1, 20), max_size=4),
+)
+# same uniqueness invariant: one vector clock <-> one written value
+causal_strategy = st.builds(
+    lambda vc: CausalLattice.of(vc, sum(vc.entries().values())), vc_strategy)
+map_strategy = st.builds(
+    lambda d: MapLattice(d),
+    st.dictionaries(st.sampled_from(["x", "y", "z"]), lww_strategy, max_size=3),
+)
+
+ANY_LATTICE = st.one_of(lww_strategy, maxint_strategy, set_strategy,
+                        gcounter_strategy, causal_strategy, map_strategy)
+
+
+def _same_type(a, b, c):
+    return type(a) is type(b) is type(c)
+
+
+@given(st.one_of(
+    st.tuples(lww_strategy, lww_strategy, lww_strategy),
+    st.tuples(maxint_strategy, maxint_strategy, maxint_strategy),
+    st.tuples(set_strategy, set_strategy, set_strategy),
+    st.tuples(gcounter_strategy, gcounter_strategy, gcounter_strategy),
+    st.tuples(causal_strategy, causal_strategy, causal_strategy),
+    st.tuples(map_strategy, map_strategy, map_strategy),
+))
+@settings(max_examples=200)
+def test_merge_is_aci(triple):
+    a, b, c = triple
+    # associative
+    assert a.merge(b).merge(c) == a.merge(b.merge(c))
+    # commutative
+    assert a.merge(b) == b.merge(a)
+    # idempotent
+    assert a.merge(a) == a
+    # merge with self after merging others stays stable (absorption-ish)
+    ab = a.merge(b)
+    assert ab.merge(b) == ab
+
+
+@given(vc_strategy, vc_strategy, vc_strategy)
+@settings(max_examples=200)
+def test_vector_clock_lattice(a, b, c):
+    assert a.merge(b) == b.merge(a)
+    assert a.merge(a) == a
+    assert a.merge(b).merge(c) == a.merge(b.merge(c))
+    # join dominates both operands
+    j = a.merge(b)
+    assert j.dominates(a) and j.dominates(b)
+    # dominance is a partial order: antisymmetry on distinct clocks
+    if a.dominates(b) and b.dominates(a):
+        assert a == b
+    # concurrency is symmetric and exclusive with dominance
+    assert a.concurrent_with(b) == b.concurrent_with(a)
+    if a.concurrent_with(b):
+        assert not a.dominates(b) and not b.dominates(a)
+
+
+@given(vc_strategy, vc_strategy)
+@settings(max_examples=200)
+def test_causal_lattice_pruning(vc1, vc2):
+    v1 = sum(vc1.entries().values())
+    v2 = sum(vc2.entries().values())
+    lat = CausalLattice.of(vc1, v1).merge(CausalLattice.of(vc2, v2))
+    versions = lat.versions
+    # no version strictly dominates another (dominated ones are pruned)
+    for x in versions:
+        for y in versions:
+            if x is not y:
+                assert not x.vector_clock.strictly_dominates(y.vector_clock)
+    # concurrent updates are BOTH retained
+    if vc1.concurrent_with(vc2):
+        assert len(versions) == 2
+    # the revealed value is deterministic under merge order
+    lat2 = CausalLattice.of(vc2, v2).merge(CausalLattice.of(vc1, v1))
+    assert lat.reveal() == lat2.reveal()
+
+
+@given(st.lists(st.tuples(ts_strategy, st.integers()), min_size=1, max_size=8))
+@settings(max_examples=100)
+def test_lww_order_insensitive(writes):
+    """Any merge order converges to the max-timestamp value (paper §5.2)."""
+    lats = [LWWLattice(ts, v) for ts, v in writes]
+    fold_left = lats[0]
+    for l in lats[1:]:
+        fold_left = fold_left.merge(l)
+    fold_right = lats[-1]
+    for l in reversed(lats[:-1]):
+        fold_right = l.merge(fold_right)
+    assert fold_left == fold_right
+    expected = max(writes, key=lambda wv: wv[0])
+    assert fold_left.timestamp == expected[0]
+
+
+def test_gcounter_reveal():
+    c = GCounter().increment("a").increment("a").increment("b")
+    assert c.reveal() == 3
+    # merge of diverged replicas counts each node's max contribution once
+    r1 = c.increment("a")
+    r2 = c.increment("b").increment("b")
+    assert r1.merge(r2).reveal() == 6  # a:3, b:3

@@ -1,0 +1,153 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + no NaNs (the full configs are exercised only
+via the dry-run)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ARCH_IDS, Model, get_config
+
+RNG = np.random.default_rng(0)
+
+
+def make_batch(cfg, B=2, T=32):
+    batch = {
+        "tokens": jnp.asarray(RNG.integers(0, cfg.vocab, (B, T)), jnp.int32),
+        "labels": jnp.asarray(RNG.integers(0, cfg.vocab, (B, T)), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            RNG.normal(size=(B, T // cfg.enc_subsample, cfg.d_model)),
+            jnp.float32)
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        batch["patches"] = jnp.asarray(
+            RNG.normal(size=(B, cfg.frontend.n_positions, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 32
+    batch = make_batch(cfg, B, T)
+    logits = model.forward(params, batch)
+    assert logits.shape == (B, T, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_decreases_nothing_nan(arch):
+    from repro.train import AdamWConfig, init_state, make_train_step
+    cfg = get_config(arch, smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt_state = init_state(opt_cfg, params)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    batch = make_batch(cfg)
+    params, opt_state, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0
+    assert int(opt_state["step"]) == 1
+    # params actually moved
+    flat = jax.tree.leaves(params)
+    assert all(np.all(np.isfinite(np.asarray(x, np.float32))) for x in flat)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """Greedy decode after prefill == forward at the same positions."""
+    cfg = get_config(arch, smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, T = 2, 16
+    batch = make_batch(cfg, B, T)
+    logits_f = model.forward(params, batch)
+    logits_p, cache = model.prefill(params, batch)
+    # prefill's last-position logits match the full forward
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, -1], np.float32),
+        np.asarray(logits_f[:, -1], np.float32), atol=2e-2, rtol=2e-2)
+    # one decode step stays finite and has the right shape
+    tok = jnp.argmax(logits_p[:, -1:], axis=-1).astype(jnp.int32)
+    logits_d, cache2 = model.decode_step(params, tok, cache)
+    assert logits_d.shape == (B, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits_d, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_cover_all_shapes(arch):
+    from repro.models import SHAPES
+    cfg = get_config(arch)
+    model = Model(cfg)
+    for name, cell in SHAPES.items():
+        ok, why = model.runnable(cell)
+        if not ok:
+            assert name == "long_500k" and not cfg.subquadratic
+            continue
+        specs = model.input_specs(cell)
+        if cell.kind in ("train", "prefill"):
+            assert specs["tokens"].shape == (cell.global_batch, cell.seq_len)
+        else:
+            assert specs["tokens"].shape == (cell.global_batch, 1)
+            assert "cache" in specs
+
+
+def test_decode_matches_prefill_teacher_forcing():
+    """Dense family: decoding token-by-token reproduces prefill logits."""
+    cfg = get_config("llama3.2-3b", smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    B, T = 1, 8
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    full = model.forward(params, {"tokens": toks})
+    # prefill on the first token only, then feed the rest one by one
+    logits, cache = model.prefill(params, {"tokens": toks[:, :1]})
+    # cache buffers sized T: rebuild with the right max_len
+    cache_full = model.init_cache(B, T)
+    cache_full["k"] = jnp.zeros_like(cache_full["k"]).at[:, :, :, :1].set(cache["k"])
+    cache_full["v"] = jnp.zeros_like(cache_full["v"]).at[:, :, :, :1].set(cache["v"])
+    cache_full["length"] = cache["length"]
+    outs = [logits[:, -1]]
+    cache = cache_full
+    for t in range(1, T):
+        logits, cache = model.decode_step(params, toks[:, t: t + 1], cache)
+        outs.append(logits[:, -1])
+    stepwise = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stepwise, np.float32),
+                               np.asarray(full, np.float32),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_param_counts_match_published_sizes():
+    expected_b = {
+        "minitron-4b": (4.0, 5.5),
+        "llama3.2-3b": (3.2, 3.8),
+        "minicpm3-4b": (3.8, 4.7),
+        "granite-8b": (7.5, 8.6),
+        "pixtral-12b": (11.5, 13.0),
+        "recurrentgemma-2b": (2.5, 3.6),
+        "mamba2-1.3b": (1.2, 1.6),
+        "arctic-480b": (450.0, 500.0),
+        "granite-moe-3b-a800m": (2.8, 3.6),
+        "seamless-m4t-large-v2": (1.6, 2.4),
+    }
+    for arch, (lo, hi) in expected_b.items():
+        n = get_config(arch).param_count() / 1e9
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params():
+    cfg = get_config("arctic-480b")
+    active = cfg.active_param_count() / 1e9
+    # arctic: ~17B active (10B dense + 2 experts/layer)
+    assert 12 <= active <= 30, active
+    cfg2 = get_config("granite-moe-3b-a800m")
+    active2 = cfg2.active_param_count() / 1e9
+    assert 0.5 <= active2 <= 1.5, active2
