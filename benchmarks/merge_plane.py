@@ -1,0 +1,209 @@
+"""Merge-plane throughput: per-key merge paths vs one batched launch.
+
+Quantifies the PR-1 tentpole.  Replica repair of R replicas x K keys x D
+payload elements runs as ONE ``ops.lww_merge_many`` launch over packed
+(R, K, 1) Lamport planes and (R, K, D) payloads — the arena's steady
+state.  Two per-key baselines are timed against it:
+
+* ``perkey_launch`` — the non-batched *kernel* data plane: each key
+  folds its R replicas through (R-1) pairwise ``ops.lww_merge`` calls on
+  (1, D) rows.  This is what per-key merges cost once tensor state lives
+  on an accelerator (per-launch dispatch dominates), and is the headline
+  ``speedup`` (acceptance: >= 10x keys/sec at K >= 1024, D = 512).
+* ``perkey_python`` — the seed's Python-object path (store-dict lookup +
+  ``LWWLattice.merge`` per message).  Reported for context; it moves
+  references, never payload bytes, so on CPU it understates what a real
+  per-key store pays.
+
+Off TPU ``ops`` routes to the jit-compiled XLA mirror of the kernel
+(interpret-mode Pallas is a correctness harness, not a data plane);
+Mosaic timings need a real TPU.  Sweeps D in {128, 512, 2048} and R in
+{2, 4} at K = 1024 (smoke: tiny sizes).  Winners are cross-checked
+against the Python fold — bit-identical or the bench fails.  Also times
+the batched vector-clock classifier against per-pair ``VectorClock``
+dominance.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lattices import LWWLattice, VectorClock
+from repro.core.arena import vc_classify_batch
+from repro.kernels import ops
+
+from .common import emit
+
+
+def _pack(rng, R: int, K: int, D: int):
+    clocks = rng.integers(0, 1000, (R, K, 1)).astype(np.int32)
+    nodes = rng.integers(0, 8, (R, K, 1)).astype(np.int32)
+    vals = rng.normal(size=(R, K, D)).astype(np.float32)
+    return clocks, nodes, vals
+
+
+def _median_time(fn, iters: int) -> float:
+    fn()  # warm (jit compile)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bench_case(K: int, D: int, R: int, iters: int = 10, seed: int = 0) -> Dict[str, float]:
+    rng = np.random.default_rng(seed)
+    clocks, nodes, vals = _pack(rng, R, K, D)
+
+    # -- per-key python path: store-dict lookup + LWWLattice.merge fold
+    lattices = [
+        [LWWLattice((int(clocks[r, k, 0]), str(int(nodes[r, k, 0]))),
+                    vals[r, k]) for r in range(R)]
+        for k in range(K)
+    ]
+    store: Dict[str, LWWLattice] = {}
+
+    def per_key_python():
+        store.clear()
+        for k in range(K):
+            key = f"k{k}"
+            for r in range(R):
+                cur = store.get(key)
+                lat = lattices[k][r]
+                store[key] = lat if cur is None else cur.merge(lat)
+
+    t_python = _median_time(per_key_python, iters)
+
+    # -- per-key launch path: (R-1) pairwise ops.lww_merge per key, on a
+    # key subsample (launches are independent; keys/sec extrapolates)
+    K_sub = min(K, 64)
+    rows = [
+        [(jnp.asarray(clocks[r, k:k + 1]), jnp.asarray(nodes[r, k:k + 1]),
+          jnp.asarray(vals[r, k:k + 1])) for r in range(R)]
+        for k in range(K_sub)
+    ]
+
+    def per_key_launch():
+        for k in range(K_sub):
+            c, n, v = rows[k][0]
+            for r in range(1, R):
+                cr, nr, vr = rows[k][r]
+                v, c, n = ops.lww_merge(c, n, v, cr, nr, vr)
+            jax.block_until_ready(v)
+
+    t_launch = _median_time(per_key_launch, iters) * (K / K_sub)
+
+    # -- batched plane: one lww_merge_many launch over the packed
+    # (device-resident) planes — the arena steady state
+    jc = jnp.asarray(clocks)
+    jn = jnp.asarray(nodes)
+    jv = jnp.asarray(vals)
+    out = [None]
+
+    def batched():
+        out[0] = ops.lww_merge_many(jc, jn, jv)
+        jax.block_until_ready(out[0])
+
+    t_batched = _median_time(batched, iters)
+
+    # cross-check winners: batched == python fold, bit-identical
+    win_val, win_clock, _ = (np.asarray(x) for x in out[0])
+    for k in range(K):
+        want = store[f"k{k}"]
+        assert int(win_clock[k, 0]) == want.timestamp[0], (k, want.timestamp)
+        np.testing.assert_array_equal(win_val[k], want.value)
+
+    return {
+        "perkey_python_keys_per_s": K / t_python,
+        "perkey_launch_keys_per_s": K / t_launch,
+        "batched_keys_per_s": K / t_batched,
+        "speedup": t_launch / max(t_batched, 1e-12),
+        "speedup_vs_python": t_python / max(t_batched, 1e-12),
+        "t_batched_us": t_batched * 1e6,
+    }
+
+
+def bench_vc(K: int, N: int = 16, iters: int = 10, seed: int = 1) -> Dict[str, float]:
+    """Batched VC classify (packed steady state) vs per-pair Python.
+
+    ``pack_pairs_per_s`` prices the one-time densification of VectorClock
+    objects into (K, N) planes — the ingestion cost a dense-clock cache
+    pays once, not per comparison.
+    """
+    rng = np.random.default_rng(seed)
+    node_ids = [f"n{i}" for i in range(N)]
+    pairs = []
+    for _ in range(K):
+        a = VectorClock({n: int(rng.integers(1, 5)) for n in node_ids})
+        b = VectorClock({n: int(rng.integers(1, 5)) for n in node_ids})
+        pairs.append((a, b))
+
+    flags = [(a.dominates(b), b.dominates(a)) for a, b in pairs]
+    t_perpair = _median_time(
+        lambda: [(a.dominates(b), b.dominates(a)) for a, b in pairs], iters)
+
+    t_pack = _median_time(lambda: vc_classify_batch(pairs), iters)
+
+    cols = {n: i for i, n in enumerate(node_ids)}
+    mat_a = np.zeros((K, N), np.int32)
+    mat_b = np.zeros((K, N), np.int32)
+    for j, (a, b) in enumerate(pairs):
+        for nid, v in a.entries().items():
+            mat_a[j, cols[nid]] = v
+        for nid, v in b.entries().items():
+            mat_b[j, cols[nid]] = v
+    ja, jb = jnp.asarray(mat_a), jnp.asarray(mat_b)
+    out = [None]
+
+    def packed():
+        out[0] = ops.vc_join_classify(ja, jb)
+        jax.block_until_ready(out[0])
+
+    t_packed = _median_time(packed, iters)
+    adom, bdom = (np.asarray(x).reshape(-1) for x in out[0][1:])
+    for (want_a, want_b), got_a, got_b in zip(flags, adom, bdom):
+        assert want_a == bool(got_a) and want_b == bool(got_b)
+    return {
+        "perpair_pairs_per_s": K / t_perpair,
+        "packed_pairs_per_s": K / t_packed,
+        "pack_pairs_per_s": K / t_pack,
+        "speedup": t_perpair / max(t_packed, 1e-12),
+    }
+
+
+def main(smoke: bool = False) -> None:
+    K = 128 if smoke else 1024
+    iters = 3 if smoke else 10
+    dims = [128] if smoke else [128, 512, 2048]
+    reps = [2] if smoke else [2, 4]
+    for D in dims:
+        for R in reps:
+            r = bench_case(K, D, R, iters=iters)
+            emit(
+                f"merge_plane/lww K={K} D={D} R={R}",
+                r["t_batched_us"],
+                f"batched_keys_per_s={r['batched_keys_per_s']:.0f}"
+                f";perkey_launch_keys_per_s={r['perkey_launch_keys_per_s']:.0f}"
+                f";perkey_python_keys_per_s={r['perkey_python_keys_per_s']:.0f}"
+                f";speedup={r['speedup']:.1f}x"
+                f";speedup_vs_python={r['speedup_vs_python']:.1f}x",
+            )
+    v = bench_vc(K, iters=iters)
+    emit(
+        f"merge_plane/vc_classify K={K}",
+        1e6 * K / v["packed_pairs_per_s"],
+        f"packed_pairs_per_s={v['packed_pairs_per_s']:.0f}"
+        f";perpair_pairs_per_s={v['perpair_pairs_per_s']:.0f}"
+        f";pack_pairs_per_s={v['pack_pairs_per_s']:.0f}"
+        f";speedup={v['speedup']:.1f}x",
+    )
+
+
+if __name__ == "__main__":
+    main()

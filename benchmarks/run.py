@@ -10,6 +10,10 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
   fig8   prediction-serving pipeline   (3 stages, real smoke-scale model)
   fig9   Retwis                        (lww vs causal vs redis model)
   kernels  storage-layer Pallas merge micro
+  merge_plane  batched arena data plane vs per-key merges
+
+``--smoke`` runs only the kernel micro-benches (kernels + merge_plane)
+at tiny sizes — the fast perf-regression gate used by scripts/verify.sh.
 """
 
 from __future__ import annotations
@@ -19,7 +23,7 @@ import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from . import (
         fig1_composition,
         fig4_locality,
@@ -29,21 +33,31 @@ def main() -> None:
         fig8_prediction,
         fig9_retwis,
         kernels_micro,
+        merge_plane,
         table2_anomalies,
     )
 
+    args = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in args
     print("name,us_per_call,derived")
-    suites = [
-        ("fig1", fig1_composition.main),
-        ("fig4", fig4_locality.main),
-        ("fig5", fig5_gossip.main),
-        ("fig6", fig6_autoscaling.main),
-        ("fig7", fig7_consistency.main),
-        ("table2", table2_anomalies.main),
-        ("fig8", fig8_prediction.main),
-        ("fig9", fig9_retwis.main),
-        ("kernels", kernels_micro.main),
-    ]
+    if smoke:
+        suites = [
+            ("kernels", lambda: kernels_micro.main(K=64, D=256, R=2, iters=3)),
+            ("merge_plane", lambda: merge_plane.main(smoke=True)),
+        ]
+    else:
+        suites = [
+            ("fig1", fig1_composition.main),
+            ("fig4", fig4_locality.main),
+            ("fig5", fig5_gossip.main),
+            ("fig6", fig6_autoscaling.main),
+            ("fig7", fig7_consistency.main),
+            ("table2", table2_anomalies.main),
+            ("fig8", fig8_prediction.main),
+            ("fig9", fig9_retwis.main),
+            ("kernels", kernels_micro.main),
+            ("merge_plane", merge_plane.main),
+        ]
     failed = []
     for name, fn in suites:
         t0 = time.time()

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate: full pytest suite + kernel micro-bench smoke.
+#
+# The smoke pass runs the storage-layer merge benches (kernels +
+# merge_plane) at tiny sizes so perf regressions in the batched merge
+# plane fail fast (the benches cross-check kernel winners against the
+# Python oracle and assert on mismatch).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== kernel micro-bench smoke =="
+python -m benchmarks.run --smoke
+
+echo "verify: OK"

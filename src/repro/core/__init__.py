@@ -1,5 +1,14 @@
 """Cloudburst core: stateful FaaS with LDPC + distributed session consistency."""
 
+from .arena import (
+    LatticeArena,
+    MergeEngine,
+    NodeRegistry,
+    oracle_lww_fold,
+    try_reduce_lww,
+    vc_classify_batch,
+    vc_dominates_or_concurrent_batch,
+)
 from .cache import CacheFailure, ExecutorCache
 from .client import (
     CloudburstClient,
@@ -58,6 +67,13 @@ __all__ = [
     "LamportClock",
     "LatencyModel",
     "Lattice",
+    "LatticeArena",
+    "MergeEngine",
+    "NodeRegistry",
+    "oracle_lww_fold",
+    "try_reduce_lww",
+    "vc_classify_batch",
+    "vc_dominates_or_concurrent_batch",
     "LocalityPolicy",
     "LWWLattice",
     "MapLattice",

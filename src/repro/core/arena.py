@@ -1,0 +1,627 @@
+"""Batched tensor-lattice data plane: the LatticeArena / MergeEngine.
+
+Cloudburst's storage tier converges replicas purely by lattice merge
+(paper §2.2, §5.2), and for tensor-valued payloads (parameter shards, KV
+pages, metric vectors) that merge is the storage layer's compute hot-spot.
+The seed implementation did one-key-at-a-time Python merges on every data
+path — replica gossip (``StorageNode.drain_inbox``), cache flush/push
+ticks (``ExecutorCache.tick``) and read-repair (``AnnaKVS.get_merged``) —
+while the batched Pallas kernels (:mod:`repro.kernels.lww_merge`,
+:mod:`repro.kernels.vector_clock`) were reachable only through the
+side-door ``state/tensorstore``.  This module makes the merge plane a
+first-class batched subsystem.
+
+Architecture
+============
+
+``NodeRegistry``
+    Order-preserving intern table: node-id *strings* -> int32 ranks.
+    ``LWWLattice.merge`` breaks clock ties by comparing node ids as
+    strings; the kernels compare int32 ranks.  Ranks are indices into the
+    registry's *sorted* id list, so ``rank(a) >= rank(b)  <=>  a >= b``
+    and the kernel tie-break is bit-identical to the Python one.  When a
+    new id lands mid-stream the registry broadcasts a rank remap to every
+    subscribed arena, which rewrites its stored node planes in one
+    vectorized pass (rare: the node set is small and stable).
+
+``LatticeArena``
+    Columnar storage for tensor-valued LWW registers.  Keys are grouped
+    into *slabs* by (payload shape, dtype); each slab holds contiguous
+    ``(cap, D)`` value rows with parallel ``(cap, 1)`` int32 Lamport
+    clock / node-rank planes — exactly the layout
+    ``ops.lww_merge_many`` consumes, so a batched merge is one gather,
+    one kernel launch and one scatter instead of K Python object merges.
+
+``MergeEngine``
+    The façade every merge site routes through.  Tensor-valued
+    ``LWWLattice`` traffic is coalesced into ``ops.lww_merge_many``
+    launches (one per slab group per tick); everything else — opaque
+    Python payloads, Set/Map/Counter/Causal lattices — keeps the exact
+    per-key ``Lattice.merge`` path via ``MergeEngine.fallback``, so
+    semantics are unchanged.  ``MergeEngine.view`` is a MutableMapping
+    presenting the union of arena + fallback as an ordinary lattice dict,
+    which is what ``StorageNode.store`` / ``ExecutorCache.data`` expose.
+
+Vector-clock helpers (``vc_classify_batch`` and friends) densify
+``VectorClock`` pairs into ``(K, N)`` int32 matrices and classify
+dominance through ``ops.vc_join_classify`` — the causal-cut checks in
+``ExecutorCache._deps_covered`` ride these instead of per-entry dict
+comparisons.
+
+Shapes are padded to canonical buckets (K, D to powers of two, R to the
+next power of two) so the jit cache stays small; padding replicates the
+first candidate (LWW merge is idempotent) or zero rows whose winners are
+discarded, so results are unaffected.
+
+Once merges are batched arrays, sharding the KVS across devices and
+growing K is a mesh decision, not a rewrite — see ROADMAP "Open items"
+(device-sharded arena, multi-host gossip batches).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import weakref
+
+try:  # MutableMapping moved in 3.10
+    from collections.abc import MutableMapping
+except ImportError:  # pragma: no cover
+    from collections import MutableMapping  # type: ignore
+
+import numpy as np
+
+from .lattices import Lattice, LWWLattice, VectorClock
+
+_INT32_MAX = 2 ** 31
+
+
+# ---------------------------------------------------------------------------
+# Eligibility: which lattices ride the arena
+# ---------------------------------------------------------------------------
+
+
+# Dtypes jax silently downcasts with x64 disabled (the default): packing
+# them through the kernels would truncate payload bits, so they keep the
+# exact per-key Python path instead.
+_JAX_DOWNCAST_DTYPES = frozenset(
+    {"int64", "uint64", "float64", "complex128", "longdouble", "clongdouble"}
+)
+
+
+def tensor_payload(value: Any) -> Optional[np.ndarray]:
+    """Return the payload as an ndarray if it is dense tensor data the
+    batched plane can carry losslessly."""
+    arr: Optional[np.ndarray] = None
+    if isinstance(value, np.ndarray):
+        arr = value
+    elif type(value).__module__.startswith("jax") and hasattr(value, "dtype"):
+        try:
+            arr = np.asarray(value)
+        except Exception:
+            return None
+    if arr is None or arr.dtype.name in _JAX_DOWNCAST_DTYPES:
+        return None
+    if arr.dtype.kind in "biufc" or arr.dtype.name.startswith(("bfloat16", "float8")):
+        return arr
+    return None
+
+
+def is_arena_lww(lattice: Any) -> bool:
+    """True iff this lattice can live in the arena: a tensor-valued LWW
+    register whose Lamport pair fits the kernels' int32 planes."""
+    if not isinstance(lattice, LWWLattice):
+        return False
+    clock, node = lattice.timestamp
+    if not isinstance(clock, int) or not isinstance(node, str):
+        return False
+    if not 0 <= clock < _INT32_MAX:
+        return False
+    return tensor_payload(lattice.value) is not None
+
+
+def oracle_lww_fold(lattices: Sequence[LWWLattice]) -> LWWLattice:
+    """Pure-Python left fold of ``LWWLattice.merge`` — the equivalence
+    oracle the batched plane must match bit-for-bit."""
+    acc = lattices[0]
+    for lat in lattices[1:]:
+        acc = acc.merge(lat)
+    return acc
+
+
+def _bucket(n: int, minimum: int) -> int:
+    """Round up to a power-of-two bucket (>= minimum) to bound jit shapes."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Node registry: strings -> order-preserving int32 ranks
+# ---------------------------------------------------------------------------
+
+
+class NodeRegistry:
+    """Interns node-id strings as ranks in sorted order.
+
+    The sorted invariant is what makes the kernels' int tie-break agree
+    with Python's string tie-break.  Inserting a new id shifts the ranks
+    of ids that sort after it; subscribers (arenas) receive the old->new
+    rank remap and rewrite their stored node planes.
+    """
+
+    __slots__ = ("_ids", "_rank", "_subscribers")
+
+    def __init__(self) -> None:
+        self._ids: List[str] = []
+        self._rank: Dict[str, int] = {}
+        # weakrefs: a registry outlives nodes/caches (it is tier-wide), so
+        # strong refs would pin every removed node's arena forever
+        self._subscribers: List["weakref.ref[LatticeArena]"] = []
+
+    def subscribe(self, arena: "LatticeArena") -> None:
+        self._subscribers.append(weakref.ref(arena))
+
+    def rank(self, node_id: str) -> int:
+        return self._rank[node_id]
+
+    def node_id(self, rank: int) -> str:
+        return self._ids[rank]
+
+    def __len__(self) -> int:
+        return len(self._ids)
+
+    def ensure(self, node_ids: Sequence[str]) -> None:
+        """Intern any unseen ids; remap subscribers if ranks shifted."""
+        fresh = {nid for nid in node_ids if nid not in self._rank}
+        if not fresh:
+            return
+        old = self._ids
+        merged = sorted(set(old) | fresh)
+        new_rank = {nid: i for i, nid in enumerate(merged)}
+        remap = (
+            np.asarray([new_rank[nid] for nid in old], np.int32)
+            if old else None
+        )
+        self._ids = merged
+        self._rank = new_rank
+        if remap is not None:
+            alive = []
+            for ref in self._subscribers:
+                arena = ref()
+                if arena is not None:
+                    arena._remap_ranks(remap)
+                    alive.append(ref)
+            self._subscribers = alive
+
+
+# ---------------------------------------------------------------------------
+# Arena slabs: contiguous (K, D) payloads + (K, 1) Lamport planes
+# ---------------------------------------------------------------------------
+
+_GroupKey = Tuple[Tuple[int, ...], str]  # (payload shape, dtype name)
+
+
+class _Slab:
+    __slots__ = ("shape", "dtype", "dim", "vals", "clocks", "nodes", "rows",
+                 "row_keys")
+
+    _INITIAL_CAP = 8
+
+    def __init__(self, shape: Tuple[int, ...], dtype: np.dtype):
+        self.shape = shape
+        self.dtype = dtype
+        self.dim = int(np.prod(shape)) if shape else 1
+        cap = self._INITIAL_CAP
+        self.vals = np.zeros((cap, self.dim), dtype)
+        self.clocks = np.zeros((cap, 1), np.int32)
+        self.nodes = np.zeros((cap, 1), np.int32)
+        self.rows: Dict[str, int] = {}
+        self.row_keys: List[str] = []  # row index -> key (O(1) drop)
+
+    def _alloc(self, key: str) -> int:
+        row = self.rows.get(key)
+        if row is not None:
+            return row
+        row = len(self.rows)
+        if row >= self.vals.shape[0]:
+            new_cap = self.vals.shape[0] * 2
+            for name in ("vals", "clocks", "nodes"):
+                old = getattr(self, name)
+                grown = np.zeros((new_cap,) + old.shape[1:], old.dtype)
+                grown[: old.shape[0]] = old
+                setattr(self, name, grown)
+        self.rows[key] = row
+        self.row_keys.append(key)
+        return row
+
+    def set_row(self, key: str, clock: int, rank: int, flat: np.ndarray) -> None:
+        row = self._alloc(key)
+        self.vals[row] = flat
+        self.clocks[row, 0] = clock
+        self.nodes[row, 0] = rank
+
+    def drop(self, key: str) -> None:
+        """Remove a key, keeping rows dense (swap the last row in)."""
+        row = self.rows.pop(key)
+        last = len(self.rows)
+        if row != last:
+            last_key = self.row_keys[last]
+            self.vals[row] = self.vals[last]
+            self.clocks[row] = self.clocks[last]
+            self.nodes[row] = self.nodes[last]
+            self.rows[last_key] = row
+            self.row_keys[row] = last_key
+        self.row_keys.pop()
+
+
+class LatticeArena:
+    """Columnar tensor-LWW storage grouped into shape/dtype slabs."""
+
+    def __init__(self, registry: NodeRegistry):
+        self.registry = registry
+        self._slabs: Dict[_GroupKey, _Slab] = {}
+        self._key_group: Dict[str, _GroupKey] = {}
+        # memoized LWWLattice per key so repeated reads cost a dict hit,
+        # not an O(D) payload copy; invalidated on any row write
+        self._materialized: Dict[str, LWWLattice] = {}
+        registry.subscribe(self)
+
+    # -- plumbing -------------------------------------------------------------
+    @staticmethod
+    def group_of(arr: np.ndarray) -> _GroupKey:
+        return (tuple(arr.shape), arr.dtype.name)
+
+    def _remap_ranks(self, remap: np.ndarray) -> None:
+        for slab in self._slabs.values():
+            slab.nodes = remap[slab.nodes].astype(np.int32)
+        self._materialized.clear()  # conservative: rank planes just moved
+
+    def slab_for(self, group: _GroupKey, arr: np.ndarray) -> _Slab:
+        slab = self._slabs.get(group)
+        if slab is None:
+            slab = _Slab(tuple(arr.shape), arr.dtype)
+            self._slabs[group] = slab
+        return slab
+
+    def group_key_of(self, key: str) -> Optional[_GroupKey]:
+        return self._key_group.get(key)
+
+    # -- mapping-style access -------------------------------------------------
+    def __contains__(self, key: str) -> bool:
+        return key in self._key_group
+
+    def __len__(self) -> int:
+        return len(self._key_group)
+
+    def keys(self):
+        return self._key_group.keys()
+
+    def set(self, key: str, lattice: LWWLattice) -> None:
+        """Raw overwrite (no merge) — routing/packing only."""
+        arr = tensor_payload(lattice.value)
+        assert arr is not None, "arena.set requires a tensor payload"
+        group = self.group_of(arr)
+        prev = self._key_group.get(key)
+        if prev is not None and prev != group:
+            self._slabs[prev].drop(key)
+        clock, node_id = lattice.timestamp
+        self.registry.ensure((node_id,))
+        slab = self.slab_for(group, arr)
+        slab.set_row(key, clock, self.registry.rank(node_id), arr.reshape(-1))
+        self._key_group[key] = group
+        self._materialized.pop(key, None)
+
+    def set_raw(self, key: str, group: _GroupKey, clock: int, rank: int,
+                flat: np.ndarray) -> None:
+        prev = self._key_group.get(key)
+        if prev is not None and prev != group:
+            self._slabs[prev].drop(key)
+        self._slabs[group].set_row(key, clock, rank, flat)
+        self._key_group[key] = group
+        self._materialized.pop(key, None)
+
+    def get(self, key: str) -> Optional[LWWLattice]:
+        """Materialize the register (payload copied: lattices are frozen
+        values, and the backing row mutates on future merges).  Repeat
+        reads hit the memo, so only the first read after a write copies."""
+        lat = self._materialized.get(key)
+        if lat is not None:
+            return lat
+        group = self._key_group.get(key)
+        if group is None:
+            return None
+        slab = self._slabs[group]
+        row = slab.rows[key]
+        value = slab.vals[row].copy().reshape(slab.shape)
+        ts = (int(slab.clocks[row, 0]),
+              self.registry.node_id(int(slab.nodes[row, 0])))
+        lat = LWWLattice(ts, value)
+        self._materialized[key] = lat
+        return lat
+
+    def row_of(self, key: str) -> Optional[Tuple[int, int, np.ndarray]]:
+        """(clock, rank, flat-view) of the stored row — no copy."""
+        group = self._key_group.get(key)
+        if group is None:
+            return None
+        slab = self._slabs[group]
+        row = slab.rows[key]
+        return (int(slab.clocks[row, 0]), int(slab.nodes[row, 0]),
+                slab.vals[row])
+
+    def delete(self, key: str) -> bool:
+        group = self._key_group.pop(key, None)
+        if group is None:
+            return False
+        self._slabs[group].drop(key)
+        self._materialized.pop(key, None)
+        return True
+
+
+# ---------------------------------------------------------------------------
+# The merge engine: batched tensor plane + per-key fallback
+# ---------------------------------------------------------------------------
+
+
+class LatticeStore(MutableMapping):
+    """Dict-like view over a MergeEngine (arena ∪ fallback).
+
+    ``store[key] = lattice`` is a raw overwrite (matching the dict it
+    replaces); merging goes through ``MergeEngine.merge_one/merge_batch``.
+    """
+
+    __slots__ = ("_engine",)
+
+    def __init__(self, engine: "MergeEngine"):
+        self._engine = engine
+
+    def __getitem__(self, key: str) -> Lattice:
+        value = self._engine.get(key)
+        if value is None:
+            raise KeyError(key)
+        return value
+
+    def __setitem__(self, key: str, value: Lattice) -> None:
+        self._engine.set(key, value)
+
+    def __delitem__(self, key: str) -> None:
+        if not self._engine.delete(key):
+            raise KeyError(key)
+
+    def __iter__(self):
+        yield from self._engine.fallback
+        yield from self._engine.arena.keys()
+
+    def __len__(self) -> int:
+        return len(self._engine.fallback) + len(self._engine.arena)
+
+    def __contains__(self, key) -> bool:  # avoid __getitem__ materialization
+        return key in self._engine.fallback or key in self._engine.arena
+
+
+class MergeEngine:
+    """Routes lattice merges: tensor-LWW traffic through the batched
+    kernels, everything else through per-key ``Lattice.merge``."""
+
+    def __init__(self, registry: Optional[NodeRegistry] = None):
+        self.registry = registry if registry is not None else NodeRegistry()
+        self.arena = LatticeArena(self.registry)
+        self.fallback: Dict[str, Lattice] = {}
+        self.view = LatticeStore(self)
+        # telemetry: how much traffic actually batched
+        self.launches = 0
+        self.batched_keys = 0
+        self.fallback_merges = 0
+
+    # -- point ops -------------------------------------------------------------
+    def get(self, key: str) -> Optional[Lattice]:
+        value = self.fallback.get(key)
+        if value is not None:
+            return value
+        return self.arena.get(key)
+
+    def set(self, key: str, value: Lattice) -> None:
+        if is_arena_lww(value):
+            self.fallback.pop(key, None)
+            self.arena.set(key, value)
+        else:
+            self.arena.delete(key)
+            self.fallback[key] = value
+
+    def delete(self, key: str) -> bool:
+        if self.fallback.pop(key, None) is not None:
+            return True
+        return self.arena.delete(key)
+
+    def merge_one(self, key: str, value: Lattice) -> Lattice:
+        """Per-key merge — the semantics the batched plane must match."""
+        cur = self.get(key)
+        merged = value if cur is None else cur.merge(value)
+        self.fallback_merges += cur is not None
+        self.set(key, merged)
+        return merged
+
+    # -- the batched plane ------------------------------------------------------
+    def merge_batch(self, items: Sequence[Tuple[str, Lattice]]) -> int:
+        """Apply a batch of (key, lattice) merges.
+
+        Tensor-valued LWW entries coalesce into one
+        ``ops.lww_merge_many`` launch per payload group; keys touching
+        the fallback store (opaque payloads, non-LWW lattices, or a
+        mid-batch payload-shape change) merge per-key in item order.
+        Results are order-independent either way (merge is ACI).
+        """
+        per_key: Dict[str, List[Tuple[str, Lattice]]] = {}
+        ineligible: Dict[str, bool] = {}
+        for key, value in items:
+            per_key.setdefault(key, []).append((key, value))
+            if not is_arena_lww(value) or key in self.fallback:
+                ineligible[key] = True
+        groups: Dict[_GroupKey, Dict[str, List[LWWLattice]]] = {}
+        for key, kv_items in per_key.items():
+            if not ineligible.get(key):
+                cands = [v for _, v in kv_items]
+                group = self.arena.group_of(tensor_payload(cands[0].value))
+                stored = self.arena.group_key_of(key)
+                if all(self.arena.group_of(tensor_payload(v.value)) == group
+                       for v in cands[1:]) and stored in (None, group):
+                    groups.setdefault(group, {})[key] = cands
+                    continue
+            for k, v in kv_items:  # payload changed shape/dtype: python path
+                self.merge_one(k, v)
+        for group, keyed in groups.items():
+            self._launch_group(group, keyed)
+        return len(items)
+
+    def _launch_group(self, group: _GroupKey,
+                      keyed: Dict[str, List[LWWLattice]]) -> None:
+        from ..kernels import ops  # deferred: keep core importable sans jax
+
+        node_ids = [lat.timestamp[1] for cands in keyed.values()
+                    for lat in cands]
+        self.registry.ensure(node_ids)  # before reading stored ranks
+        sample = tensor_payload(next(iter(keyed.values()))[0].value)
+        slab = self.arena.slab_for(group, sample)
+        D = slab.dim
+
+        candidates: List[List[Tuple[int, int, np.ndarray]]] = []
+        keys = list(keyed)
+        for key in keys:
+            cands = [
+                (lat.timestamp[0], self.registry.rank(lat.timestamp[1]),
+                 tensor_payload(lat.value).reshape(-1))
+                for lat in keyed[key]
+            ]
+            stored = self.arena.row_of(key)
+            if stored is not None:
+                cands.insert(0, stored)  # fold starts from the stored value
+            candidates.append(cands)
+
+        R = max(len(c) for c in candidates)
+        if R == 1:  # nothing to merge against: plain insert
+            for key, cands in zip(keys, candidates):
+                clock, rank, flat = cands[0]
+                self.arena.set_raw(key, group, clock, rank, flat)
+            return
+
+        K = len(keys)
+        Rp, Kp, Dp = _bucket(R, 2), _bucket(K, 8), _bucket(D, 128)
+        clocks = np.zeros((Rp, Kp, 1), np.int32)
+        nodes = np.zeros((Rp, Kp, 1), np.int32)
+        vals = np.zeros((Rp, Kp, Dp), slab.dtype)
+        for j, cands in enumerate(candidates):
+            for r in range(Rp):
+                clock, rank, flat = cands[r] if r < len(cands) else cands[0]
+                clocks[r, j, 0] = clock
+                nodes[r, j, 0] = rank
+                vals[r, j, :D] = flat
+
+        win_val, win_clock, win_node = ops.lww_merge_many(clocks, nodes, vals)
+        win_val = np.asarray(win_val)
+        win_clock = np.asarray(win_clock)
+        win_node = np.asarray(win_node)
+        for j, key in enumerate(keys):
+            self.arena.set_raw(key, group, int(win_clock[j, 0]),
+                               int(win_node[j, 0]), win_val[j, :D])
+        self.launches += 1
+        self.batched_keys += K
+
+
+# ---------------------------------------------------------------------------
+# Batched R-replica reduction (the get_merged read-repair path)
+# ---------------------------------------------------------------------------
+
+
+def try_reduce_lww(lattices: Sequence[Lattice]) -> Optional[LWWLattice]:
+    """Reduce R replica values of one key through ``ops.lww_merge_many``.
+
+    Returns None when the replicas are not uniformly tensor-valued LWW
+    registers of one shape/dtype (callers then fold ``Lattice.merge``).
+    Node ranking is per-call (sorted ids), so no registry is needed and
+    the tie-break still matches the string comparison exactly.
+    """
+    if len(lattices) < 2:
+        return None
+    arrays = []
+    for lat in lattices:
+        if not is_arena_lww(lat):
+            return None
+        arrays.append(tensor_payload(lat.value))
+    shape, dtype = arrays[0].shape, arrays[0].dtype
+    if any(a.shape != shape or a.dtype != dtype for a in arrays[1:]):
+        return None
+
+    from ..kernels import ops
+
+    ids = sorted({lat.timestamp[1] for lat in lattices})
+    rank = {nid: i for i, nid in enumerate(ids)}
+    R = len(lattices)
+    D = int(np.prod(shape)) if shape else 1
+    Rp, Dp = _bucket(R, 2), _bucket(D, 128)
+    clocks = np.zeros((Rp, 1, 1), np.int32)
+    nodes = np.zeros((Rp, 1, 1), np.int32)
+    vals = np.zeros((Rp, 1, Dp), dtype)
+    for r in range(Rp):
+        lat = lattices[r] if r < R else lattices[0]
+        clocks[r, 0, 0] = lat.timestamp[0]
+        nodes[r, 0, 0] = rank[lat.timestamp[1]]
+        vals[r, 0, :D] = tensor_payload(lat.value).reshape(-1)
+    win_val, win_clock, win_node = ops.lww_merge_many(clocks, nodes, vals)
+    ts = (int(np.asarray(win_clock)[0, 0]), ids[int(np.asarray(win_node)[0, 0])])
+    value = np.asarray(win_val)[0, :D].astype(dtype, copy=True).reshape(shape)
+    return LWWLattice(ts, value)
+
+
+# ---------------------------------------------------------------------------
+# Batched vector-clock dominance (the causal-cut path)
+# ---------------------------------------------------------------------------
+
+
+def vc_classify_batch(
+    pairs: Sequence[Tuple[VectorClock, VectorClock]],
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Classify K (a, b) VectorClock pairs through ``ops.vc_join_classify``.
+
+    Returns bool arrays (a_dominates_b, b_dominates_a) of length K.  The
+    pairs are densified over the union of their node ids; missing entries
+    are zero, exactly the VectorClock convention.
+    """
+    K = len(pairs)
+    if K == 0:
+        return np.zeros(0, bool), np.zeros(0, bool)
+    ids = sorted({
+        nid for a, b in pairs
+        for nid in (*a.entries().keys(), *b.entries().keys())
+    })
+    col = {nid: i for i, nid in enumerate(ids)}
+    Kp, Np = _bucket(K, 8), _bucket(max(len(ids), 1), 8)
+    mat_a = np.zeros((Kp, Np), np.int32)
+    mat_b = np.zeros((Kp, Np), np.int32)
+    for j, (a, b) in enumerate(pairs):
+        for nid, v in a.entries().items():
+            mat_a[j, col[nid]] = v
+        for nid, v in b.entries().items():
+            mat_b[j, col[nid]] = v
+
+    from ..kernels import ops
+
+    _, adom, bdom = ops.vc_join_classify(mat_a, mat_b)
+    return (np.asarray(adom).reshape(-1)[:K].astype(bool),
+            np.asarray(bdom).reshape(-1)[:K].astype(bool))
+
+
+def vc_dominates_or_concurrent_batch(
+    pairs: Sequence[Tuple[VectorClock, VectorClock]],
+) -> np.ndarray:
+    """For each (a, b): a.dominates(b) or a.concurrent_with(b).
+
+    This is the causal-cut readability predicate
+    (``CausalLattice.dominates_or_concurrent``): reading a cannot violate
+    the dependency lower bound b.  With the classify flags it reduces to
+    ``a_dom_b | ~b_dom_a`` (equal clocks dominate; only b strictly above
+    a fails).
+    """
+    adom, bdom = vc_classify_batch(pairs)
+    return adom | ~bdom

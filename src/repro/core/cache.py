@@ -20,6 +20,7 @@ from __future__ import annotations
 from collections import defaultdict
 from typing import Dict, List, Optional, Set, Tuple
 
+from .arena import MergeEngine, vc_dominates_or_concurrent_batch
 from .kvs import AnnaKVS
 from .lattices import CausalLattice, Lattice, LWWLattice
 from .netsim import NetworkProfile, VirtualClock, DEFAULT_PROFILE
@@ -39,7 +40,11 @@ class ExecutorCache:
         self.cache_id = cache_id
         self.kvs = kvs
         self.profile = profile
-        self.data: Dict[str, Lattice] = {}
+        # arena-backed local store: tensor-valued LWW entries live in
+        # contiguous rows and merge through the batched kernels; the
+        # registry is shared with the KVS so node ranks are comparable
+        self.engine = MergeEngine(kvs.registry)
+        self.data = self.engine.view
         self.pending_flush: List[Tuple[str, Lattice]] = []
         # (dag_id, key) -> pinned lattice version
         self.snapshots: Dict[Tuple[str, str], Lattice] = {}
@@ -88,26 +93,47 @@ class ExecutorCache:
                 # Buffer until the cut can be maintained (bolt-on write buffer)
                 self.pending_causal.append((key, value))
                 return self.data.get(key, value)
-        cur = self.data.get(key)
-        merged = value if cur is None else cur.merge(value)
-        self.data[key] = merged
-        return merged
+        return self.engine.merge_one(key, value)
 
     def _deps_covered(self, value: CausalLattice, depth: int = 8) -> bool:
         """Causal cut check: every dependency present at >= its clock.
 
-        Dependencies are installed *transitively* through the same check —
-        a dep fetched from the KVS only lands in the cache once its own
-        dependency closure is covered (bolt-on's causal-cut invariant);
-        otherwise the whole update stays buffered.
+        The dominance comparisons for already-held dependencies are
+        batched through ``ops.vc_join_classify`` (one densified (K, N)
+        launch for all of this update's deps); only deps the batch cannot
+        cover fall to the per-dep fetch path.  Dependencies are installed
+        *transitively* through the same check — a dep fetched from the
+        KVS only lands in the cache once its own dependency closure is
+        covered (bolt-on's causal-cut invariant); otherwise the whole
+        update stays buffered.
         """
-        for version in value.versions:
-            for dep_key, dep_vc in version.dependencies:
-                if not self._ensure_dep(dep_key, dep_vc, depth):
-                    return False
+        deps = [
+            (dep_key, dep_vc)
+            for version in value.versions
+            for dep_key, dep_vc in version.dependencies
+        ]
+        if not deps:
+            return True
+        covered = [False] * len(deps)
+        held_pairs, held_idx = [], []
+        for i, (dep_key, dep_vc) in enumerate(deps):
+            held = self.data.get(dep_key)
+            if isinstance(held, CausalLattice):
+                held_pairs.append((held.joined_clock(), dep_vc))
+                held_idx.append(i)
+        if held_pairs:
+            flags = vc_dominates_or_concurrent_batch(held_pairs)
+            for i, ok in zip(held_idx, flags):
+                covered[i] = bool(ok)
+        for i, (dep_key, dep_vc) in enumerate(deps):
+            if not covered[i] and not self._ensure_dep(dep_key, dep_vc, depth):
+                return False
         return True
 
     def _ensure_dep(self, dep_key: str, dep_vc, depth: int) -> bool:
+        # single-pair checks stay pure Python: a K=1 kernel dispatch costs
+        # more than the dict comparison it would replace (the batched
+        # classifier earns its keep in _deps_covered, where K = #deps)
         held = self.data.get(dep_key)
         if isinstance(held, CausalLattice) and held.dominates_or_concurrent(dep_vc):
             return True
@@ -152,17 +178,30 @@ class ExecutorCache:
             return
         rng = self.kvs.rng
         still: List[Tuple[str, Lattice]] = []
+        flush_now: List[Tuple[str, Lattice]] = []
         for key, value in self.pending_flush:
             if defer_prob > 0 and rng.random() < defer_prob:
                 still.append((key, value))
             else:
-                self.kvs.put(key, value, clock=None)  # async: no session latency
+                flush_now.append((key, value))
+        if flush_now:
+            # async: no session latency; one batched coordinator merge
+            # per storage node instead of per-key puts.  pending_flush is
+            # only trimmed after the batch lands: a no-live-replica error
+            # leaves every write queued for retry after recovery (merge
+            # idempotence makes re-flushing already-applied items safe).
+            self.kvs.put_many(flush_now, clock=None)
         self.pending_flush = still
+        push_now: List[Tuple[str, Lattice]] = []
         for key, value in self.kvs.drain_cache_pushes(self.cache_id):
             if defer_prob > 0 and rng.random() < defer_prob:
-                self.kvs._cache_pushes[self.cache_id].append((key, value))
+                self.kvs.defer_cache_push(self.cache_id, key, value)
+            elif isinstance(value, CausalLattice):
+                self.insert(key, value)  # causal-cut check stays per-key
             else:
-                self.insert(key, value)
+                push_now.append((key, value))
+        if push_now:
+            self.engine.merge_batch(push_now)
         still_pending: List[Tuple[str, CausalLattice]] = []
         for key, value in self.pending_causal:
             if self._deps_covered(value):

@@ -136,9 +136,9 @@ def device_push_sum(values: jax.Array, rounds: int, seed: int = 0) -> jax.Array:
     rng = np.random.default_rng(seed)
     perms = [rng.permutation(n) for _ in range(rounds)]
 
-    mesh = jax.make_mesh(
-        (n,), ("i",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    from ..launch.mesh import make_auto_mesh
+
+    mesh = make_auto_mesh((n,), ("i",))
 
     def body(x):
         v = x.reshape(())

@@ -26,6 +26,7 @@ import random
 from collections import defaultdict
 from typing import Dict, List, Optional, Set, Tuple
 
+from .arena import MergeEngine, NodeRegistry, try_reduce_lww
 from .lattices import Lattice
 from .netsim import NetworkProfile, VirtualClock, DEFAULT_PROFILE
 
@@ -35,21 +36,25 @@ def _hash(s: str) -> int:
 
 
 class StorageNode:
-    """One Anna storage node: a lattice map + gossip inbox."""
+    """One Anna storage node: an arena-backed lattice map + gossip inbox.
 
-    def __init__(self, node_id: str):
+    Tensor-valued LWW payloads live in the node's :class:`MergeEngine`
+    arena (contiguous (K, D) value rows with (K, 1) Lamport planes);
+    ``store`` is the dict-like view over arena + fallback, so callers
+    keep ordinary mapping semantics.
+    """
+
+    def __init__(self, node_id: str, registry: Optional[NodeRegistry] = None):
         self.node_id = node_id
-        self.store: Dict[str, Lattice] = {}
+        self.engine = MergeEngine(registry)
+        self.store = self.engine.view
         self.inbox: List[Tuple[str, Lattice]] = []  # pending gossip
         self.alive = True
         self.puts = 0
         self.gets = 0
 
     def merge_in(self, key: str, value: Lattice) -> Lattice:
-        cur = self.store.get(key)
-        merged = value if cur is None else cur.merge(value)
-        self.store[key] = merged
-        return merged
+        return self.engine.merge_one(key, value)
 
     def drain_inbox(self, rng: Optional[random.Random] = None,
                     defer_prob: float = 0.0) -> int:
@@ -57,17 +62,21 @@ class StorageNode:
 
         Out-of-order delivery is safe *because* values are lattices: merge
         is ACI, so replicas converge regardless of interleaving (§2.2).
+        The non-deferred items are applied as ONE batch: tensor-valued
+        LWW traffic coalesces into a single ``ops.lww_merge_many`` launch
+        per payload group instead of per-key Python merges.
         """
         deferred: List[Tuple[str, Lattice]] = []
-        n = 0
+        batch: List[Tuple[str, Lattice]] = []
         for key, value in self.inbox:
             if rng is not None and defer_prob > 0 and rng.random() < defer_prob:
                 deferred.append((key, value))
             else:
-                self.merge_in(key, value)
-                n += 1
+                batch.append((key, value))
         self.inbox = deferred
-        return n
+        if batch:
+            self.engine.merge_batch(batch)
+        return len(batch)
 
 
 class AnnaKVS:
@@ -86,6 +95,9 @@ class AnnaKVS:
         self.replication = replication
         self.sync_replication = sync_replication
         self.rng = random.Random(profile.seed if hasattr(profile, "seed") else 0)
+        # one node-id intern table for the whole tier, so arena node ranks
+        # are comparable across storage nodes and executor caches
+        self.registry = NodeRegistry()
         self.nodes: Dict[str, StorageNode] = {}
         self._ring: List[Tuple[int, str]] = []  # (hash, node_id), sorted
         self._key_replication: Dict[str, int] = {}  # selective replication
@@ -99,7 +111,7 @@ class AnnaKVS:
     # -- membership -----------------------------------------------------------
     def add_node(self, node_id: str) -> None:
         assert node_id not in self.nodes
-        self.nodes[node_id] = StorageNode(node_id)
+        self.nodes[node_id] = StorageNode(node_id, self.registry)
         for v in range(self.VNODES):
             bisect.insort(self._ring, (_hash(f"{node_id}#{v}"), node_id))
         # New owner: existing replicas re-gossip their keys so ownership
@@ -150,6 +162,41 @@ class AnnaKVS:
         self._key_replication[key] = k
 
     # -- data path --------------------------------------------------------------
+    def _route_put(
+        self, key: str, value: Lattice, sync: bool,
+        clock: Optional[VirtualClock],
+    ) -> Tuple[List[str], List[str]]:
+        """Shared per-key put routing: (merge targets, gossip targets).
+
+        Appends hinted handoffs for dead owners and the cache-index
+        pushes (paper §4.2); raises when no live replica exists.  Both
+        ``put`` and ``put_many`` route through here so the per-key and
+        batched planes cannot drift.
+        """
+        owners = self._owners(key)
+        if clock is not None:
+            clock.advance(
+                self.profile.sample(self.profile.kvs_op, value.byte_size())
+            )
+        merge_targets: List[str] = []
+        gossip_targets: List[str] = []
+        for owner in owners:
+            node = self.nodes[owner]
+            if not node.alive:
+                self._hints[owner].append((key, value))
+                continue
+            if not merge_targets or sync:
+                merge_targets.append(owner)
+                node.puts += 1
+            else:
+                gossip_targets.append(owner)  # async gossip
+        if not merge_targets:
+            raise RuntimeError(f"no live replica for {key}")
+        # push-based cache invalidation/update (paper §4.2)
+        for cache_id in self._cache_index.get(key, ()):
+            self._cache_pushes[cache_id].append((key, value))
+        return merge_targets, gossip_targets
+
     def put(
         self,
         key: str,
@@ -160,31 +207,51 @@ class AnnaKVS:
         """``sync=True`` writes all replicas before acking (client puts
         block for durability); the default async path acks after the
         coordinator and gossips the rest (cache flush path)."""
-        owners = self._owners(key)
-        if clock is not None:
-            clock.advance(
-                self.profile.sample(self.profile.kvs_op, value.byte_size())
-            )
         sync = self.sync_replication if sync is None else sync
+        merge_targets, gossip_targets = self._route_put(key, value, sync, clock)
         merged: Optional[Lattice] = None
-        coordinator_seen = False
-        for i, owner in enumerate(owners):
-            node = self.nodes[owner]
-            if not node.alive:
-                self._hints[owner].append((key, value))
-                continue
-            if not coordinator_seen or sync:
-                merged = node.merge_in(key, value)
-                node.puts += 1
-                coordinator_seen = True
-            else:
-                node.inbox.append((key, value))  # async gossip
-        if merged is None:
-            raise RuntimeError(f"no live replica for {key}")
-        # push-based cache invalidation/update (paper §4.2)
-        for cache_id in self._cache_index.get(key, ()):
-            self._cache_pushes[cache_id].append((key, value))
+        for owner in merge_targets:
+            merged = self.nodes[owner].merge_in(key, value)
+        for owner in gossip_targets:
+            self.nodes[owner].inbox.append((key, value))
         return merged
+
+    def put_many(
+        self,
+        items: List[Tuple[str, Lattice]],
+        clock: Optional[VirtualClock] = None,
+        sync: Optional[bool] = None,
+    ) -> int:
+        """Batched multi-key put — the cache write-back flush path.
+
+        Per-key routing is ``_route_put``, identical to ``put``; the
+        coordinator-side merges are coalesced per storage node and
+        applied through the node's ``MergeEngine.merge_batch``, so
+        tensor-valued flushes become one ``ops.lww_merge_many`` launch
+        per (node, payload group).  On a no-live-replica error the
+        earlier items' coordinator merges still apply (matching the
+        sequential ``put`` loop they replace).
+        """
+        sync = self.sync_replication if sync is None else sync
+        coord_batches: Dict[str, List[Tuple[str, Lattice]]] = defaultdict(list)
+
+        def apply_batches() -> None:
+            for owner, batch in coord_batches.items():
+                self.nodes[owner].engine.merge_batch(batch)
+
+        for key, value in items:
+            try:
+                merge_targets, gossip_targets = self._route_put(
+                    key, value, sync, clock)
+            except RuntimeError:
+                apply_batches()
+                raise
+            for owner in merge_targets:
+                coord_batches[owner].append((key, value))
+            for owner in gossip_targets:
+                self.nodes[owner].inbox.append((key, value))
+        apply_batches()
+        return len(items)
 
     def get(
         self,
@@ -215,15 +282,24 @@ class AnnaKVS:
         return None
 
     def get_merged(self, key: str, clock: Optional[VirtualClock] = None) -> Optional[Lattice]:
-        """Read-repair style read: merge across all live replicas."""
+        """Read-repair style read: merge across all live replicas.
+
+        Tensor-valued LWW replicas reduce as one batched R-replica
+        ``ops.lww_merge_many`` launch; other lattice types fold
+        ``Lattice.merge`` per replica as before.
+        """
         owners = self._owners(key)
-        result: Optional[Lattice] = None
+        replicas: List[Lattice] = []
         for owner in owners:
             node = self.nodes[owner]
             if not node.alive:
                 continue
             val = node.store.get(key)
             if val is not None:
+                replicas.append(val)
+        result = try_reduce_lww(replicas)
+        if result is None:
+            for val in replicas:
                 result = val if result is None else result.merge(val)
         if clock is not None:
             size = result.byte_size() if result is not None else 0
@@ -231,21 +307,40 @@ class AnnaKVS:
         return result
 
     def delete(self, key: str) -> None:
+        """Remove a key everywhere, including in-flight copies: gossip
+        inboxes, hinted handoffs and pending cache pushes would otherwise
+        resurrect the value on the next tick/recovery."""
         for node in self.nodes.values():
             node.store.pop(key, None)
+            if node.inbox:
+                node.inbox = [(k, v) for k, v in node.inbox if k != key]
+        for owner, hints in list(self._hints.items()):
+            self._hints[owner] = [(k, v) for k, v in hints if k != key]
+        for cache_id, pushes in list(self._cache_pushes.items()):
+            self._cache_pushes[cache_id] = [
+                (k, v) for k, v in pushes if k != key
+            ]
 
     # -- cache keyset index (paper §4.2) -----------------------------------------
     def publish_keyset(self, cache_id: str, keys: Set[str]) -> None:
-        # drop stale subscriptions, add new ones
+        # drop stale subscriptions, add new ones; prune keys whose
+        # subscriber set empties so the index does not leak dead entries
         for key, caches in list(self._cache_index.items()):
             if cache_id in caches and key not in keys:
                 caches.discard(cache_id)
+            if not caches:
+                del self._cache_index[key]
         for key in keys:
             self._cache_index[key].add(cache_id)
 
     def drain_cache_pushes(self, cache_id: str) -> List[Tuple[str, Lattice]]:
         out = self._cache_pushes.pop(cache_id, [])
         return out
+
+    def defer_cache_push(self, cache_id: str, key: str, value: Lattice) -> None:
+        """Requeue a pushed update for the cache's next tick (public API —
+        caches must not reach into the push queues directly)."""
+        self._cache_pushes[cache_id].append((key, value))
 
     def caches_holding(self, key: str) -> Set[str]:
         return set(self._cache_index.get(key, ()))

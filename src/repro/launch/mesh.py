@@ -22,12 +22,24 @@ from jax.sharding import Mesh
 PER_POD = 256  # 16 x 16 chips
 
 
+def _auto_axis_types(n: int) -> dict:
+    """kwargs for explicit Auto axis types — absent on jax < 0.5, where
+    Auto is the only behavior, so omitting the kwarg is equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
+def make_auto_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Version-portable ``jax.make_mesh`` with Auto-typed axes."""
+    return jax.make_mesh(shape, axes, **_auto_axis_types(len(axes)))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_auto_mesh(shape, axes)
 
 
 def derive_mesh(prod_mesh: Mesh, *, dp: int, ep: int, tp: int) -> Mesh:
@@ -36,7 +48,7 @@ def derive_mesh(prod_mesh: Mesh, *, dp: int, ep: int, tp: int) -> Mesh:
     n_pods = prod_mesh.devices.size // PER_POD
     devices = prod_mesh.devices.reshape(n_pods, dp, ep, tp)
     return Mesh(devices, ("pod", "data", "expert", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 4)
+                **_auto_axis_types(4))
 
 
 def mesh_info(mesh: Mesh) -> str:

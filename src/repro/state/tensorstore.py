@@ -1,9 +1,15 @@
-"""Tensor state over the Anna KVS: lattice-wrapped shards, batched merges.
+"""Tensor state over the Anna KVS, built on the arena merge plane.
 
-This is the LDPC bridge for model state: parameter shards, optimizer
-moments, KV pages and metric vectors live in the KVS as LWW lattices, get
-cached at executors, and merge through the Pallas batched-merge kernels
-(:func:`repro.kernels.ops.lww_merge_many`) when replicas gossip.
+Model state — parameter shards, optimizer moments, KV pages and metric
+vectors — lives in the KVS as tensor-valued LWW lattices.  Since PR 1
+those payloads are arena-backed end to end (:mod:`repro.core.arena`):
+each storage node keeps them in contiguous ``(K, D)`` value rows with
+``(K, 1)`` Lamport planes, replica gossip and flushes coalesce into
+batched :func:`repro.kernels.ops.lww_merge_many` launches, and
+``get_merged`` reads reduce R replicas in one launch.  This module is
+therefore just the pytree <-> key plumbing: it stores *bare ndarrays*
+(the arena-eligible payload form) and batches multi-leaf writes through
+``AnnaKVS.put_many``.
 
 Keys are ``<namespace>/<path>`` with a small manifest per namespace so a
 reader can enumerate and fetch shards in parallel.
@@ -25,8 +31,16 @@ from ..kernels import ops
 
 @dataclasses.dataclass
 class TensorRecord:
+    """Legacy wrapper (pre-arena payload form); still readable."""
+
     array: np.ndarray
     meta: Dict[str, Any]
+
+
+def _unwrap(value: Any) -> np.ndarray:
+    if isinstance(value, TensorRecord):
+        return value.array
+    return np.asarray(value)
 
 
 class TensorStore:
@@ -37,24 +51,37 @@ class TensorStore:
     # -- single-tensor API -----------------------------------------------------
     def put_tensor(self, key: str, array, meta: Optional[Dict] = None) -> None:
         arr = np.asarray(array)
-        rec = TensorRecord(arr, dict(meta or {}))
-        self.kvs.put(key, LWWLattice(self.clock.tick(), rec))
+        # bare ndarray payload -> the storage node's arena slab
+        self.kvs.put(key, LWWLattice(self.clock.tick(), arr))
+        if meta:
+            self.kvs.put(f"{key}/__meta",
+                         LWWLattice(self.clock.tick(), dict(meta)))
+        else:
+            # a meta-less re-put must not leave the previous put's
+            # metadata describing the new value
+            self.kvs.delete(f"{key}/__meta")
 
     def get_tensor(self, key: str) -> Optional[np.ndarray]:
         lat = self.kvs.get_merged(key)
         if lat is None:
             return None
-        rec = lat.reveal()
-        return rec.array if isinstance(rec, TensorRecord) else np.asarray(rec)
+        return _unwrap(lat.reveal())
+
+    def get_meta(self, key: str) -> Dict[str, Any]:
+        lat = self.kvs.get_merged(f"{key}/__meta")
+        return dict(lat.reveal()) if lat is not None else {}
 
     # -- pytree API ---------------------------------------------------------------
     def put_tree(self, namespace: str, tree: Any) -> List[str]:
+        """Write every leaf; one batched multi-key put for the whole tree."""
         leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+        items: List[Tuple[str, LWWLattice]] = []
         keys = []
         for path, leaf in leaves:
             key = f"{namespace}/{_pstr(path)}"
-            self.put_tensor(key, np.asarray(leaf))
+            items.append((key, LWWLattice(self.clock.tick(), np.asarray(leaf))))
             keys.append(key)
+        self.kvs.put_many(items)
         manifest = SetLattice.of(keys)
         cur = self.kvs.get_merged(f"{namespace}/__manifest") or SetLattice()
         self.kvs.put(f"{namespace}/__manifest", cur.merge(manifest))

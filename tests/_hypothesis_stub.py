@@ -1,0 +1,108 @@
+"""Minimal stand-in for the parts of `hypothesis` the test-suite uses.
+
+The real dependency is optional in this environment; when it is absent
+the property tests fall back to deterministic seeded random sampling:
+``@given(...)`` draws ``max_examples`` examples (capped — this is a
+smoke-strength fallback, not a shrinking property engine) from the same
+strategy combinators the tests build with and runs the test body once
+per example.  Only the strategy surface used by this repo is
+implemented: integers, sampled_from, tuples, lists, dictionaries,
+builds, one_of.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, List, Sequence
+
+_FALLBACK_MAX_EXAMPLES = 25
+_SEED = 0xC10DB
+
+
+class Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int = -(2 ** 16), max_value: int = 2 ** 16) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(options: Sequence[Any]) -> Strategy:
+    opts = list(options)
+    return Strategy(lambda rng: rng.choice(opts))
+
+
+def tuples(*strategies: Strategy) -> Strategy:
+    return Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+
+    return Strategy(draw)
+
+
+def dictionaries(keys: Strategy, values: Strategy, *, min_size: int = 0,
+                 max_size: int = 10) -> Strategy:
+    def draw(rng: random.Random) -> dict:
+        n = rng.randint(min_size, max_size)
+        out = {}
+        for _ in range(n):
+            out[keys.example(rng)] = values.example(rng)
+        return out
+
+    return Strategy(draw)
+
+
+def builds(target: Callable[..., Any], *strategies: Strategy) -> Strategy:
+    return Strategy(lambda rng: target(*(s.example(rng) for s in strategies)))
+
+
+def one_of(*strategies: Strategy) -> Strategy:
+    return Strategy(lambda rng: rng.choice(strategies).example(rng))
+
+
+class strategies:  # mirrors `import hypothesis.strategies as st`
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+    tuples = staticmethod(tuples)
+    lists = staticmethod(lists)
+    dictionaries = staticmethod(dictionaries)
+    builds = staticmethod(builds)
+    one_of = staticmethod(one_of)
+
+
+def settings(max_examples: int = _FALLBACK_MAX_EXAMPLES, **_ignored):
+    """Decorator recording max_examples for a subsequent/preceding @given."""
+
+    def wrap(fn):
+        fn._stub_max_examples = min(max_examples, _FALLBACK_MAX_EXAMPLES)
+        return fn
+
+    return wrap
+
+
+def given(*strategies_args: Strategy):
+    def wrap(fn):
+        inner = fn
+
+        def runner():  # zero-arg so pytest sees no fixture params
+            n = getattr(runner, "_stub_max_examples", None) or getattr(
+                inner, "_stub_max_examples", _FALLBACK_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                example = tuple(s.example(rng) for s in strategies_args)
+                inner(*example)
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+
+    return wrap

@@ -1,0 +1,330 @@
+"""Batched merge plane vs per-key Python semantics: the equivalence oracle.
+
+Every assertion here pins the tentpole invariant of the arena data plane:
+the batched kernels (``ops.lww_merge_many``, ``ops.vc_join_classify``)
+must produce bit-identical winners to folds of ``LWWLattice.merge`` /
+``VectorClock`` dominance — including equal-clock tie-breaks on node id.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import AnnaKVS, ExecutorCache, LamportClock
+from repro.core.arena import (
+    MergeEngine,
+    NodeRegistry,
+    oracle_lww_fold,
+    try_reduce_lww,
+    vc_classify_batch,
+    vc_dominates_or_concurrent_batch,
+)
+from repro.core.lattices import LWWLattice, VectorClock
+from repro.kernels import ops
+
+RNG = np.random.default_rng(7)
+NODE_IDS = ["anna-0", "anna-1", "anna-10", "anna-2", "cache-a", "zz"]
+
+
+def _random_lww(key_idx: int, shape=(16,), clock_range=4):
+    """Small clock range forces frequent equal-clock node tie-breaks."""
+    clock = int(RNG.integers(0, clock_range))
+    node = NODE_IDS[int(RNG.integers(0, len(NODE_IDS)))]
+    # one (clock, node) <-> one payload, as in the real system: derive the
+    # payload from the timestamp so equal timestamps carry equal values
+    seed_rng = np.random.default_rng(abs(hash((clock, node, key_idx))) % 2**32)
+    value = seed_rng.normal(size=shape).astype(np.float32)
+    return LWWLattice((clock, node), value)
+
+
+def _assert_same_register(got: LWWLattice, want: LWWLattice):
+    assert got.timestamp == want.timestamp, (got.timestamp, want.timestamp)
+    np.testing.assert_array_equal(np.asarray(got.value), np.asarray(want.value))
+
+
+# ---------------------------------------------------------------------------
+# kernel vs Python fold (satellite: R in {1, 2, 5}, tie-breaks included)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("R", [1, 2, 5])
+def test_lww_merge_many_matches_python_fold(R):
+    K, D = 24, 48
+    node_pool = sorted(NODE_IDS)
+    clocks = RNG.integers(0, 3, (R, K, 1)).astype(np.int32)  # many ties
+    nodes = RNG.integers(0, len(node_pool), (R, K, 1)).astype(np.int32)
+    vals = RNG.normal(size=(R, K, D)).astype(np.float32)
+    win_val, win_clock, win_node = ops.lww_merge_many(clocks, nodes, vals)
+    for k in range(K):
+        lats = [
+            LWWLattice((int(clocks[r, k, 0]), node_pool[int(nodes[r, k, 0])]),
+                       vals[r, k])
+            for r in range(R)
+        ]
+        want = oracle_lww_fold(lats)
+        assert int(np.asarray(win_clock)[k, 0]) == want.timestamp[0]
+        # int ranks are indices into the sorted pool: same tie-break order
+        assert node_pool[int(np.asarray(win_node)[k, 0])] == want.timestamp[1]
+        np.testing.assert_array_equal(np.asarray(win_val)[k], want.value)
+
+
+def test_lww_merge_many_equal_clock_tie_breaks_on_node_rank():
+    R, K, D = 3, 8, 16
+    clocks = np.full((R, K, 1), 5, np.int32)  # all equal: pure node tie-break
+    nodes = np.asarray([[[r]] * K for r in range(R)], np.int32).reshape(R, K, 1)
+    vals = RNG.normal(size=(R, K, D)).astype(np.float32)
+    win_val, win_clock, win_node = ops.lww_merge_many(clocks, nodes, vals)
+    assert (np.asarray(win_node) == R - 1).all()  # highest rank wins
+    np.testing.assert_array_equal(np.asarray(win_val), vals[R - 1])
+
+
+# ---------------------------------------------------------------------------
+# vc_join_classify vs VectorClock dominance (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_vc_join_classify_matches_vector_clock_semantics():
+    rng = np.random.default_rng(3)
+    pairs = []
+    for _ in range(40):
+        a = VectorClock({n: int(rng.integers(0, 4)) for n in NODE_IDS})
+        b = VectorClock({n: int(rng.integers(0, 4)) for n in NODE_IDS})
+        pairs.append((a, b))
+    pairs.append((VectorClock.zero(), VectorClock.zero()))
+    pairs.append((VectorClock({"a": 1}), VectorClock({"a": 1})))
+    adom, bdom = vc_classify_batch(pairs)
+    for (a, b), ad, bd in zip(pairs, adom, bdom):
+        assert bool(ad) == a.dominates(b)
+        assert bool(bd) == b.dominates(a)
+    doc = vc_dominates_or_concurrent_batch(pairs)
+    for (a, b), ok in zip(pairs, doc):
+        assert bool(ok) == (a.dominates(b) or a.concurrent_with(b))
+
+
+# ---------------------------------------------------------------------------
+# MergeEngine: batched == per-key, fallback untouched
+# ---------------------------------------------------------------------------
+
+
+def test_merge_batch_matches_per_key_oracle():
+    engine = MergeEngine(NodeRegistry())
+    oracle = {}
+    for round_i in range(4):
+        items = []
+        for k in range(20):
+            key = f"k{k % 11}"
+            items.append((key, _random_lww(k % 11)))
+        engine.merge_batch(items)
+        for key, lat in items:
+            cur = oracle.get(key)
+            oracle[key] = lat if cur is None else cur.merge(lat)
+    assert engine.launches >= 1  # the batched plane actually engaged
+    for key, want in oracle.items():
+        _assert_same_register(engine.get(key), want)
+
+
+def test_merge_engine_routes_opaque_values_to_fallback():
+    engine = MergeEngine()
+    clk = LamportClock("w")
+    engine.merge_one("s", LWWLattice(clk.tick(), "a string"))
+    engine.merge_batch([("s", LWWLattice(clk.tick(), "newer string")),
+                        ("t", _random_lww(0))])
+    assert engine.get("s").reveal() == "newer string"
+    assert "s" in engine.fallback and "t" not in engine.fallback
+    assert engine.get("t") is not None
+
+
+def test_merge_engine_payload_shape_change_falls_back_to_python():
+    engine = MergeEngine()
+    a = LWWLattice((1, "n0"), np.zeros((4,), np.float32))
+    b = LWWLattice((2, "n1"), np.ones((8,), np.float32))  # different shape
+    engine.merge_batch([("k", a)])
+    engine.merge_batch([("k", b)])
+    _assert_same_register(engine.get("k"), a.merge(b))
+
+
+def test_64bit_payloads_keep_exact_python_path():
+    """jax (x64 off) would truncate int64/float64; they must fall back."""
+    engine = MergeEngine()
+    a = LWWLattice((1, "n0"), np.array([2 ** 40, 5], dtype=np.int64))
+    b = LWWLattice((2, "n1"), np.array([2 ** 41, 7], dtype=np.int64))
+    engine.merge_batch([("k", a), ("k", b)])
+    got = engine.get("k")
+    assert got.timestamp == (2, "n1")
+    assert got.value.dtype == np.int64
+    np.testing.assert_array_equal(got.value, b.value)
+    assert "k" in engine.fallback  # routed around the kernels
+    f = LWWLattice((3, "n0"), np.array([1.2345678901234567], np.float64))
+    engine.merge_batch([("k2", f)])
+    np.testing.assert_array_equal(engine.get("k2").value, f.value)
+
+
+def test_put_many_partial_failure_still_applies_earlier_items():
+    """A mid-batch dead key must not drop the merges of earlier keys."""
+    kvs = AnnaKVS(num_nodes=2, replication=1)
+    by_owner = {}
+    i = 0
+    while len(by_owner) < 2:
+        key = f"key-{i}"
+        by_owner.setdefault(kvs._owners(key)[0], key)
+        i += 1
+    owners = list(by_owner)
+    k_alive, k_dead = by_owner[owners[0]], by_owner[owners[1]]
+    kvs.fail_node(owners[1])
+    lat = _random_lww(0)
+    with pytest.raises(RuntimeError):
+        kvs.put_many([(k_alive, lat), (k_dead, _random_lww(1))])
+    _assert_same_register(kvs.get_merged(k_alive), lat)  # durably applied
+
+
+def test_cache_flush_retries_after_total_replica_failure():
+    """A failed batched flush must keep writes queued for retry —
+    matching the seed's per-key behavior."""
+    kvs = AnnaKVS(num_nodes=1, replication=1)
+    cache = ExecutorCache("c0", kvs)
+    lat = _random_lww(0)
+    cache.write("k", lat)
+    kvs.fail_node("anna-0")
+    with pytest.raises(RuntimeError):
+        cache.tick()
+    assert cache.pending_flush  # still queued, not dropped
+    kvs.recover_node("anna-0")
+    cache.tick()
+    _assert_same_register(kvs.get_merged("k"), lat)
+
+
+def test_delete_purges_in_flight_copies():
+    """delete must also clear gossip inboxes / hints, or the next tick
+    resurrects the value."""
+    kvs = AnnaKVS(num_nodes=3, replication=3)
+    kvs.put("d", _random_lww(0))  # async: replicas still have inbox copies
+    kvs.delete("d")
+    kvs.tick()
+    assert kvs.get_merged("d") is None
+
+
+def test_registry_drops_dead_arenas():
+    """Removed caches/nodes must not stay pinned via registry subscribers."""
+    import gc
+
+    kvs = AnnaKVS(num_nodes=2, replication=1)
+    n_before = len(kvs.registry._subscribers)
+    cache = ExecutorCache("c-tmp", kvs)
+    cache.write("t", LWWLattice((1, "m-node"), np.zeros(4, np.float32)))
+    assert len(kvs.registry._subscribers) == n_before + 1
+    del cache
+    gc.collect()
+    # a new id sorted first forces a remap, which prunes dead subscribers
+    kvs.put("x", LWWLattice((1, "a-first"), np.zeros(4, np.float32)))
+    assert len(kvs.registry._subscribers) <= n_before
+
+
+def test_registry_remap_preserves_order_with_late_node_ids():
+    engine = MergeEngine()
+    # "b..." sorts between "anna..." and "cache..."; arriving late forces a
+    # rank remap of already-stored rows
+    early = LWWLattice((3, "cache-a"), np.full((4,), 1.0, np.float32))
+    engine.merge_batch([("k", early)])
+    late = LWWLattice((3, "b-late"), np.full((4,), 2.0, np.float32))
+    engine.merge_batch([("k", late)])
+    _assert_same_register(engine.get("k"), oracle_lww_fold([early, late]))
+    # and the other direction: a late id that wins the tie
+    engine2 = MergeEngine()
+    engine2.merge_batch([("k", LWWLattice((3, "b"), np.zeros(4, np.float32)))])
+    winner = LWWLattice((3, "z-late"), np.ones(4, np.float32))
+    engine2.merge_batch([("k", winner)])
+    assert engine2.get("k").timestamp == (3, "z-late")
+
+
+def test_lattice_store_view_mapping_semantics():
+    engine = MergeEngine()
+    store = engine.view
+    store["a"] = _random_lww(1)
+    store["b"] = LWWLattice((1, "n"), "opaque")
+    assert set(store) == {"a", "b"} and len(store) == 2
+    assert "a" in store and "missing" not in store
+    assert store.get("missing") is None
+    del store["a"]
+    assert "a" not in store and len(store) == 1
+    store.pop("b")
+    assert len(store) == 0
+
+
+# ---------------------------------------------------------------------------
+# the three merge sites: gossip drain, read-repair, cache tick
+# ---------------------------------------------------------------------------
+
+
+def test_drain_inbox_batches_tensor_gossip_and_matches_fold():
+    kvs = AnnaKVS(num_nodes=1, replication=1)
+    node = kvs.nodes["anna-0"]
+    per_key = {}
+    for k in range(12):
+        key = f"t{k}"
+        for _ in range(3):
+            lat = _random_lww(k)
+            node.inbox.append((key, lat))
+            per_key.setdefault(key, []).append(lat)
+    applied = node.drain_inbox()
+    assert applied == 36
+    assert node.engine.launches == 1  # ONE launch for the whole tick
+    for key, lats in per_key.items():
+        _assert_same_register(node.store[key], oracle_lww_fold(lats))
+
+
+def test_get_merged_batched_replica_reduction_matches_fold():
+    kvs = AnnaKVS(num_nodes=3, replication=3)
+    key = "shard"
+    # replicas diverge: write different registers directly at each node
+    lats = [_random_lww(0) for _ in range(3)]
+    for node, lat in zip(kvs.nodes.values(), lats):
+        node.store[key] = lat
+    stored = [n.store[key] for n in kvs.nodes.values()]
+    want = oracle_lww_fold([stored[0], stored[1], stored[2]])
+    batched = try_reduce_lww(stored)
+    assert batched is not None
+    _assert_same_register(batched, want)
+    merged = kvs.get_merged(key)
+    assert merged.timestamp == want.timestamp
+    np.testing.assert_array_equal(np.asarray(merged.value), want.value)
+
+
+def test_cache_tick_batches_flushes_and_pushes():
+    kvs = AnnaKVS(num_nodes=2, replication=1)
+    cache = ExecutorCache("c0", kvs)
+    writes = {f"w{k}": _random_lww(k) for k in range(9)}
+    for key, lat in writes.items():
+        cache.write(key, lat)
+    cache.tick()  # batched flush through put_many
+    for key, lat in writes.items():
+        _assert_same_register(kvs.get_merged(key), lat)
+    # subscribe, then overwrite via KVS so pushes flow back batched
+    cache.publish_keyset()
+    updates = {key: LWWLattice((100, "pusher"), lat.value * 2)
+               for key, lat in writes.items()}
+    launches_before = cache.engine.launches
+    for key, lat in updates.items():
+        kvs.put(key, lat)
+    cache.tick()
+    assert cache.engine.launches == launches_before + 1
+    for key, lat in updates.items():
+        _assert_same_register(cache.read_local(key), lat)
+
+
+def test_tensor_values_survive_full_gossip_convergence():
+    """End-to-end: async writes + ticks converge every replica bitwise."""
+    kvs = AnnaKVS(num_nodes=3, replication=3)
+    clk = LamportClock("w")
+    want = {}
+    for k in range(10):
+        key = f"g{k}"
+        for _ in range(2):
+            lat = LWWLattice(clk.tick(),
+                             RNG.normal(size=(8,)).astype(np.float32))
+            kvs.put(key, lat)
+            cur = want.get(key)
+            want[key] = lat if cur is None else cur.merge(lat)
+    for _ in range(3):
+        kvs.tick()
+    for key, lat in want.items():
+        for node in kvs.nodes.values():
+            _assert_same_register(node.store[key], lat)

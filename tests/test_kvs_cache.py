@@ -1,7 +1,10 @@
 """Anna KVS + executor cache: replication, gossip, elasticity, faults."""
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # deterministic seeded fallback (see _hypothesis_stub)
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import AnnaKVS, ExecutorCache, LamportClock, LWWLattice, SetLattice
 
@@ -107,6 +110,39 @@ def test_convergence_under_arbitrary_gossip(writes):
         vals = {n.store[key].reveal() for n in kvs.nodes.values()
                 if key in n.store}
         assert len(vals) == 1
+
+
+def test_publish_keyset_prunes_empty_subscription_sets():
+    """Regression: dropping a cache's last subscription must delete the
+    key's entry from the index, not leak an empty set."""
+    kvs = AnnaKVS(num_nodes=2, replication=1)
+    kvs.publish_keyset("c0", {"a", "b"})
+    kvs.publish_keyset("c1", {"b"})
+    assert kvs.caches_holding("a") == {"c0"}
+    kvs.publish_keyset("c0", {"b"})  # c0 drops "a": set would become empty
+    assert "a" not in kvs._cache_index
+    assert kvs.caches_holding("b") == {"c0", "c1"}
+    kvs.publish_keyset("c0", set())
+    kvs.publish_keyset("c1", set())
+    assert kvs._cache_index == {}
+
+
+def test_defer_cache_push_public_api():
+    """Caches requeue pushes via the public API, never the private queue."""
+    kvs = AnnaKVS(num_nodes=2, replication=1)
+    clk = LamportClock("w")
+    kvs.defer_cache_push("c0", "k", LWWLattice(clk.tick(), "v"))
+    assert kvs.drain_cache_pushes("c0") and not kvs.drain_cache_pushes("c0")
+    # a deferred push is re-delivered on the cache's next tick
+    kvs.put("k", LWWLattice(clk.tick(), "v1"))
+    cache = ExecutorCache("c0", kvs)
+    assert cache.read("k").reveal() == "v1"
+    cache.publish_keyset()
+    kvs.put("k", LWWLattice(clk.tick(), "v2"))
+    cache.tick(defer_prob=1.0)  # every push defers
+    assert cache.read_local("k").reveal() == "v1"
+    cache.tick()  # now delivered
+    assert cache.read_local("k").reveal() == "v2"
 
 
 def test_set_lattice_registered_functions_pattern():

@@ -6,8 +6,11 @@ lattice values and checks the laws hold for every lattice type, plus the
 causal-lattice invariants (dominated-version pruning, sibling retention).
 """
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # deterministic seeded fallback (see _hypothesis_stub)
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.lattices import (
     CausalLattice,

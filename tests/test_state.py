@@ -36,6 +36,26 @@ def test_tensorstore_batched_replica_merge_uses_kernel():
         np.testing.assert_allclose(val[k], vals[win, k])
 
 
+def test_put_tensor_meta_does_not_go_stale():
+    kvs = AnnaKVS(num_nodes=2, replication=1, sync_replication=True)
+    ts = TensorStore(kvs)
+    ts.put_tensor("w", np.ones(3, np.float32), meta={"step": 1})
+    assert ts.get_meta("w") == {"step": 1}
+    ts.put_tensor("w", np.zeros(3, np.float32))  # meta-less re-put clears it
+    assert ts.get_meta("w") == {}
+
+
+def test_put_tensor_meta_not_resurrected_by_gossip():
+    """Async replication: the cleared meta must not come back when a
+    replica's inbox drains."""
+    kvs = AnnaKVS(num_nodes=3, replication=2)  # async, in-flight copies
+    ts = TensorStore(kvs)
+    ts.put_tensor("w", np.ones(3, np.float32), meta={"step": 1})
+    ts.put_tensor("w", np.zeros(3, np.float32))
+    kvs.tick()
+    assert ts.get_meta("w") == {}
+
+
 def test_checkpoint_save_restore():
     kvs = AnnaKVS(num_nodes=3, replication=2, sync_replication=True)
     mgr = CheckpointManager(kvs, CheckpointConfig(every_steps=5, keep=2))

@@ -75,9 +75,9 @@ def _run_compress_once(g, err):
     """quantize_psum_pod on a trivial 1-device 'pod' mesh."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_auto_mesh
     from repro.train.train_step import quantize_psum_pod
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_auto_mesh((1,), ("pod",))
     fn = shard_map(quantize_psum_pod, mesh=mesh,
                    in_specs=(P(), P()), out_specs=(P(), P()),
                    check_rep=False)
