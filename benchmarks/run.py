@@ -11,9 +11,12 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
   fig9   Retwis                        (lww vs causal vs redis model)
   kernels  storage-layer Pallas merge micro
   merge_plane  batched arena data plane vs per-key merges
+  gossip_plane  packed-plane replication wire vs per-key-object inbox
 
-``--smoke`` runs only the kernel micro-benches (kernels + merge_plane)
-at tiny sizes — the fast perf-regression gate used by scripts/verify.sh.
+``--smoke`` runs only the kernel micro-benches (kernels + merge_plane +
+gossip_plane) at tiny sizes — the fast perf-regression gate used by
+scripts/verify.sh (the merge benches cross-check winners against the
+Python oracle and assert on mismatch).
 """
 
 from __future__ import annotations
@@ -32,6 +35,7 @@ def main(argv=None) -> None:
         fig7_consistency,
         fig8_prediction,
         fig9_retwis,
+        gossip_plane,
         kernels_micro,
         merge_plane,
         table2_anomalies,
@@ -44,6 +48,7 @@ def main(argv=None) -> None:
         suites = [
             ("kernels", lambda: kernels_micro.main(K=64, D=256, R=2, iters=3)),
             ("merge_plane", lambda: merge_plane.main(smoke=True)),
+            ("gossip_plane", lambda: gossip_plane.main(smoke=True)),
         ]
     else:
         suites = [
@@ -57,6 +62,7 @@ def main(argv=None) -> None:
             ("fig9", fig9_retwis.main),
             ("kernels", kernels_micro.main),
             ("merge_plane", merge_plane.main),
+            ("gossip_plane", gossip_plane.main),
         ]
     failed = []
     for name, fn in suites:

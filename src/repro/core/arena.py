@@ -1,15 +1,12 @@
-"""Batched tensor-lattice data plane: the LatticeArena / MergeEngine.
+"""Batched tensor-lattice data plane: arena slabs, merge engine, planes.
 
 Cloudburst's storage tier converges replicas purely by lattice merge
 (paper §2.2, §5.2), and for tensor-valued payloads (parameter shards, KV
 pages, metric vectors) that merge is the storage layer's compute hot-spot.
-The seed implementation did one-key-at-a-time Python merges on every data
-path — replica gossip (``StorageNode.drain_inbox``), cache flush/push
-ticks (``ExecutorCache.tick``) and read-repair (``AnnaKVS.get_merged``) —
-while the batched Pallas kernels (:mod:`repro.kernels.lww_merge`,
-:mod:`repro.kernels.vector_clock`) were reachable only through the
-side-door ``state/tensorstore``.  This module makes the merge plane a
-first-class batched subsystem.
+PR 1 batched the merge *compute*; this module also owns the replication
+*wire format*, so arena-to-arena transfer (gossip, hinted handoff, cache
+pushes, membership handoff) moves packed planes end-to-end and never
+materializes per-key ``LWWLattice`` objects in steady state.
 
 Architecture
 ============
@@ -31,16 +28,37 @@ Architecture
     clock / node-rank planes — exactly the layout
     ``ops.lww_merge_many`` consumes, so a batched merge is one gather,
     one kernel launch and one scatter instead of K Python object merges.
+    ``export_planes(keys)`` snapshots rows into a :class:`PlaneBatch`
+    with vectorized gathers (no per-key objects).
+
+``PlaneBatch`` / ``PlaneBuffer``  (the replication wire protocol)
+    A ``PlaneBatch`` is the unit of arena-to-arena transfer: per slab
+    group, a key list plus contiguous ``(K, D)`` value and ``(K, 1)``
+    clock/node planes, where node entries index a batch-local
+    ``node_ids`` intern table — the batch is self-describing, so it
+    survives mid-stream registry rank remaps.  Non-arena lattices
+    (opaque payloads, Set/Map/Causal, 64-bit exact-path payloads) ride
+    alongside as an explicit per-key ``sidecar`` with unchanged
+    semantics.  A ``PlaneBuffer`` is the mutable accumulator behind
+    every replication channel (``StorageNode.inbox``, hinted handoffs,
+    cache pushes): ``add`` packs eligible traffic row-by-row,
+    ``add_batch`` splices whole batches, ``purge`` drops a deleted key,
+    and ``split`` defers whole-key rows with the Table-2 staleness
+    semantics of the per-item queues it replaces.
 
 ``MergeEngine``
-    The façade every merge site routes through.  Tensor-valued
-    ``LWWLattice`` traffic is coalesced into ``ops.lww_merge_many``
-    launches (one per slab group per tick); everything else — opaque
-    Python payloads, Set/Map/Counter/Causal lattices — keeps the exact
-    per-key ``Lattice.merge`` path via ``MergeEngine.fallback``, so
-    semantics are unchanged.  ``MergeEngine.view`` is a MutableMapping
-    presenting the union of arena + fallback as an ordinary lattice dict,
-    which is what ``StorageNode.store`` / ``ExecutorCache.data`` expose.
+    The façade every merge site routes through.  ``ingest_planes`` is
+    the packed ingest: one ``ops.lww_merge_many`` launch per slab group
+    merges incoming rows against stored rows (vectorized gather /
+    scatter; duplicate keys in a batch are folded in delivery order via
+    unique-key rounds).  ``merge_batch`` remains for object-carrying
+    callers; opaque traffic keeps the exact per-key ``Lattice.merge``
+    path via ``MergeEngine.fallback``.  ``MergeEngine.view`` is a
+    MutableMapping over arena + fallback, which is what
+    ``StorageNode.store`` / ``ExecutorCache.data`` expose.  Telemetry
+    counters (``plane_keys``, ``plane_object_fallbacks``,
+    ``arena.materializations``) let tests assert that steady-state
+    replication constructs zero per-key lattice objects.
 
 Vector-clock helpers (``vc_classify_batch`` and friends) densify
 ``VectorClock`` pairs into ``(K, N)`` int32 matrices and classify
@@ -51,17 +69,20 @@ comparisons.
 Shapes are padded to canonical buckets (K, D to powers of two, R to the
 next power of two) so the jit cache stays small; padding replicates the
 first candidate (LWW merge is idempotent) or zero rows whose winners are
-discarded, so results are unaffected.
-
-Once merges are batched arrays, sharding the KVS across devices and
-growing K is a mesh decision, not a rewrite — see ROADMAP "Open items"
-(device-sharded arena, multi-host gossip batches).
+discarded, so results are unaffected.  K buckets are additionally
+rounded to a multiple of the merge mesh size so every launch is eligible
+for K-sharding: with more than one local device, ``kernels.ops`` runs
+``lww_merge_many`` / ``vc_join_classify`` under ``shard_map`` over a 1-D
+device mesh (``launch.mesh.make_merge_mesh``), each device merging its
+local rows — bit-identical to the single-device path, which is used
+unchanged when the mesh has one device.
 """
 
 from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import math
 import weakref
 
 try:  # MutableMapping moved in 3.10
@@ -137,6 +158,37 @@ def _bucket(n: int, minimum: int) -> int:
     return b
 
 
+def _k_bucket(n: int, devices: Optional[int] = None) -> int:
+    """K bucket: power of two, additionally a multiple of the merge mesh
+    size so every padded launch is eligible for K-sharding.  The lcm
+    keeps both properties for ANY device count (a power of two can never
+    be doubled into divisibility by e.g. 3 or 6)."""
+    b = _bucket(n, 8)
+    if devices is None:
+        try:
+            from ..kernels import ops
+
+            devices = ops.merge_mesh_size()
+        except Exception:  # jax unavailable: core stays importable
+            devices = 1
+    if b % devices:
+        b = math.lcm(b, devices)
+    return b
+
+
+def _contiguous_span(rows: np.ndarray) -> Optional[Tuple[int, int]]:
+    """(start, stop) when ``rows`` is exactly start, start+1, ... — the
+    zero-copy slice fast path for steady-state slab layouts (replicas
+    that inserted keys in the same order)."""
+    n = rows.shape[0]
+    r0, r1 = int(rows[0]), int(rows[-1])
+    if r1 - r0 != n - 1:
+        return None
+    if n > 1 and not bool((np.diff(rows) == 1).all()):
+        return None
+    return (r0, r1 + 1)
+
+
 # ---------------------------------------------------------------------------
 # Node registry: strings -> order-preserving int32 ranks
 # ---------------------------------------------------------------------------
@@ -203,6 +255,268 @@ class NodeRegistry:
 _GroupKey = Tuple[Tuple[int, ...], str]  # (payload shape, dtype name)
 
 
+# ---------------------------------------------------------------------------
+# The replication wire format: packed planes + per-key sidecar
+# ---------------------------------------------------------------------------
+
+
+class PlaneGroup:
+    """Packed rows of one (payload shape, dtype) slab group.
+
+    ``node_idx`` entries index the owning batch's ``node_ids`` table (NOT
+    a registry's ranks): the group is self-describing on the wire.
+    """
+
+    __slots__ = ("shape", "dtype", "keys", "vals", "clocks", "node_idx")
+
+    def __init__(self, shape: Tuple[int, ...], dtype: np.dtype,
+                 keys: List[str], vals: np.ndarray, clocks: np.ndarray,
+                 node_idx: np.ndarray):
+        self.shape = shape
+        self.dtype = dtype
+        self.keys = keys              # length K; duplicates allowed
+        self.vals = vals              # (K, D) payload rows
+        self.clocks = clocks          # (K, 1) int32 Lamport clocks
+        self.node_idx = node_idx      # (K, 1) int32 -> batch.node_ids
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+    def take(self, idx: Sequence[int]) -> "PlaneGroup":
+        sel = np.asarray(idx, np.int64)
+        return PlaneGroup(self.shape, self.dtype,
+                          [self.keys[i] for i in idx],
+                          self.vals[sel], self.clocks[sel],
+                          self.node_idx[sel])
+
+
+class PlaneBatch:
+    """The unit of arena-to-arena replication: packed plane groups plus a
+    per-key sidecar for lattices the planes cannot carry.
+
+    Never holds per-key lattice objects for packed traffic — that is the
+    whole point.  ``iter_entries`` materializes objects and exists for
+    tests/debugging only.
+    """
+
+    __slots__ = ("node_ids", "groups", "sidecar")
+
+    def __init__(self, node_ids: Optional[List[str]] = None):
+        self.node_ids: List[str] = list(node_ids or [])
+        self.groups: Dict[_GroupKey, PlaneGroup] = {}
+        self.sidecar: List[Tuple[str, Lattice]] = []
+
+    def packed_len(self) -> int:
+        return sum(len(g) for g in self.groups.values())
+
+    def __len__(self) -> int:
+        return self.packed_len() + len(self.sidecar)
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+    def keys(self) -> List[str]:
+        out: List[str] = []
+        for g in self.groups.values():
+            out.extend(g.keys)
+        out.extend(k for k, _ in self.sidecar)
+        return out
+
+    def iter_entries(self):
+        """Materialize (key, Lattice) pairs — tests/debug only."""
+        for g in self.groups.values():
+            for i, key in enumerate(g.keys):
+                ts = (int(g.clocks[i, 0]),
+                      self.node_ids[int(g.node_idx[i, 0])])
+                yield key, LWWLattice(ts, g.vals[i].copy().reshape(g.shape))
+        yield from self.sidecar
+
+
+class _GroupAccum:
+    """Growable row accumulator behind one PlaneBuffer group.
+
+    Two append paths: per-item ``add_row`` collects row views (stacked
+    once at drain), and ``add_chunk`` splices whole packed chunks in O(1)
+    — a batch forwarded through a buffer costs a list append, and a
+    single-chunk drain hands the arrays through without copying.
+    """
+
+    __slots__ = ("shape", "dtype", "keys", "flats", "clocks", "nodes",
+                 "chunks")
+
+    _Chunk = Tuple[List[str], np.ndarray, np.ndarray, np.ndarray]
+
+    def __init__(self, shape: Tuple[int, ...], dtype: np.dtype):
+        self.shape = shape
+        self.dtype = dtype
+        self.keys: List[str] = []
+        self.flats: List[np.ndarray] = []   # 1-D row views, stacked on drain
+        self.clocks: List[int] = []
+        self.nodes: List[int] = []          # buffer-local node indices
+        self.chunks: List["_GroupAccum._Chunk"] = []
+
+    def __len__(self) -> int:
+        return len(self.keys) + sum(len(c[0]) for c in self.chunks)
+
+    def add_row(self, key: str, flat: np.ndarray, clock: int,
+                node: int) -> None:
+        self.keys.append(key)
+        self.flats.append(flat)
+        self.clocks.append(clock)
+        self.nodes.append(node)
+
+    def add_chunk(self, keys: List[str], vals: np.ndarray,
+                  clocks: np.ndarray, nodes: np.ndarray) -> None:
+        self.chunks.append((keys, vals, clocks, nodes))
+
+    def has_key(self, key: str) -> bool:
+        return (key in self.keys
+                or any(key in c[0] for c in self.chunks))
+
+    def _normalize(self) -> "_GroupAccum._Chunk":
+        """Fold rows + chunks into a single chunk (rare paths only)."""
+        if self.keys:
+            self.add_chunk(
+                list(self.keys), np.stack(self.flats),
+                np.asarray(self.clocks, np.int32).reshape(-1, 1),
+                np.asarray(self.nodes, np.int32).reshape(-1, 1))
+            self.keys, self.flats = [], []
+            self.clocks, self.nodes = [], []
+        if len(self.chunks) != 1:
+            keys = [k for c in self.chunks for k in c[0]]
+            self.chunks = [(
+                keys,
+                np.concatenate([c[1] for c in self.chunks]),
+                np.concatenate([c[2] for c in self.chunks]),
+                np.concatenate([c[3] for c in self.chunks]),
+            )]
+        return self.chunks[0]
+
+    def select(self, keep: Sequence[int]) -> None:
+        keys, vals, clocks, nodes = self._normalize()
+        sel = np.asarray(keep, np.int64)
+        self.chunks = [([keys[i] for i in keep], vals[sel], clocks[sel],
+                        nodes[sel])]
+
+    def to_group(self) -> PlaneGroup:
+        keys, vals, clocks, nodes = self._normalize()
+        return PlaneGroup(self.shape, self.dtype, keys, vals, clocks, nodes)
+
+
+class PlaneBuffer:
+    """Mutable accumulator behind a replication channel (gossip inbox,
+    hinted handoff, cache push queue).
+
+    Arena-eligible traffic is packed on ``add`` (the payload row is held
+    as a flat view; stacking happens once at drain); everything else
+    lands in the sidecar.  ``split`` pops deliverable items as a
+    :class:`PlaneBatch`, deferring whole-key rows with probability
+    ``defer_prob`` — row-granular, matching the per-item deferral of the
+    ``List[(key, lattice)]`` queues this replaces.
+    """
+
+    __slots__ = ("_node_ids", "_node_pos", "_groups", "_sidecar")
+
+    def __init__(self) -> None:
+        self._node_ids: List[str] = []
+        self._node_pos: Dict[str, int] = {}
+        self._groups: Dict[_GroupKey, _GroupAccum] = {}
+        self._sidecar: List[Tuple[str, Lattice]] = []
+
+    def _intern(self, node_id: str) -> int:
+        pos = self._node_pos.get(node_id)
+        if pos is None:
+            pos = len(self._node_ids)
+            self._node_ids.append(node_id)
+            self._node_pos[node_id] = pos
+        return pos
+
+    def _accum(self, group: _GroupKey, shape: Tuple[int, ...],
+               dtype: np.dtype) -> _GroupAccum:
+        acc = self._groups.get(group)
+        if acc is None:
+            acc = _GroupAccum(shape, dtype)
+            self._groups[group] = acc
+        return acc
+
+    def __len__(self) -> int:
+        return (sum(len(a) for a in self._groups.values())
+                + len(self._sidecar))
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+    def add(self, key: str, value: Lattice) -> None:
+        """Queue one update: packed when arena-eligible, sidecar else."""
+        if is_arena_lww(value):
+            arr = tensor_payload(value.value)
+            clock, node_id = value.timestamp
+            acc = self._accum((tuple(arr.shape), arr.dtype.name),
+                              tuple(arr.shape), arr.dtype)
+            acc.add_row(key, arr.reshape(-1), clock, self._intern(node_id))
+        else:
+            self._sidecar.append((key, value))
+
+    def add_batch(self, batch: PlaneBatch) -> None:
+        """Splice a packed batch in: O(1) per group (the node-index remap
+        through the buffer's intern table is the only per-row work)."""
+        remap = np.asarray([self._intern(n) for n in batch.node_ids]
+                           or [0], np.int32)
+        for group, pg in batch.groups.items():
+            if not len(pg):
+                continue
+            acc = self._accum(group, pg.shape, pg.dtype)
+            acc.add_chunk(list(pg.keys), pg.vals, pg.clocks,
+                          remap[pg.node_idx[:, 0]].reshape(-1, 1))
+        self._sidecar.extend(batch.sidecar)
+
+    def purge(self, key: str) -> None:
+        """Drop every queued row/sidecar entry for ``key`` (delete path)."""
+        for group, acc in list(self._groups.items()):
+            if acc.has_key(key):
+                keys = acc._normalize()[0]
+                keep = [i for i, k in enumerate(keys) if k != key]
+                if keep:
+                    acc.select(keep)
+                else:
+                    del self._groups[group]
+        self._sidecar = [(k, v) for k, v in self._sidecar if k != key]
+
+    def drain(self) -> PlaneBatch:
+        """Pop everything as one PlaneBatch."""
+        return self.split(None, 0.0)
+
+    def split(self, rng, defer_prob: float) -> PlaneBatch:
+        """Pop deliverable items; each row/sidecar entry independently
+        defers (stays queued) with probability ``defer_prob``."""
+        batch = PlaneBatch(self._node_ids)
+        if rng is None or defer_prob <= 0.0:
+            for group, acc in self._groups.items():
+                batch.groups[group] = acc.to_group()
+            batch.sidecar = self._sidecar
+            self._groups = {}
+            self._sidecar = []
+            return batch
+        for group, acc in list(self._groups.items()):
+            n = len(acc)
+            defer = [i for i in range(n) if rng.random() < defer_prob]
+            if not defer:
+                batch.groups[group] = acc.to_group()
+                del self._groups[group]
+                continue
+            kept = set(defer)
+            deliver = [i for i in range(n) if i not in kept]
+            if deliver:
+                batch.groups[group] = acc.to_group().take(deliver)
+            acc.select(defer)
+        deliver_sc, keep_sc = [], []
+        for item in self._sidecar:
+            (keep_sc if rng.random() < defer_prob else deliver_sc).append(item)
+        batch.sidecar = deliver_sc
+        self._sidecar = keep_sc
+        return batch
+
+
 class _Slab:
     __slots__ = ("shape", "dtype", "dim", "vals", "clocks", "nodes", "rows",
                  "row_keys")
@@ -266,6 +580,9 @@ class LatticeArena:
         # memoized LWWLattice per key so repeated reads cost a dict hit,
         # not an O(D) payload copy; invalidated on any row write
         self._materialized: Dict[str, LWWLattice] = {}
+        # telemetry: per-key LWWLattice constructions (memo misses).  The
+        # plane wire format exists so replication paths keep this at zero.
+        self.materializations = 0
         registry.subscribe(self)
 
     # -- plumbing -------------------------------------------------------------
@@ -279,9 +596,13 @@ class LatticeArena:
         self._materialized.clear()  # conservative: rank planes just moved
 
     def slab_for(self, group: _GroupKey, arr: np.ndarray) -> _Slab:
+        return self.slab_for_meta(group, tuple(arr.shape), arr.dtype)
+
+    def slab_for_meta(self, group: _GroupKey, shape: Tuple[int, ...],
+                      dtype: np.dtype) -> _Slab:
         slab = self._slabs.get(group)
         if slab is None:
-            slab = _Slab(tuple(arr.shape), arr.dtype)
+            slab = _Slab(shape, dtype)
             self._slabs[group] = slab
         return slab
 
@@ -339,7 +660,12 @@ class LatticeArena:
               self.registry.node_id(int(slab.nodes[row, 0])))
         lat = LWWLattice(ts, value)
         self._materialized[key] = lat
+        self.materializations += 1
         return lat
+
+    def clear_memo(self) -> None:
+        """Drop memoized registers (benchmarks model cold object reads)."""
+        self._materialized.clear()
 
     def row_of(self, key: str) -> Optional[Tuple[int, int, np.ndarray]]:
         """(clock, rank, flat-view) of the stored row — no copy."""
@@ -358,6 +684,70 @@ class LatticeArena:
         self._slabs[group].drop(key)
         self._materialized.pop(key, None)
         return True
+
+    # -- the plane wire format -------------------------------------------------
+    def export_planes(self, keys: Sequence[str]) -> PlaneBatch:
+        """Snapshot stored rows for ``keys`` into a :class:`PlaneBatch`.
+
+        One vectorized gather per slab group; keys not resident in the
+        arena are skipped (``MergeEngine.export_planes`` adds fallback
+        entries to the sidecar).  Node planes hold registry ranks, so the
+        batch's intern table is the registry's current id list — the
+        receiver translates back through ids, never raw ranks.
+        """
+        batch = PlaneBatch(self.registry._ids)
+        by_group: Dict[_GroupKey, List[str]] = {}
+        for key in keys:
+            group = self._key_group.get(key)
+            if group is not None:
+                by_group.setdefault(group, []).append(key)
+        for group, ks in by_group.items():
+            slab = self._slabs[group]
+            rows = np.asarray([slab.rows[k] for k in ks], np.int64)
+            span = _contiguous_span(rows)
+            if span is not None:  # steady-state layout: slice copies
+                vals = slab.vals[span[0]:span[1]].copy()
+                clocks = slab.clocks[span[0]:span[1]].copy()
+                nodes = slab.nodes[span[0]:span[1]].copy()
+            else:
+                vals = slab.vals[rows]
+                clocks = slab.clocks[rows]
+                nodes = slab.nodes[rows]
+            batch.groups[group] = PlaneGroup(
+                slab.shape, slab.dtype, ks, vals, clocks, nodes)
+        return batch
+
+    def bulk_write(self, group: _GroupKey, keys: Sequence[str],
+                   clocks: np.ndarray, ranks: np.ndarray,
+                   vals: np.ndarray) -> None:
+        """Vectorized multi-row overwrite: per-key work is dict upkeep
+        only; the payload/clock/rank planes land as three scatters."""
+        slab = self._slabs[group]
+        rows = np.empty(len(keys), np.int64)
+        for i, key in enumerate(keys):
+            prev = self._key_group.get(key)
+            if prev is not None and prev != group:
+                self._slabs[prev].drop(key)
+            rows[i] = slab._alloc(key)
+            self._key_group[key] = group
+            self._materialized.pop(key, None)
+        slab.vals[rows] = vals
+        slab.clocks[rows] = clocks
+        slab.nodes[rows] = ranks
+
+    def scatter_existing(self, group: _GroupKey, keys: Sequence[str],
+                         rows: np.ndarray, clocks: np.ndarray,
+                         ranks: np.ndarray, vals: np.ndarray) -> None:
+        """Steady-state write-back: every key already lives at ``rows`` in
+        this slab, so the update is three scatters and (only if a reader
+        memoized something) memo invalidation."""
+        slab = self._slabs[group]
+        slab.vals[rows] = vals
+        slab.clocks[rows] = clocks
+        slab.nodes[rows] = ranks
+        if self._materialized:
+            for key in keys:
+                self._materialized.pop(key, None)
 
 
 # ---------------------------------------------------------------------------
@@ -414,6 +804,11 @@ class MergeEngine:
         self.launches = 0
         self.batched_keys = 0
         self.fallback_merges = 0
+        # plane-ingest telemetry: packed rows applied without per-key
+        # objects, and rows that had to materialize one (fallback-held
+        # key or cross-group shape change) — zero in steady state
+        self.plane_keys = 0
+        self.plane_object_fallbacks = 0
 
     # -- point ops -------------------------------------------------------------
     def get(self, key: str) -> Optional[Lattice]:
@@ -507,7 +902,7 @@ class MergeEngine:
             return
 
         K = len(keys)
-        Rp, Kp, Dp = _bucket(R, 2), _bucket(K, 8), _bucket(D, 128)
+        Rp, Kp, Dp = _bucket(R, 2), _k_bucket(K), _bucket(D, 128)
         clocks = np.zeros((Rp, Kp, 1), np.int32)
         nodes = np.zeros((Rp, Kp, 1), np.int32)
         vals = np.zeros((Rp, Kp, Dp), slab.dtype)
@@ -527,6 +922,215 @@ class MergeEngine:
                                int(win_node[j, 0]), win_val[j, :D])
         self.launches += 1
         self.batched_keys += K
+
+    # -- the plane wire format: packed export / ingest ---------------------------
+    def export_planes(self, keys: Sequence[str]) -> PlaneBatch:
+        """Pack stored values for ``keys`` for arena-to-arena transfer:
+        arena rows gather into planes, fallback entries ride the sidecar
+        (existing object references — nothing new is constructed)."""
+        batch = self.arena.export_planes(keys)
+        if self.fallback:
+            for key in keys:
+                value = self.fallback.get(key)
+                if value is not None:
+                    batch.sidecar.append((key, value))
+        return batch
+
+    def ingest_planes(self, batch: PlaneBatch,
+                      include_sidecar: bool = True) -> int:
+        """Merge a packed batch in: one ``ops.lww_merge_many`` launch per
+        slab group against the stored rows, vectorized gather/scatter on
+        either side, zero per-key lattice objects for packed traffic.
+
+        Sidecar entries keep exact per-key ``Lattice.merge`` semantics
+        (callers that need special sidecar routing — the causal-cut
+        cache — pass ``include_sidecar=False`` and handle them).
+        Returns the number of items applied.
+        """
+        applied = 0
+        if batch.groups and batch.node_ids:
+            # intern sender ids first: a remap may rewrite stored planes,
+            # and must happen before any rank is read below
+            self.registry.ensure(batch.node_ids)
+        for group, pg in batch.groups.items():
+            applied += self._ingest_group(group, pg, batch.node_ids)
+        if include_sidecar:
+            for key, value in batch.sidecar:
+                self.merge_one(key, value)
+                applied += 1
+        return applied
+
+    def _ingest_group(self, group: _GroupKey, pg: PlaneGroup,
+                      node_ids: List[str]) -> int:
+        K = len(pg)
+        if K == 0:
+            return 0
+        rank_of = np.asarray([self.registry.rank(n) for n in node_ids]
+                             or [0], np.int32)
+        ranks = rank_of[pg.node_idx[:, 0]]
+        # rows the planes cannot merge in place — a fallback-held key or a
+        # cross-group shape/dtype change — take the exact per-key path
+        kg = self.arena._key_group
+        fb = self.fallback
+        if fb:
+            bad = [i for i, k in enumerate(pg.keys)
+                   if k in fb or kg.get(k, group) != group]
+        else:
+            bad = [i for i, k in enumerate(pg.keys)
+                   if kg.get(k, group) != group]
+        if bad:
+            self.plane_object_fallbacks += len(bad)
+            for i in bad:
+                key = pg.keys[i]
+                ts = (int(pg.clocks[i, 0]), node_ids[int(pg.node_idx[i, 0])])
+                self.merge_one(
+                    key, LWWLattice(ts, pg.vals[i].copy().reshape(pg.shape)))
+            if len(bad) == K:
+                return K
+            kept = set(bad)
+            eligible = [i for i in range(K) if i not in kept]
+            ranks = ranks[np.asarray(eligible, np.int64)]
+            pg = pg.take(eligible)
+        kk = len(pg)
+        slab = self.arena.slab_for_meta(group, pg.shape, pg.dtype)
+        ranks_in = ranks.reshape(-1, 1)
+        self.plane_keys += kk
+        if len(set(pg.keys)) != kk:
+            # duplicate keys (several gossip rounds queued): general
+            # R-candidate packing, still ONE launch for the group
+            self._ingest_group_multi(group, pg, slab, ranks_in)
+            return K
+        rows_of = slab.rows
+        stored_list = [rows_of.get(k, -1) for k in pg.keys]
+        all_stored = -1 not in stored_list
+        stored_rows = np.asarray(stored_list, np.int64)
+        span: Optional[Tuple[int, int]] = None
+        if all_stored:
+            # stored candidate first: full-timestamp ties keep the stored
+            # row, exactly like the per-key fold (acc.merge(incoming)).
+            # Contiguous rows (the steady-state layout: replicas insert
+            # keys in the same order) read as zero-copy slices.
+            span = _contiguous_span(stored_rows)
+            if span is not None:
+                a_clocks = slab.clocks[span[0]:span[1]]
+                a_nodes = slab.nodes[span[0]:span[1]]
+                a_vals = slab.vals[span[0]:span[1]]
+            else:
+                a_clocks = slab.clocks[stored_rows]
+                a_nodes = slab.nodes[stored_rows]
+                a_vals = slab.vals[stored_rows]
+        else:
+            has_stored = stored_rows >= 0
+            if not has_stored.any():
+                self.arena.bulk_write(group, pg.keys, pg.clocks, ranks_in,
+                                      pg.vals)
+                return K
+            # keys with no stored row pad the stored candidate with the
+            # incoming row — merge is idempotent, the winner is unchanged
+            take = np.where(has_stored, stored_rows, 0)
+            mask = has_stored[:, None]
+            a_clocks = np.where(mask, slab.clocks[take], pg.clocks)
+            a_nodes = np.where(mask, slab.nodes[take], ranks_in)
+            a_vals = np.where(mask, slab.vals[take], pg.vals)
+
+        from ..kernels import ops  # deferred: keep core importable sans jax
+
+        D = slab.dim
+        Kp, Dp = _k_bucket(kk), _bucket(D, 128)
+        if Kp == kk and Dp == D:
+            # aligned: pairwise launch straight off the gathered planes —
+            # no (2, K, D) stacking, no padding copies
+            win_val, win_clock, win_node = ops.lww_merge(
+                a_clocks, a_nodes, a_vals, pg.clocks, ranks_in, pg.vals)
+        else:
+            pads = []
+            for arr, cols in ((a_clocks, 1), (a_nodes, 1), (a_vals, Dp),
+                              (pg.clocks, 1), (ranks_in, 1), (pg.vals, Dp)):
+                padded = np.zeros((Kp, cols), arr.dtype)
+                padded[:kk, : arr.shape[1]] = arr
+                pads.append(padded)
+            win_val, win_clock, win_node = ops.lww_merge(*pads)
+        win_clock = np.asarray(win_clock)[:kk]
+        win_node = np.asarray(win_node)[:kk]
+        win_val = np.asarray(win_val)[:kk, :D].astype(slab.dtype, copy=False)
+        if span is not None:  # contiguous: three slice assigns
+            slab.vals[span[0]:span[1]] = win_val
+            slab.clocks[span[0]:span[1]] = win_clock
+            slab.nodes[span[0]:span[1]] = win_node
+            if self.arena._materialized:
+                for key in pg.keys:
+                    self.arena._materialized.pop(key, None)
+        elif all_stored:
+            self.arena.scatter_existing(group, pg.keys, stored_rows,
+                                        win_clock, win_node, win_val)
+        else:
+            self.arena.bulk_write(group, pg.keys, win_clock, win_node,
+                                  win_val)
+        self.launches += 1
+        self.batched_keys += kk
+        return K
+
+    def _ingest_group_multi(self, group: _GroupKey, pg: PlaneGroup,
+                            slab: _Slab, ranks_in: np.ndarray) -> None:
+        """R-candidate ingest for batches carrying duplicate keys: pool =
+        [incoming rows; touched stored rows], an (R, U) index matrix
+        gathers candidates per unique key (stored first, then delivery
+        order; short keys pad with their first candidate — idempotent)."""
+        kk = len(pg)
+        order: Dict[str, int] = {}
+        cands: List[List[int]] = []
+        for i, key in enumerate(pg.keys):
+            j = order.get(key)
+            if j is None:
+                order[key] = len(cands)
+                cands.append([i])
+            else:
+                cands[j].append(i)
+        ukeys = list(order)
+        U = len(ukeys)
+        stored_take: List[int] = []
+        for j, key in enumerate(ukeys):
+            row = slab.rows.get(key)
+            if row is not None:
+                cands[j].insert(0, kk + len(stored_take))
+                stored_take.append(row)
+        pool_vals, pool_clocks, pool_nodes = pg.vals, pg.clocks, ranks_in
+        if stored_take:
+            take = np.asarray(stored_take, np.int64)
+            pool_vals = np.concatenate([pool_vals, slab.vals[take]])
+            pool_clocks = np.concatenate([pool_clocks, slab.clocks[take]])
+            pool_nodes = np.concatenate([pool_nodes, slab.nodes[take]])
+        R = max(len(c) for c in cands)
+        idx = np.empty((R, U), np.int64)
+        for j, c in enumerate(cands):
+            idx[:, j] = [c[r] if r < len(c) else c[0] for r in range(R)]
+        D = slab.dim
+        Rp, Kp, Dp = _bucket(R, 2), _k_bucket(U), _bucket(D, 128)
+        clocks = np.zeros((Rp, Kp, 1), np.int32)
+        nodes = np.zeros((Rp, Kp, 1), np.int32)
+        vals = np.zeros((Rp, Kp, Dp), slab.dtype)
+        clocks[:R, :U] = pool_clocks[idx]
+        nodes[:R, :U] = pool_nodes[idx]
+        vals[:R, :U, :D] = pool_vals[idx]
+        for r in range(R, Rp):  # replica padding: first candidate again
+            clocks[r, :U] = clocks[0, :U]
+            nodes[r, :U] = nodes[0, :U]
+            vals[r, :U] = vals[0, :U]
+        self._launch_planes(group, ukeys, slab, clocks, nodes, vals)
+
+    def _launch_planes(self, group: _GroupKey, keys: Sequence[str],
+                       slab: _Slab, clocks: np.ndarray, nodes: np.ndarray,
+                       vals: np.ndarray) -> None:
+        from ..kernels import ops  # deferred: keep core importable sans jax
+
+        kk, D = len(keys), slab.dim
+        win_val, win_clock, win_node = ops.lww_merge_many(clocks, nodes, vals)
+        self.arena.bulk_write(
+            group, keys,
+            np.asarray(win_clock)[:kk], np.asarray(win_node)[:kk],
+            np.asarray(win_val)[:kk, :D].astype(slab.dtype, copy=False))
+        self.launches += 1
+        self.batched_keys += kk
 
 
 # ---------------------------------------------------------------------------
@@ -596,7 +1200,7 @@ def vc_classify_batch(
         for nid in (*a.entries().keys(), *b.entries().keys())
     })
     col = {nid: i for i, nid in enumerate(ids)}
-    Kp, Np = _bucket(K, 8), _bucket(max(len(ids), 1), 8)
+    Kp, Np = _k_bucket(K), _bucket(max(len(ids), 1), 8)
     mat_a = np.zeros((Kp, Np), np.int32)
     mat_b = np.zeros((Kp, Np), np.int32)
     for j, (a, b) in enumerate(pairs):

@@ -192,16 +192,19 @@ class ExecutorCache:
             # idempotence makes re-flushing already-applied items safe).
             self.kvs.put_many(flush_now, clock=None)
         self.pending_flush = still
-        push_now: List[Tuple[str, Lattice]] = []
-        for key, value in self.kvs.drain_cache_pushes(self.cache_id):
-            if defer_prob > 0 and rng.random() < defer_prob:
-                self.kvs.defer_cache_push(self.cache_id, key, value)
-            elif isinstance(value, CausalLattice):
-                self.insert(key, value)  # causal-cut check stays per-key
-            else:
-                push_now.append((key, value))
-        if push_now:
-            self.engine.merge_batch(push_now)
+        # KVS pushes arrive as a packed PlaneBatch; deferral is row-
+        # granular inside the KVS queue.  Packed rows ingest as one
+        # launch per payload group (no per-key objects); the sidecar is
+        # handled here because causal values must route through the
+        # causal-cut check, not a blind merge.
+        pushes = self.kvs.drain_cache_pushes(self.cache_id, rng, defer_prob)
+        if pushes:
+            for key, value in pushes.sidecar:
+                if isinstance(value, CausalLattice):
+                    self.insert(key, value)  # causal-cut check stays per-key
+                else:
+                    self.engine.merge_one(key, value)
+            self.engine.ingest_planes(pushes, include_sidecar=False)
         still_pending: List[Tuple[str, CausalLattice]] = []
         for key, value in self.pending_causal:
             if self._deps_covered(value):
@@ -224,6 +227,12 @@ class ExecutorCache:
         self.snapshots.clear()
         self.pending_flush.clear()
         self.pending_causal.clear()
+        # A recovered cache restarts empty: retract the stale keyset
+        # subscriptions published before the failure and drop pushes that
+        # queued while failed — otherwise the KVS keeps pushing updates
+        # for keys this cache no longer holds.
+        self.kvs.publish_keyset(self.cache_id, set())
+        self.kvs.drop_cache_pushes(self.cache_id)
 
     @property
     def keyset(self) -> Set[str]:

@@ -104,11 +104,10 @@ def gather_via_kvs(
     model = op_model or profile.kvs_op
     for node, value in metrics.items():
         kvs.put(f"__metric_{node}", LWWLattice(clk.tick(), value))
-        if clock is not None:
-            # publishes happen in parallel across members: account only the
-            # slowest (approximate with one sample)
-            pass
     if clock is not None:
+        # publishes happen in parallel across members: account one
+        # message hop for the whole publish wave (approximate the
+        # slowest with a single sample)
         clock.advance(profile.sample(model, 64))
     total = 0.0
     for node in metrics:

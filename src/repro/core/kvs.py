@@ -26,7 +26,13 @@ import random
 from collections import defaultdict
 from typing import Dict, List, Optional, Set, Tuple
 
-from .arena import MergeEngine, NodeRegistry, try_reduce_lww
+from .arena import (
+    MergeEngine,
+    NodeRegistry,
+    PlaneBatch,
+    PlaneBuffer,
+    try_reduce_lww,
+)
 from .lattices import Lattice
 from .netsim import NetworkProfile, VirtualClock, DEFAULT_PROFILE
 
@@ -48,7 +54,7 @@ class StorageNode:
         self.node_id = node_id
         self.engine = MergeEngine(registry)
         self.store = self.engine.view
-        self.inbox: List[Tuple[str, Lattice]] = []  # pending gossip
+        self.inbox = PlaneBuffer()  # pending gossip, packed on the wire
         self.alive = True
         self.puts = 0
         self.gets = 0
@@ -58,25 +64,20 @@ class StorageNode:
 
     def drain_inbox(self, rng: Optional[random.Random] = None,
                     defer_prob: float = 0.0) -> int:
-        """Apply pending gossip; each item may defer to the next round.
+        """Apply pending gossip; each queued row may defer to the next round.
 
         Out-of-order delivery is safe *because* values are lattices: merge
         is ACI, so replicas converge regardless of interleaving (§2.2).
-        The non-deferred items are applied as ONE batch: tensor-valued
-        LWW traffic coalesces into a single ``ops.lww_merge_many`` launch
-        per payload group instead of per-key Python merges.
+        The inbox is a :class:`PlaneBuffer`: arena-eligible traffic
+        arrives packed and is applied as one ``ops.lww_merge_many``
+        launch per payload group via ``ingest_planes`` — no per-key
+        lattice objects on the gossip path; the sidecar (opaque/non-LWW
+        values) keeps exact per-key merges.
         """
-        deferred: List[Tuple[str, Lattice]] = []
-        batch: List[Tuple[str, Lattice]] = []
-        for key, value in self.inbox:
-            if rng is not None and defer_prob > 0 and rng.random() < defer_prob:
-                deferred.append((key, value))
-            else:
-                batch.append((key, value))
-        self.inbox = deferred
-        if batch:
-            self.engine.merge_batch(batch)
-        return len(batch)
+        batch = self.inbox.split(rng, defer_prob)
+        if not batch:
+            return 0
+        return self.engine.ingest_planes(batch)
 
 
 class AnnaKVS:
@@ -103,33 +104,51 @@ class AnnaKVS:
         self._key_replication: Dict[str, int] = {}  # selective replication
         # cached-keyset index (paper §4.2): key -> caches that hold it
         self._cache_index: Dict[str, Set[str]] = defaultdict(set)
-        self._cache_pushes: Dict[str, List[Tuple[str, Lattice]]] = defaultdict(list)
-        self._hints: Dict[str, List[Tuple[str, Lattice]]] = defaultdict(list)
+        self._cache_pushes: Dict[str, PlaneBuffer] = defaultdict(PlaneBuffer)
+        self._hints: Dict[str, PlaneBuffer] = defaultdict(PlaneBuffer)
         for i in range(num_nodes):
             self.add_node(f"anna-{i}")
 
     # -- membership -----------------------------------------------------------
+    def _enqueue_handoff(self, owner: str, batch: PlaneBatch) -> None:
+        """Route a membership-change handoff batch to ``owner``, through
+        the same dead-owner hinting as ``_route_put``: data handed to a
+        failed node must wait in ``_hints`` (delivered on recovery), not
+        rot in a dead inbox."""
+        if not batch:
+            return
+        node = self.nodes.get(owner)
+        if node is not None and node.alive:
+            node.inbox.add_batch(batch)
+        else:
+            self._hints[owner].add_batch(batch)
+
     def add_node(self, node_id: str) -> None:
         assert node_id not in self.nodes
         self.nodes[node_id] = StorageNode(node_id, self.registry)
         for v in range(self.VNODES):
             bisect.insort(self._ring, (_hash(f"{node_id}#{v}"), node_id))
         # New owner: existing replicas re-gossip their keys so ownership
-        # converges (merge makes this idempotent / safe).
-        for other in self.nodes.values():
+        # converges (merge makes this idempotent / safe).  The handoff is
+        # one packed export per source node, not per-key objects.
+        for other in list(self.nodes.values()):
             if other.node_id == node_id:
                 continue
-            for key, val in list(other.store.items()):
-                if node_id in self._owners(key):
-                    self.nodes[node_id].inbox.append((key, val))
+            owned = [k for k in other.store if node_id in self._owners(k)]
+            if owned:
+                self._enqueue_handoff(node_id, other.engine.export_planes(owned))
 
     def remove_node(self, node_id: str) -> None:
         node = self.nodes.pop(node_id)
         self._ring = [(h, n) for (h, n) in self._ring if n != node_id]
-        # hand off data to the new owners by merge
-        for key, val in node.store.items():
+        # hand off data to the new owners by merge: group the departing
+        # node's keys per new owner, one packed export per owner
+        by_owner: Dict[str, List[str]] = defaultdict(list)
+        for key in node.store:
             for owner in self._owners(key):
-                self.nodes[owner].inbox.append((key, val))
+                by_owner[owner].append(key)
+        for owner, keys in by_owner.items():
+            self._enqueue_handoff(owner, node.engine.export_planes(keys))
 
     def fail_node(self, node_id: str) -> None:
         self.nodes[node_id].alive = False
@@ -137,8 +156,9 @@ class AnnaKVS:
     def recover_node(self, node_id: str) -> None:
         node = self.nodes[node_id]
         node.alive = True
-        for key, val in self._hints.pop(node_id, []):
-            node.inbox.append((key, val))
+        hints = self._hints.pop(node_id, None)
+        if hints is not None:
+            node.inbox.add_batch(hints.drain())
 
     # -- ring routing -----------------------------------------------------------
     def _owners(self, key: str) -> List[str]:
@@ -183,7 +203,7 @@ class AnnaKVS:
         for owner in owners:
             node = self.nodes[owner]
             if not node.alive:
-                self._hints[owner].append((key, value))
+                self._hints[owner].add(key, value)
                 continue
             if not merge_targets or sync:
                 merge_targets.append(owner)
@@ -194,7 +214,7 @@ class AnnaKVS:
             raise RuntimeError(f"no live replica for {key}")
         # push-based cache invalidation/update (paper §4.2)
         for cache_id in self._cache_index.get(key, ()):
-            self._cache_pushes[cache_id].append((key, value))
+            self._cache_pushes[cache_id].add(key, value)
         return merge_targets, gossip_targets
 
     def put(
@@ -213,7 +233,7 @@ class AnnaKVS:
         for owner in merge_targets:
             merged = self.nodes[owner].merge_in(key, value)
         for owner in gossip_targets:
-            self.nodes[owner].inbox.append((key, value))
+            self.nodes[owner].inbox.add(key, value)  # packed at enqueue
         return merged
 
     def put_many(
@@ -249,7 +269,7 @@ class AnnaKVS:
             for owner in merge_targets:
                 coord_batches[owner].append((key, value))
             for owner in gossip_targets:
-                self.nodes[owner].inbox.append((key, value))
+                self.nodes[owner].inbox.add(key, value)
         apply_batches()
         return len(items)
 
@@ -309,17 +329,16 @@ class AnnaKVS:
     def delete(self, key: str) -> None:
         """Remove a key everywhere, including in-flight copies: gossip
         inboxes, hinted handoffs and pending cache pushes would otherwise
-        resurrect the value on the next tick/recovery."""
+        resurrect the value on the next tick/recovery.  In-flight copies
+        live in packed PlaneBuffers; purge drops the key's rows (and any
+        sidecar entries) in place."""
         for node in self.nodes.values():
             node.store.pop(key, None)
-            if node.inbox:
-                node.inbox = [(k, v) for k, v in node.inbox if k != key]
-        for owner, hints in list(self._hints.items()):
-            self._hints[owner] = [(k, v) for k, v in hints if k != key]
-        for cache_id, pushes in list(self._cache_pushes.items()):
-            self._cache_pushes[cache_id] = [
-                (k, v) for k, v in pushes if k != key
-            ]
+            node.inbox.purge(key)
+        for hints in self._hints.values():
+            hints.purge(key)
+        for pushes in self._cache_pushes.values():
+            pushes.purge(key)
 
     # -- cache keyset index (paper §4.2) -----------------------------------------
     def publish_keyset(self, cache_id: str, keys: Set[str]) -> None:
@@ -333,14 +352,35 @@ class AnnaKVS:
         for key in keys:
             self._cache_index[key].add(cache_id)
 
-    def drain_cache_pushes(self, cache_id: str) -> List[Tuple[str, Lattice]]:
-        out = self._cache_pushes.pop(cache_id, [])
-        return out
+    def drain_cache_pushes(
+        self,
+        cache_id: str,
+        rng: Optional[random.Random] = None,
+        defer_prob: float = 0.0,
+    ) -> PlaneBatch:
+        """Pop pending pushes for a cache as a packed :class:`PlaneBatch`.
+
+        With ``defer_prob`` each queued row/sidecar entry independently
+        stays behind for the next tick (the cache's out-of-order delivery
+        knob) — deferral happens plane-native, no requeue round-trip.
+        """
+        buf = self._cache_pushes.get(cache_id)
+        if buf is None:
+            return PlaneBatch()
+        batch = buf.split(rng, defer_prob)
+        if not buf:
+            self._cache_pushes.pop(cache_id, None)
+        return batch
+
+    def drop_cache_pushes(self, cache_id: str) -> None:
+        """Discard queued pushes (cache recovery: a recovered cache is
+        empty and must not receive pushes for keys it no longer holds)."""
+        self._cache_pushes.pop(cache_id, None)
 
     def defer_cache_push(self, cache_id: str, key: str, value: Lattice) -> None:
         """Requeue a pushed update for the cache's next tick (public API —
         caches must not reach into the push queues directly)."""
-        self._cache_pushes[cache_id].append((key, value))
+        self._cache_pushes[cache_id].add(key, value)
 
     def caches_holding(self, key: str) -> Set[str]:
         return set(self._cache_index.get(key, ()))

@@ -100,16 +100,93 @@ def _shard_mapped(fn, arg_axes, out_axes, args):
 # jit-compiled jnp mirrors, which are the same math XLA-fused; the Mosaic
 # kernels serve aligned shapes on real TPUs.  test_kernels still
 # exercises the Pallas bodies directly under interpret=True.
+#
+# K-sharding: arena slab planes are partitioned along the key axis.
+# With more than one local device the batched lattice ops run under
+# shard_map over a 1-D "kvs" mesh (launch.mesh.make_merge_mesh): each
+# device merges its local rows — the op is elementwise along K, so no
+# collectives and the result is bit-identical to the single-device path,
+# which is used unchanged when the mesh has one device (or K does not
+# divide).  Growing K is then a mesh decision, not a rewrite.
 # ---------------------------------------------------------------------------
+
+from jax.sharding import PartitionSpec as P
 
 _lww_merge_xla = jax.jit(ref.lww_merge_ref)
 _lww_merge_many_xla = jax.jit(ref.lww_merge_many_ref)
 _vc_join_classify_xla = jax.jit(ref.vc_join_classify_ref)
 _causal_merge_xla = jax.jit(ref.causal_merge_ref)
 
+_MERGE_MESH = {"mesh": None, "resolved": False}
+_SHARDED_FNS = {}
+
+
+def set_merge_mesh(mesh) -> None:
+    """Set (or disable, with None) the K-sharding mesh for lattice ops."""
+    _MERGE_MESH["mesh"] = mesh
+    _MERGE_MESH["resolved"] = True
+    _SHARDED_FNS.clear()
+
+
+def merge_mesh():
+    """The active 1-D merge mesh; auto-built from the local devices on
+    first use (None — the unsharded path — for a single device)."""
+    if not _MERGE_MESH["resolved"]:
+        from ..launch.mesh import make_merge_mesh
+
+        _MERGE_MESH["mesh"] = make_merge_mesh()
+        _MERGE_MESH["resolved"] = True
+    return _MERGE_MESH["mesh"]
+
+
+def merge_mesh_size() -> int:
+    mesh = merge_mesh()
+    return 1 if mesh is None else mesh.size
+
+
+def _lww_many_local(clocks, nodes, vals):
+    """Per-device body: shapes here are local (post-partition)."""
+    R, K, D = vals.shape
+    if _BACKEND == "reference" or _interpret() or K % 8 != 0 or D % 128 != 0:
+        return ref.lww_merge_many_ref(clocks, nodes, vals)
+    return _lww_many_kernel(clocks, nodes, vals, interpret=False)
+
+
+def _lww_pair_local(clock_a, node_a, val_a, clock_b, node_b, val_b):
+    K, D = val_a.shape
+    if _BACKEND == "reference" or _interpret() or K % 8 != 0 or D % 128 != 0:
+        return ref.lww_merge_ref(clock_a, node_a, val_a, clock_b, node_b, val_b)
+    return _lww_kernel(
+        clock_a, node_a, val_a, clock_b, node_b, val_b, interpret=False
+    )
+
+
+def _vc_local(a, b):
+    K, N = a.shape
+    if _BACKEND == "reference" or _interpret() or K % 8 != 0:
+        return ref.vc_join_classify_ref(a, b)
+    return _vc_kernel(a, b, interpret=False)
+
+
+def _k_sharded(name, body, mesh, in_specs, out_specs):
+    key = (name, mesh, _BACKEND)
+    fn = _SHARDED_FNS.get(key)
+    if fn is None:
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=False))
+        _SHARDED_FNS[key] = fn
+    return fn
+
 
 def lww_merge(clock_a, node_a, val_a, clock_b, node_b, val_b):
     K, D = val_a.shape
+    mesh = merge_mesh()
+    if mesh is not None and K >= mesh.size and K % mesh.size == 0:
+        fn = _k_sharded(
+            "lww_pair", _lww_pair_local, mesh,
+            in_specs=(P("kvs", None),) * 6,
+            out_specs=(P("kvs", None),) * 3)
+        return fn(clock_a, node_a, val_a, clock_b, node_b, val_b)
     if _BACKEND == "reference" or _interpret() or K % 8 != 0 or D % 128 != 0:
         return _lww_merge_xla(clock_a, node_a, val_a, clock_b, node_b, val_b)
     return _lww_kernel(
@@ -119,6 +196,13 @@ def lww_merge(clock_a, node_a, val_a, clock_b, node_b, val_b):
 
 def lww_merge_many(clocks, nodes, vals):
     R, K, D = vals.shape
+    mesh = merge_mesh()
+    if mesh is not None and K >= mesh.size and K % mesh.size == 0:
+        fn = _k_sharded(
+            "lww_many", _lww_many_local, mesh,
+            in_specs=(P(None, "kvs", None),) * 3,
+            out_specs=(P("kvs", None), P("kvs", None), P("kvs", None)))
+        return fn(clocks, nodes, vals)
     if _BACKEND == "reference" or _interpret() or K % 8 != 0 or D % 128 != 0:
         return _lww_merge_many_xla(clocks, nodes, vals)
     return _lww_many_kernel(clocks, nodes, vals, interpret=False)
@@ -126,6 +210,13 @@ def lww_merge_many(clocks, nodes, vals):
 
 def vc_join_classify(a, b):
     K, N = a.shape
+    mesh = merge_mesh()
+    if mesh is not None and K >= mesh.size and K % mesh.size == 0:
+        fn = _k_sharded(
+            "vc_classify", _vc_local, mesh,
+            in_specs=(P("kvs", None),) * 2,
+            out_specs=(P("kvs", None), P("kvs", None), P("kvs", None)))
+        return fn(a, b)
     if _BACKEND == "reference" or _interpret() or K % 8 != 0:
         return _vc_join_classify_xla(a, b)
     return _vc_kernel(a, b, interpret=False)

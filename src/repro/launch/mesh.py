@@ -36,6 +36,20 @@ def make_auto_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     return jax.make_mesh(shape, axes, **_auto_axis_types(len(axes)))
 
 
+def make_merge_mesh(num_devices: Optional[int] = None) -> Optional[Mesh]:
+    """1-D "kvs" mesh over the local devices for K-sharded storage-tier
+    merge launches (``kernels.ops.lww_merge_many`` / ``vc_join_classify``
+    under ``shard_map``: each device merges its local slab rows).
+
+    Returns None for a single device — the caller keeps the unsharded
+    launch path unchanged.
+    """
+    n = jax.local_device_count() if num_devices is None else num_devices
+    if n <= 1:
+        return None
+    return make_auto_mesh((n,), ("kvs",))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

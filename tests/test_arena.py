@@ -262,7 +262,7 @@ def test_drain_inbox_batches_tensor_gossip_and_matches_fold():
         key = f"t{k}"
         for _ in range(3):
             lat = _random_lww(k)
-            node.inbox.append((key, lat))
+            node.inbox.add(key, lat)
             per_key.setdefault(key, []).append(lat)
     applied = node.drain_inbox()
     assert applied == 36
@@ -308,6 +308,84 @@ def test_cache_tick_batches_flushes_and_pushes():
     assert cache.engine.launches == launches_before + 1
     for key, lat in updates.items():
         _assert_same_register(cache.read_local(key), lat)
+
+
+def test_plane_gossip_convergence_matches_oracle_with_defer_and_delete():
+    """Packed-plane gossip (deferred, out-of-order, with a mid-stream
+    delete) must converge every replica bit-identically to per-key
+    ``LWWLattice.merge`` folds — including (clock, node) tie-breaks."""
+    kvs = AnnaKVS(num_nodes=3, replication=3)
+    oracle = {}
+    for round_i in range(4):
+        for k in range(9):
+            key = f"g{k}"
+            lat = _random_lww(k)  # small clock range: frequent ties
+            kvs.put(key, lat)
+            cur = oracle.get(key)
+            oracle[key] = lat if cur is None else cur.merge(lat)
+        kvs.tick(defer_prob=0.4)  # rows defer independently, out of order
+    kvs.delete("g3")  # purges stored rows AND in-flight packed copies
+    del oracle["g3"]
+    for _ in range(3):
+        kvs.tick()
+    for node in kvs.nodes.values():
+        assert "g3" not in node.store and not node.inbox
+        for key, want in oracle.items():
+            _assert_same_register(node.store[key], want)
+
+
+def test_steady_state_replication_constructs_zero_perkey_objects():
+    """Acceptance: gossip, hinted handoff and cache pushes of arena-
+    eligible traffic move packed planes only — no LWWLattice is
+    constructed on any replication path (merge-engine counters)."""
+    kvs = AnnaKVS(num_nodes=3, replication=3)
+    cache = ExecutorCache("c0", kvs)
+    keys = [f"s{k}" for k in range(8)]
+    for key in keys:  # warm: every replica + the cache holds every key
+        kvs.put(key, _random_lww(0, shape=(16,)))
+        cache.read(key)
+    kvs.tick()
+    cache.publish_keyset()
+    kvs.fail_node("anna-2")  # writes to it queue as packed hints
+
+    engines = [n.engine for n in kvs.nodes.values()] + [cache.engine]
+    for key in keys:  # fresh writes (the coordinator merge is per-key)
+        kvs.put(key, _random_lww(1, shape=(16,)))
+    mats = [e.arena.materializations for e in engines]
+    falls = [e.plane_object_fallbacks for e in engines]
+    planes = [e.plane_keys for e in engines]
+    applied = kvs.tick()  # gossip delivery: packed
+    cache.tick()          # push delivery: packed
+    kvs.recover_node("anna-2")
+    applied += kvs.tick()  # hint delivery: packed
+    assert applied > 0
+    for e, m, f in zip(engines, mats, falls):
+        assert e.arena.materializations == m  # zero objects materialized
+        assert e.plane_object_fallbacks == f  # zero object fallbacks
+    assert sum(e.plane_keys for e in engines) > sum(planes)  # planes moved
+
+
+def test_membership_handoff_moves_packed_planes_not_objects():
+    """add_node / remove_node handoff exports packed planes from the
+    source arenas; tensor keys must transfer with zero materializations."""
+    kvs = AnnaKVS(num_nodes=3, replication=2, sync_replication=True)
+    want = {}
+    for k in range(24):
+        key = f"h{k}"
+        lat = _random_lww(k)
+        kvs.put(key, lat)
+        want[key] = lat
+    kvs.tick()
+    mats = {nid: n.engine.arena.materializations
+            for nid, n in kvs.nodes.items()}
+    kvs.add_node("anna-new")
+    kvs.tick()
+    kvs.remove_node("anna-0")
+    kvs.tick()
+    for nid, node in kvs.nodes.items():
+        assert node.engine.arena.materializations == mats.get(nid, 0)
+    for key, lat in want.items():
+        _assert_same_register(kvs.get_merged(key), lat)
 
 
 def test_tensor_values_survive_full_gossip_convergence():

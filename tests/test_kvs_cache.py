@@ -145,6 +145,51 @@ def test_defer_cache_push_public_api():
     assert cache.read_local("k").reveal() == "v2"
 
 
+def test_membership_handoff_hints_for_failed_owner():
+    """Regression: remove_node hands data to the new owners; a FAILED
+    owner's share must wait in _hints (delivered on recovery), not sit in
+    a dead inbox."""
+    kvs = AnnaKVS(num_nodes=3, replication=2, sync_replication=True)
+    clk = LamportClock("w")
+    keys = [f"key-{i}" for i in range(40)]
+    for i, k in enumerate(keys):
+        kvs.put(k, LWWLattice(clk.tick(), i))
+    kvs.fail_node("anna-1")
+    kvs.remove_node("anna-0")  # handoff while an owner is down
+    # nothing may be queued on the dead node; its share is hinted
+    assert not kvs.nodes["anna-1"].inbox
+    assert "anna-1" in kvs._hints and kvs._hints["anna-1"]
+    kvs.tick()
+    kvs.recover_node("anna-1")
+    kvs.tick()
+    for i, k in enumerate(keys):
+        assert kvs.get_merged(k).reveal() == i
+    # every key owned by the recovered node is durably there
+    held = [k for k in keys if "anna-1" in kvs._owners(k)]
+    assert held and all(k in kvs.nodes["anna-1"].store for k in held)
+
+
+def test_cache_recover_drops_stale_subscriptions_and_pushes():
+    """Regression: a recovered (empty) cache must not keep receiving
+    pushes for keys it no longer holds — recovery republishes an empty
+    keyset and discards queued pushes."""
+    kvs = AnnaKVS(num_nodes=2, replication=1)
+    clk = LamportClock("w")
+    kvs.put("k", LWWLattice(clk.tick(), "v1"))
+    cache = ExecutorCache("c0", kvs)
+    assert cache.read("k").reveal() == "v1"
+    cache.publish_keyset()
+    cache.fail()
+    kvs.put("k", LWWLattice(clk.tick(), "v2"))  # queues a push to c0
+    cache.recover()
+    assert kvs.caches_holding("k") == set()      # stale subscription gone
+    assert not kvs.drain_cache_pushes("c0")      # queued pushes dropped
+    kvs.put("k", LWWLattice(clk.tick(), "v3"))   # no subscriber -> no push
+    cache.tick()
+    assert cache.read_local("k") is None         # cache restarts cold
+    assert cache.read("k").reveal() == "v3"      # miss path refetches
+
+
 def test_set_lattice_registered_functions_pattern():
     kvs = AnnaKVS(num_nodes=2, replication=2, sync_replication=True)
     cur = kvs.get_merged("funcs") or SetLattice()

@@ -1,0 +1,218 @@
+"""Property tests for the PlaneBatch replication wire format.
+
+The invariant: ``export_planes`` -> (PlaneBuffer round trip) ->
+``ingest_planes`` must be indistinguishable from per-key
+``Lattice.merge`` folds — across mixed slab shapes/dtypes, opaque
+sidecar payloads, 64-bit exact-path payloads, duplicate keys, and
+mid-stream ``NodeRegistry`` rank remaps.
+"""
+
+import numpy as np
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # deterministic seeded fallback (see _hypothesis_stub)
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core.arena import MergeEngine, NodeRegistry, PlaneBuffer
+from repro.core.lattices import LWWLattice
+
+KEYS = [f"k{i}" for i in range(6)]
+# ids straddling several sort positions force remaps when they appear late
+NODE_IDS = ["anna-1", "b-mid", "m-node", "zz-late", "a-first"]
+
+
+def _payload(kind: str, seed: int):
+    rng = np.random.default_rng(seed)
+    if kind == "f32":
+        return rng.normal(size=(4,)).astype(np.float32)
+    if kind == "f16":
+        return rng.normal(size=(2, 3)).astype(np.float16)
+    if kind == "i32":
+        return rng.integers(-100, 100, size=(5,)).astype(np.int32)
+    if kind == "i64":  # 64-bit: exact per-key path (sidecar on the wire)
+        return np.array([2 ** 40 + seed, seed], dtype=np.int64)
+    if kind == "opaque":
+        return f"opaque-{seed}"
+    raise AssertionError(kind)
+
+
+def _entry(key_i: int, clock: int, node_i: int, kind_i: int):
+    kind = ["f32", "f32", "f16", "i32", "i64", "opaque"][kind_i]
+    # one (clock, node) <-> one payload, as in the real system
+    seed = abs(hash((clock, node_i, kind))) % 2 ** 31
+    return (KEYS[key_i], LWWLattice((clock, NODE_IDS[node_i]),
+                                    _payload(kind, seed)))
+
+
+ENTRY = st.builds(
+    _entry,
+    st.integers(0, len(KEYS) - 1),   # key
+    st.integers(0, 3),               # clock: small range -> frequent ties
+    st.integers(0, len(NODE_IDS) - 1),
+    st.integers(0, 5),               # payload kind
+)
+
+
+def _fold(entries):
+    oracle = {}
+    for key, lat in entries:
+        cur = oracle.get(key)
+        oracle[key] = lat if cur is None else cur.merge(lat)
+    return oracle
+
+
+def _assert_same(got, want):
+    assert got is not None, want.timestamp
+    assert got.timestamp == want.timestamp, (got.timestamp, want.timestamp)
+    gv, wv = got.value, want.value
+    if isinstance(wv, np.ndarray):
+        assert isinstance(gv, np.ndarray) and gv.dtype == wv.dtype
+        np.testing.assert_array_equal(gv, wv)
+    else:
+        assert gv == wv
+
+
+@given(st.lists(ENTRY, max_size=25), st.lists(ENTRY, max_size=25))
+@settings(max_examples=40, deadline=None)
+def test_export_ingest_roundtrip_equals_per_key_merges(dst_pre, src_entries):
+    """export_planes -> ingest_planes == per-key merge folds, with the
+    receiver pre-populated (diverged) and mixed slab/sidecar traffic."""
+    src = MergeEngine(NodeRegistry())
+    for key, lat in src_entries:
+        src.merge_one(key, lat)
+    dst = MergeEngine(NodeRegistry())
+    for key, lat in dst_pre:
+        dst.merge_one(key, lat)
+
+    src_keys = list(dict.fromkeys(k for k, _ in src_entries))
+    batch = src.export_planes(src_keys)
+    dst.ingest_planes(batch)
+
+    oracle = _fold(dst_pre)
+    for key, lat in _fold(src_entries).items():  # export sends merged rows
+        cur = oracle.get(key)
+        oracle[key] = lat if cur is None else cur.merge(lat)
+    for key, want in oracle.items():
+        _assert_same(dst.get(key), want)
+
+
+@given(st.lists(ENTRY, max_size=25), st.lists(ENTRY, max_size=25))
+@settings(max_examples=40, deadline=None)
+def test_buffer_add_split_ingest_equals_per_key_merges(dst_pre, src_entries):
+    """The inbox path: per-item PlaneBuffer.add (duplicate keys stay
+    distinct rows), drain, ingest — delivery-order fold semantics."""
+    dst = MergeEngine(NodeRegistry())
+    for key, lat in dst_pre:
+        dst.merge_one(key, lat)
+    buf = PlaneBuffer()
+    for key, lat in src_entries:
+        buf.add(key, lat)
+    assert len(buf) == len(src_entries)
+    dst.ingest_planes(buf.drain())
+    assert not buf
+
+    oracle = _fold(dst_pre)
+    for key, lat in src_entries:
+        cur = oracle.get(key)
+        oracle[key] = lat if cur is None else cur.merge(lat)
+    for key, want in oracle.items():
+        _assert_same(dst.get(key), want)
+
+
+def test_ingest_survives_midstream_rank_remap():
+    """A batch in flight references node *ids*; a registry remap between
+    export and ingest (a fresh id that sorts first) must not corrupt the
+    tie-break."""
+    src = MergeEngine(NodeRegistry())
+    a = LWWLattice((3, "m-node"), np.full((4,), 1.0, np.float32))
+    src.merge_one("k", a)
+    batch = src.export_planes(["k"])
+
+    dst = MergeEngine(NodeRegistry())
+    b = LWWLattice((3, "zz-late"), np.full((4,), 2.0, np.float32))
+    dst.merge_one("k", b)
+    # mid-stream: a new id that sorts before everything shifts every rank
+    dst.merge_one("other", LWWLattice((1, "a-first"),
+                                      np.zeros((4,), np.float32)))
+    dst.ingest_planes(batch)
+    _assert_same(dst.get("k"), a.merge(b))
+
+    # and the other direction: the in-flight batch's writer wins the tie
+    src2 = MergeEngine(NodeRegistry())
+    w = LWWLattice((3, "zz-late"), np.full((4,), 7.0, np.float32))
+    src2.merge_one("k", w)
+    batch2 = src2.export_planes(["k"])
+    dst2 = MergeEngine(NodeRegistry())
+    dst2.merge_one("k", LWWLattice((3, "m-node"),
+                                   np.full((4,), 5.0, np.float32)))
+    dst2.merge_one("other", LWWLattice((1, "a-first"),
+                                       np.zeros((4,), np.float32)))
+    dst2.ingest_planes(batch2)
+    assert dst2.get("k").timestamp == (3, "zz-late")
+    np.testing.assert_array_equal(dst2.get("k").value, w.value)
+
+
+def test_packed_traffic_constructs_no_perkey_objects():
+    """The acceptance counter: a pure-tensor batch must ingest with zero
+    LWWLattice materializations and zero object fallbacks."""
+    src = MergeEngine(NodeRegistry())
+    for i in range(12):
+        src.merge_one(f"k{i}", LWWLattice((i + 1, "anna-1"),
+                                          np.full((8,), i, np.float32)))
+    dst = MergeEngine(NodeRegistry())
+    for i in range(0, 12, 2):  # receiver diverged on half the keys
+        dst.merge_one(f"k{i}", LWWLattice((1, "b-mid"),
+                                          np.full((8,), -1.0, np.float32)))
+    mats = dst.arena.materializations
+    batch = src.export_planes([f"k{i}" for i in range(12)])
+    assert not batch.sidecar
+    dst.ingest_planes(batch)
+    assert dst.arena.materializations == mats
+    assert dst.plane_object_fallbacks == 0
+    assert dst.plane_keys == 12
+    assert dst.launches >= 1
+
+
+def test_sidecar_and_crossgroup_rows_keep_exact_semantics():
+    """Opaque + int64 payloads ride the sidecar; a packed row landing on
+    a fallback-held key materializes (counted) and merges exactly."""
+    src = MergeEngine(NodeRegistry())
+    src.merge_one("s", LWWLattice((5, "m-node"), "a string"))
+    src.merge_one("big", LWWLattice((5, "m-node"),
+                                    np.array([2 ** 50], np.int64)))
+    src.merge_one("t", LWWLattice((5, "m-node"), np.ones((4,), np.float32)))
+    batch = src.export_planes(["s", "big", "t"])
+    assert len(batch.sidecar) == 2 and batch.packed_len() == 1
+
+    dst = MergeEngine(NodeRegistry())
+    dst.merge_one("t", LWWLattice((9, "m-node"), "now opaque"))  # fallback
+    dst.ingest_planes(batch)
+    assert dst.get("s").reveal() == "a string"
+    assert dst.get("big").value.dtype == np.int64
+    assert dst.get("t").reveal() == "now opaque"  # newer opaque value wins
+    assert dst.plane_object_fallbacks == 1
+
+
+def test_k_bucket_terminates_for_any_device_count():
+    """Regression: a power-of-two bucket can never be *doubled* into
+    divisibility by 3 or 6 — the bucket must lcm up instead of spinning."""
+    from repro.core.arena import _k_bucket
+
+    for devices in (1, 2, 3, 4, 5, 6, 7, 8, 12):
+        for n in (1, 7, 10, 100, 1000):
+            b = _k_bucket(n, devices)
+            assert b >= n and b % devices == 0 and b % 8 == 0, (n, devices, b)
+
+
+def test_purge_drops_rows_and_sidecar():
+    buf = PlaneBuffer()
+    buf.add("a", LWWLattice((1, "n"), np.ones((4,), np.float32)))
+    buf.add("b", LWWLattice((1, "n"), np.ones((4,), np.float32)))
+    buf.add("a", LWWLattice((2, "n"), "opaque"))
+    assert len(buf) == 3
+    buf.purge("a")
+    assert len(buf) == 1
+    batch = buf.drain()
+    assert batch.keys() == ["b"]

@@ -1,0 +1,116 @@
+"""K-sharded merge launches: bit-identical to the single-device path.
+
+With ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` jax exposes
+four host devices; ``ops.lww_merge_many`` / ``ops.vc_join_classify``
+then run under shard_map over the 1-D "kvs" mesh.  Sharding an
+elementwise-along-K op must not change a single bit — including the
+(clock, node) tie-breaks — and plane-gossip convergence through the
+sharded launches must still equal per-key ``LWWLattice.merge`` folds.
+
+jax fixes its device count at backend init, so the sharded world runs in
+a subprocess with the flag set.
+"""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SHARDED_WORLD = r"""
+import numpy as np
+import jax
+
+assert jax.local_device_count() == 4, jax.devices()
+
+from repro.kernels import ops
+from repro.launch.mesh import make_merge_mesh
+
+mesh = make_merge_mesh()
+assert mesh is not None and mesh.size == 4 and "kvs" in mesh.shape
+
+rng = np.random.default_rng(0)
+R, K, D = 3, 64, 96
+clocks = rng.integers(0, 4, (R, K, 1)).astype(np.int32)   # frequent ties
+nodes = rng.integers(0, 6, (R, K, 1)).astype(np.int32)
+vals = rng.normal(size=(R, K, D)).astype(np.float32)
+
+ops.set_merge_mesh(None)        # single-device reference
+base = [np.asarray(x) for x in ops.lww_merge_many(clocks, nodes, vals)]
+ops.set_merge_mesh(mesh)        # K-sharded across 4 devices
+got = [np.asarray(x) for x in ops.lww_merge_many(clocks, nodes, vals)]
+for b, g in zip(base, got):
+    np.testing.assert_array_equal(b, g)
+
+# pairwise lww_merge (the plane-ingest fast path) shards along K too
+ops.set_merge_mesh(None)
+base_pair = [np.asarray(x) for x in ops.lww_merge(
+    clocks[0], nodes[0], vals[0], clocks[1], nodes[1], vals[1])]
+ops.set_merge_mesh(mesh)
+got_pair = [np.asarray(x) for x in ops.lww_merge(
+    clocks[0], nodes[0], vals[0], clocks[1], nodes[1], vals[1])]
+for b, g in zip(base_pair, got_pair):
+    np.testing.assert_array_equal(b, g)
+
+a = rng.integers(0, 4, (32, 8)).astype(np.int32)
+b2 = rng.integers(0, 4, (32, 8)).astype(np.int32)
+ops.set_merge_mesh(None)
+base_vc = [np.asarray(x) for x in ops.vc_join_classify(a, b2)]
+ops.set_merge_mesh(mesh)
+got_vc = [np.asarray(x) for x in ops.vc_join_classify(a, b2)]
+for bb, gg in zip(base_vc, got_vc):
+    np.testing.assert_array_equal(bb, gg)
+
+# K not divisible by the mesh: falls back to the unsharded path, unharmed
+odd = [np.asarray(x) for x in ops.lww_merge_many(
+    clocks[:, :3], nodes[:, :3], vals[:, :3])]
+ops.set_merge_mesh(None)
+odd_ref = [np.asarray(x) for x in ops.lww_merge_many(
+    clocks[:, :3], nodes[:, :3], vals[:, :3])]
+for b, g in zip(odd_ref, odd):
+    np.testing.assert_array_equal(b, g)
+ops.set_merge_mesh(mesh)
+
+# end-to-end: plane gossip through sharded launches == per-key folds
+from repro.core import AnnaKVS
+from repro.core.lattices import LWWLattice
+
+kvs = AnnaKVS(num_nodes=3, replication=3)
+node_pool = ["anna-0", "anna-1", "anna-10", "zz"]
+oracle = {}
+for round_i in range(3):
+    for k in range(12):
+        key = f"g{k}"
+        clock = int(rng.integers(0, 3))
+        node = node_pool[int(rng.integers(0, len(node_pool)))]
+        seed = np.random.default_rng(abs(hash((clock, node, k))) % 2**32)
+        lat = LWWLattice((clock, node),
+                         seed.normal(size=(16,)).astype(np.float32))
+        kvs.put(key, lat)
+        cur = oracle.get(key)
+        oracle[key] = lat if cur is None else cur.merge(lat)
+    kvs.tick(defer_prob=0.3)
+for _ in range(3):
+    kvs.tick()
+for node in kvs.nodes.values():
+    for key, want in oracle.items():
+        got = node.store[key]
+        assert got.timestamp == want.timestamp, (key, got.timestamp)
+        np.testing.assert_array_equal(np.asarray(got.value), want.value)
+
+print("SHARDED-OK")
+"""
+
+
+def test_k_sharded_merges_bit_identical_across_4_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_WORLD],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "SHARDED-OK" in proc.stdout
