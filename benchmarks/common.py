@@ -48,3 +48,26 @@ class Timed:
     def __exit__(self, *a):
         self.seconds = time.perf_counter() - self.t0
         return False
+
+
+def _timeit(fn, iters: int) -> List[float]:
+    fn()  # warm (jit compile, slab growth, allocator)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return ts
+
+
+def best_time(fn, iters: int) -> float:
+    """Min over iters after one warm call: robust against background
+    load when the timed path is deterministic per call — the floor is
+    the honest cost (used by the plane-vs-per-key benches)."""
+    return float(np.min(_timeit(fn, iters)))
+
+
+def median_time(fn, iters: int) -> float:
+    """Median over iters after one warm call — for paths with inherent
+    per-call variance where the floor would flatter."""
+    return float(np.median(_timeit(fn, iters)))

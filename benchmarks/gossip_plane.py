@@ -24,7 +24,6 @@ run asserts the >= 10x acceptance bar at K=1024, D=512.
 
 from __future__ import annotations
 
-import time
 from typing import Dict
 
 import numpy as np
@@ -37,21 +36,9 @@ from repro.core.arena import (
 )
 from repro.core.lattices import LWWLattice
 
-from .common import emit
+from .common import best_time, emit
 
 ACCEPTANCE_SPEEDUP = 10.0
-
-
-def _best_time(fn, iters: int) -> float:
-    """Min over iters: robust against background load — both paths are
-    deterministic per call, so the floor is the honest cost."""
-    fn()  # warm (jit compile, slab growth, allocator)
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        fn()
-        ts.append(time.perf_counter() - t0)
-    return float(np.min(ts))
 
 
 def _populate(engine: MergeEngine, keys, D: int, rng, node_pool) -> Dict[str, LWWLattice]:
@@ -91,8 +78,8 @@ def bench_case(K: int, D: int, iters: int = 5, seed: int = 0,
     # the plane path is ~10x cheaper per delivery, so it gets ~3x the
     # samples for the same wall budget: the min is jitter-sensitive on
     # few-core hosts where XLA dispatch shares the machine
-    t_plane = _best_time(plane_delivery, iters * 3)
-    t_perkey = _best_time(perkey_delivery, iters)
+    t_plane = best_time(plane_delivery, iters * 3)
+    t_perkey = best_time(perkey_delivery, iters)
 
     if check:  # packed winners == per-key merge folds, bit-identical
         for key in keys:

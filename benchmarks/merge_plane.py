@@ -26,7 +26,6 @@ dominance.
 
 from __future__ import annotations
 
-import time
 from typing import Dict
 
 import jax
@@ -37,7 +36,7 @@ from repro.core.lattices import LWWLattice, VectorClock
 from repro.core.arena import vc_classify_batch
 from repro.kernels import ops
 
-from .common import emit
+from .common import emit, median_time as _median_time
 
 
 def _pack(rng, R: int, K: int, D: int):
@@ -45,16 +44,6 @@ def _pack(rng, R: int, K: int, D: int):
     nodes = rng.integers(0, 8, (R, K, 1)).astype(np.int32)
     vals = rng.normal(size=(R, K, D)).astype(np.float32)
     return clocks, nodes, vals
-
-
-def _median_time(fn, iters: int) -> float:
-    fn()  # warm (jit compile)
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        fn()
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
 
 
 def bench_case(K: int, D: int, R: int, iters: int = 10, seed: int = 0) -> Dict[str, float]:

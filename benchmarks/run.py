@@ -12,11 +12,12 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
   kernels  storage-layer Pallas merge micro
   merge_plane  batched arena data plane vs per-key merges
   gossip_plane  packed-plane replication wire vs per-key-object inbox
+  read_plane  batched R-replica read-repair vs per-key get_merged
 
 ``--smoke`` runs only the kernel micro-benches (kernels + merge_plane +
-gossip_plane) at tiny sizes — the fast perf-regression gate used by
-scripts/verify.sh (the merge benches cross-check winners against the
-Python oracle and assert on mismatch).
+gossip_plane + read_plane) at tiny sizes — the fast perf-regression gate
+used by scripts/verify.sh (the merge/read benches cross-check winners
+against the Python oracle and assert on mismatch).
 """
 
 from __future__ import annotations
@@ -38,6 +39,7 @@ def main(argv=None) -> None:
         gossip_plane,
         kernels_micro,
         merge_plane,
+        read_plane,
         table2_anomalies,
     )
 
@@ -49,6 +51,7 @@ def main(argv=None) -> None:
             ("kernels", lambda: kernels_micro.main(K=64, D=256, R=2, iters=3)),
             ("merge_plane", lambda: merge_plane.main(smoke=True)),
             ("gossip_plane", lambda: gossip_plane.main(smoke=True)),
+            ("read_plane", lambda: read_plane.main(smoke=True)),
         ]
     else:
         suites = [
@@ -63,6 +66,7 @@ def main(argv=None) -> None:
             ("kernels", kernels_micro.main),
             ("merge_plane", merge_plane.main),
             ("gossip_plane", gossip_plane.main),
+            ("read_plane", read_plane.main),
         ]
     failed = []
     for name, fn in suites:

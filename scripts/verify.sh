@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate: full pytest suite + kernel micro-bench smoke.
 #
-# The smoke pass runs the storage-layer merge benches (kernels +
-# merge_plane) at tiny sizes so perf regressions in the batched merge
-# plane fail fast (the benches cross-check kernel winners against the
-# Python oracle and assert on mismatch).
+# The smoke pass runs the storage-layer plane benches (kernels +
+# merge_plane + gossip_plane + read_plane) at tiny sizes so perf
+# regressions in the batched merge/replication/read planes fail fast
+# (the benches cross-check kernel winners against the Python oracle and
+# assert on mismatch; read_plane also appends its keys/s cells to
+# BENCH_read_plane.json for the cross-PR perf trajectory).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -322,8 +322,19 @@ class PlaneBatch:
         out.extend(k for k, _ in self.sidecar)
         return out
 
+    def byte_size(self) -> int:
+        """Approximate wire size — drives the batched latency models
+        (one clock advance per batch, sized by total payload bytes)."""
+        n = sum(
+            g.vals.nbytes + g.clocks.nbytes + g.node_idx.nbytes
+            for g in self.groups.values()
+        )
+        return n + sum(v.byte_size() for _, v in self.sidecar)
+
     def iter_entries(self):
-        """Materialize (key, Lattice) pairs — tests/debug only."""
+        """Materialize (key, Lattice) pairs — for object-consuming
+        callers only (tests, the causal dep path); packed consumers
+        ingest the planes directly."""
         for g in self.groups.values():
             for i, key in enumerate(g.keys):
                 ts = (int(g.clocks[i, 0]),
@@ -809,6 +820,9 @@ class MergeEngine:
         # key or cross-group shape change) — zero in steady state
         self.plane_keys = 0
         self.plane_object_fallbacks = 0
+        # read-plane telemetry: keys answered by reduce_replica_planes
+        # (packed R-replica read-repair, no per-key objects)
+        self.plane_reads = 0
 
     # -- point ops -------------------------------------------------------------
     def get(self, key: str) -> Optional[Lattice]:
@@ -1131,6 +1145,164 @@ class MergeEngine:
             np.asarray(win_val)[:kk, :D].astype(slab.dtype, copy=False))
         self.launches += 1
         self.batched_keys += kk
+
+    # -- the read plane: batched R-replica read-repair reduction -----------------
+    def reduce_replica_planes(
+        self,
+        keyed: Sequence[Tuple[str, Sequence["MergeEngine"]]],
+    ) -> Tuple[PlaneBatch, List[str]]:
+        """Reduce each key's replica rows to one winner — the batched
+        read-repair read path (the symmetric twin of ``ingest_planes``).
+
+        ``keyed`` pairs each (unique) key with its live replica engines
+        in read order; every engine must share this engine's registry so
+        stored node ranks are comparable.  Keys whose holding replicas
+        all store them in their arenas under ONE slab group stack into an
+        (R, K, D) candidate pile per group — payload movement is one
+        vectorized gather per (replica slab, group) plus one
+        fancy-indexed stack — and reduce with a single
+        ``ops.lww_merge_many`` launch per group; candidate order per key
+        is replica order, short keys pad by repeating their last
+        candidate (any repeat is idempotent: the kernel keeps the
+        earlier candidate on full-timestamp ties, so a duplicate can
+        never displace a winner), so winners are bit-identical to the
+        per-key ``Lattice.merge`` fold.  Winners come back as a
+        :class:`PlaneBatch` whose node planes hold registry ranks
+        (``node_ids`` is the registry id list): zero per-key lattice
+        objects end-to-end.
+
+        Returns ``(batch, leftover)``: leftover keys need the exact
+        per-key object path (a replica holds the key in its fallback
+        store, or replicas disagree on slab group); keys held by no
+        replica appear in neither.
+        """
+        batch = PlaneBatch(self.registry._ids)
+        leftover: List[str] = []
+        # per group: keys + per-key candidate refs (pool id, local row pos)
+        plans: Dict[_GroupKey, Tuple[List[str], List[List[Tuple[int, int]]]]] = {}
+        # pool per (replica arena, group): rows gather once, vectorized
+        pools: Dict[Tuple[int, _GroupKey], Tuple[_Slab, List[int]]] = {}
+        for key, engines in keyed:
+            group: Optional[_GroupKey] = None
+            holders: List[MergeEngine] = []
+            ok = True
+            for eng in engines:
+                if eng.registry is not self.registry:
+                    raise ValueError(
+                        "replica engines must share the reader's registry")
+                if key in eng.fallback:
+                    ok = False
+                    break
+                g = eng.arena._key_group.get(key)
+                if g is None:
+                    continue  # replica does not hold the key: fewer candidates
+                if group is None:
+                    group = g
+                elif g != group:
+                    ok = False  # replicas disagree on shape/dtype
+                    break
+                holders.append(eng)
+            if not ok:
+                leftover.append(key)
+                continue
+            if group is None:
+                continue  # held nowhere: absent from the result
+            cands: List[Tuple[int, int]] = []
+            for eng in holders:
+                slab = eng.arena._slabs[group]
+                pool_id = (id(eng), group)
+                pool = pools.get(pool_id)
+                if pool is None:
+                    pool = (slab, [])
+                    pools[pool_id] = pool
+                pool[1].append(slab.rows[key])
+                cands.append((pool_id, len(pool[1]) - 1))
+            plan = plans.get(group)
+            if plan is None:
+                plan = ([], [])
+                plans[group] = plan
+            plan[0].append(key)
+            plan[1].append(cands)
+
+        # gather pool segments: one slice/fancy gather per (replica, group)
+        gathered: Dict[Tuple[int, _GroupKey],
+                       Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+        for pool_id, (slab, row_list) in pools.items():
+            rows = np.asarray(row_list, np.int64)
+            span = _contiguous_span(rows) if len(rows) else None
+            if span is not None:  # steady-state layout: zero-copy slices
+                gathered[pool_id] = (slab.clocks[span[0]:span[1]],
+                                     slab.nodes[span[0]:span[1]],
+                                     slab.vals[span[0]:span[1]])
+            else:
+                gathered[pool_id] = (slab.clocks[rows], slab.nodes[rows],
+                                     slab.vals[rows])
+
+        from ..kernels import ops  # deferred: keep core importable sans jax
+
+        for group, (keys, cand_refs) in plans.items():
+            # concat this group's pool segments; candidate refs become
+            # global pool indices via per-segment base offsets
+            seg_ids = [pid for pid in gathered if pid[1] == group]
+            base: Dict[Tuple[int, _GroupKey], int] = {}
+            off = 0
+            for pid in seg_ids:
+                base[pid] = off
+                off += gathered[pid][0].shape[0]
+            if len(seg_ids) == 1:
+                pool_clocks, pool_nodes, pool_vals = gathered[seg_ids[0]]
+            else:
+                pool_clocks = np.concatenate([gathered[p][0] for p in seg_ids])
+                pool_nodes = np.concatenate([gathered[p][1] for p in seg_ids])
+                pool_vals = np.concatenate([gathered[p][2] for p in seg_ids])
+            K = len(keys)
+            R = max(len(c) for c in cand_refs)
+            shape, dtype_name = group
+            slab_dtype = pool_vals.dtype
+            D = pool_vals.shape[1]
+            self.plane_reads += K
+            if R == 1:  # single live candidate per key: a pure gather
+                idx0 = np.asarray([base[c[0][0]] + c[0][1]
+                                   for c in cand_refs], np.int64)
+                batch.groups[group] = PlaneGroup(
+                    shape, slab_dtype, list(keys), pool_vals[idx0],
+                    pool_clocks[idx0], pool_nodes[idx0])
+                continue
+            Rp, Kp, Dp = _bucket(R, 2), _k_bucket(K), _bucket(D, 128)
+            # (Rp, K) candidate index matrix, built vectorized: flat
+            # per-key runs + cumsum starts; rows past a key's candidate
+            # count clamp to a repeat candidate (idempotent padding —
+            # the kernel keeps the earlier candidate on full-timestamp
+            # ties, so duplicates can never displace a winner)
+            flat = np.asarray([base[pid] + pos for c in cand_refs
+                               for pid, pos in c], np.int64)
+            counts = np.asarray([len(c) for c in cand_refs], np.int64)
+            starts = np.cumsum(counts) - counts
+            r_grid = np.arange(Rp, dtype=np.int64)[:, None]
+            idx = flat[starts[None, :]
+                       + np.minimum(r_grid, counts[None, :] - 1)]
+            if Kp == K and Dp == D:
+                # bucket-aligned: the index gather IS the kernel input —
+                # no zero staging, no second payload copy
+                clocks = pool_clocks[idx]
+                nodes = pool_nodes[idx]
+                vals = pool_vals[idx]
+            else:
+                clocks = np.zeros((Rp, Kp, 1), np.int32)
+                nodes = np.zeros((Rp, Kp, 1), np.int32)
+                vals = np.zeros((Rp, Kp, Dp), slab_dtype)
+                clocks[:, :K] = pool_clocks[idx]
+                nodes[:, :K] = pool_nodes[idx]
+                vals[:, :K, :D] = pool_vals[idx]
+            win_val, win_clock, win_node = ops.lww_merge_many(
+                clocks, nodes, vals)
+            batch.groups[group] = PlaneGroup(
+                shape, slab_dtype, list(keys),
+                np.asarray(win_val)[:K, :D].astype(slab_dtype, copy=False),
+                np.asarray(win_clock)[:K], np.asarray(win_node)[:K])
+            self.launches += 1
+            self.batched_keys += K
+        return batch, leftover
 
 
 # ---------------------------------------------------------------------------

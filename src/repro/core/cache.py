@@ -18,7 +18,7 @@ talks to Anna.  Semantics reproduced:
 from __future__ import annotations
 
 from collections import defaultdict
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .arena import MergeEngine, vc_dominates_or_concurrent_batch
 from .kvs import AnnaKVS
@@ -52,6 +52,9 @@ class ExecutorCache:
         self.alive = True
         self.hits = 0
         self.misses = 0
+        # read-plane telemetry: misses filled by a batched read_many
+        # fetch (one get_merged_many round trip, packed ingest)
+        self.batched_misses = 0
 
     # -- basic data path ----------------------------------------------------
     def _check_alive(self):
@@ -72,6 +75,44 @@ class ExecutorCache:
         if val is not None:
             self.insert(key, val)
         return val
+
+    def read_many(
+        self,
+        keys: Sequence[str],
+        clock: Optional[VirtualClock] = None,
+    ) -> Set[str]:
+        """Batched local read / miss fill — the DAG read-set warm path.
+
+        ONE IPC advance covers the whole set (the executor ships the
+        batch as a single cache call); misses are collected and fetched
+        from the KVS as ONE :meth:`AnnaKVS.get_merged_many` round trip —
+        the warm path trades the scalar miss path's any-replica
+        staleness for a single batched read-repair — and the packed
+        results land in the cache's arena via ``ingest_planes``, so no
+        per-key lattice objects are constructed.  Causal sidecar values
+        still route through the cut-maintaining :meth:`insert` (an
+        uncovered causal update stays buffered, exactly as on the push
+        path).  Returns the requested keys now resident, so callers can
+        distinguish warmed keys from ones the KVS does not hold.
+        """
+        self._check_alive()
+        if clock is not None:
+            clock.advance(self.profile.sample(self.profile.ipc))
+        uniq = list(dict.fromkeys(keys))
+        misses = [k for k in uniq if k not in self.data]
+        self.hits += len(uniq) - len(misses)
+        if misses:
+            self.misses += len(misses)
+            self.batched_misses += len(misses)
+            batch = self.kvs.get_merged_many(misses, clock=clock)
+            if batch:
+                for key, value in batch.sidecar:
+                    if isinstance(value, CausalLattice):
+                        self.insert(key, value)  # causal cut stays per-key
+                    else:
+                        self.engine.merge_one(key, value)
+                self.engine.ingest_planes(batch, include_sidecar=False)
+        return {k for k in uniq if k in self.data}
 
     def read_local(self, key: str) -> Optional[Lattice]:
         self._check_alive()
@@ -95,17 +136,22 @@ class ExecutorCache:
                 return self.data.get(key, value)
         return self.engine.merge_one(key, value)
 
-    def _deps_covered(self, value: CausalLattice, depth: int = 8) -> bool:
+    def _deps_covered(self, value: CausalLattice, depth: int = 8,
+                      prefetched: Optional[Dict[str, Optional[Lattice]]] = None,
+                      ) -> bool:
         """Causal cut check: every dependency present at >= its clock.
 
         The dominance comparisons for already-held dependencies are
         batched through ``ops.vc_join_classify`` (one densified (K, N)
-        launch for all of this update's deps); only deps the batch cannot
-        cover fall to the per-dep fetch path.  Dependencies are installed
-        *transitively* through the same check — a dep fetched from the
-        KVS only lands in the cache once its own dependency closure is
-        covered (bolt-on's causal-cut invariant); otherwise the whole
-        update stays buffered.
+        launch for all of this update's deps); the deps the batch cannot
+        cover are then fetched as ONE ``get_merged_many`` round trip per
+        closure level (``prefetched`` memoizes fetches — including
+        negative results — across the level's deps and across callers
+        that share a dict, e.g. the ``tick`` retry loop).  Dependencies
+        are installed *transitively* through the same check — a dep
+        fetched from the KVS only lands in the cache once its own
+        dependency closure is covered (bolt-on's causal-cut invariant);
+        otherwise the whole update stays buffered.
         """
         deps = [
             (dep_key, dep_vc)
@@ -125,12 +171,25 @@ class ExecutorCache:
             flags = vc_dominates_or_concurrent_batch(held_pairs)
             for i, ok in zip(held_idx, flags):
                 covered[i] = bool(ok)
+        if depth > 0:
+            need = list(dict.fromkeys(
+                deps[i][0] for i in range(len(deps))
+                if not covered[i]
+                and (prefetched is None or deps[i][0] not in prefetched)
+            ))
+            if need:
+                if prefetched is None:
+                    prefetched = {}
+                prefetched.update(self.kvs.get_merged_many_values(need))
         for i, (dep_key, dep_vc) in enumerate(deps):
-            if not covered[i] and not self._ensure_dep(dep_key, dep_vc, depth):
+            if not covered[i] and not self._ensure_dep(dep_key, dep_vc, depth,
+                                                       prefetched):
                 return False
         return True
 
-    def _ensure_dep(self, dep_key: str, dep_vc, depth: int) -> bool:
+    def _ensure_dep(self, dep_key: str, dep_vc, depth: int,
+                    prefetched: Optional[Dict[str, Optional[Lattice]]] = None,
+                    ) -> bool:
         # single-pair checks stay pure Python: a K=1 kernel dispatch costs
         # more than the dict comparison it would replace (the batched
         # classifier earns its keep in _deps_covered, where K = #deps)
@@ -139,16 +198,21 @@ class ExecutorCache:
             return True
         if depth <= 0:
             return False
-        fetched = self.kvs.get_merged(dep_key)
+        if prefetched is not None and dep_key in prefetched:
+            fetched = prefetched[dep_key]  # batched closure fetch
+        else:
+            fetched = self.kvs.get_merged(dep_key)
         if not isinstance(fetched, CausalLattice):
             return False
         merged = (fetched if not isinstance(held, CausalLattice)
                   else held.merge(fetched))
         if not merged.dominates_or_concurrent(dep_vc):
             return False
-        if not self._deps_covered(merged, depth - 1):
+        if not self._deps_covered(merged, depth - 1, prefetched):
             return False
-        self.data[dep_key] = merged
+        # through the engine, never a raw view assignment: cache
+        # bookkeeping (arena routing, telemetry) must see every write
+        self.engine.merge_one(dep_key, merged)
         return True
 
     # -- repeatable-read snapshot support (paper §5.3) ------------------------
@@ -206,10 +270,14 @@ class ExecutorCache:
                     self.engine.merge_one(key, value)
             self.engine.ingest_planes(pushes, include_sidecar=False)
         still_pending: List[Tuple[str, CausalLattice]] = []
+        # one shared fetch memo for the whole retry round: each closure
+        # level batches its uncovered deps through get_merged_many, and
+        # a dep fetched for one buffered update is not refetched for the
+        # next (the KVS cannot change mid-tick)
+        prefetched: Dict[str, Optional[Lattice]] = {}
         for key, value in self.pending_causal:
-            if self._deps_covered(value):
-                cur = self.data.get(key)
-                self.data[key] = value if cur is None else cur.merge(value)
+            if self._deps_covered(value, prefetched=prefetched):
+                self.engine.merge_one(key, value)
             else:
                 still_pending.append((key, value))
         self.pending_causal = still_pending

@@ -24,7 +24,7 @@ that level would have prevented.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .cache import CacheFailure, ExecutorCache
 from .lattices import (
@@ -108,6 +108,28 @@ class ProtocolClient:
             session.caches_visited.append(cache.cache_id)
 
     # -- public API -----------------------------------------------------------
+    def warm_read_set(self, keys: Sequence[str]) -> None:
+        """DAG read-set prefetch: warm the colocated cache with ONE
+        batched read-repair fetch (``ExecutorCache.read_many``) before
+        user code runs, so the per-key ``get`` calls below become cache
+        hits.  The read set is the function's KVS-reference keys — the
+        same locality metadata the scheduler already uses for placement
+        (paper §4.3/§5.2), now reused to batch the state fetch itself.
+
+        Mode-aware: under dsrr, keys with a pinned snapshot are skipped
+        — the protocol must re-serve the pinned version, and a fresher
+        warmed value would only force the exact-version fetch from the
+        upstream holder.  Causal values warm through the cache's
+        cut-maintaining insert, so no consistency level weakens.  A
+        single-key read set skips the warm: there is nothing to batch,
+        and the scalar miss path keeps its any-replica semantics.
+        """
+        if self.session.mode == "dsrr":
+            keys = [k for k in keys if k not in self.session.rr_snapshots]
+        keys = list(dict.fromkeys(keys))
+        if len(keys) > 1:
+            self.cache.read_many(keys, clock=self.clock)
+
     def get(self, key: str) -> Any:
         lat = self.get_lattice(key)
         return None if lat is None else lat.reveal()

@@ -119,6 +119,7 @@ class Executor:
         clock: Optional[VirtualClock] = None,
         tracker: Optional[AnomalyTracker] = None,
         fn: Optional[Callable] = None,
+        prefetch: bool = True,
     ) -> Any:
         if not self.alive:
             raise ExecutorFailure(self.executor_id)
@@ -137,8 +138,13 @@ class Executor:
             profile=self.profile,
             tracker=tracker,
         )
-        # Resolve KVS references in parallel (we account one max-latency
-        # round trip, since the real executor issues them concurrently).
+        # The function's declared read set (its KVS-reference args — the
+        # keys the scheduler used for locality placement): warm the cache
+        # with ONE batched read-repair fetch, then resolve per key as
+        # cache hits.
+        if prefetch:
+            protocol.warm_read_set(
+                [a.key for a in args if isinstance(a, CloudburstReference)])
         resolved: List[Any] = []
         for a in args:
             if isinstance(a, CloudburstReference):

@@ -24,7 +24,7 @@ import bisect
 import hashlib
 import random
 from collections import defaultdict
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .arena import (
     MergeEngine,
@@ -99,9 +99,19 @@ class AnnaKVS:
         # one node-id intern table for the whole tier, so arena node ranks
         # are comparable across storage nodes and executor caches
         self.registry = NodeRegistry()
+        # the tier's read-reduction engine: batched R-replica read-repair
+        # (get_merged_many) reduces through it; its arena stays empty —
+        # it exists for the kernel façade + read-plane telemetry
+        # (reader.plane_reads counts keys answered without objects)
+        self.reader = MergeEngine(self.registry)
         self.nodes: Dict[str, StorageNode] = {}
         self._ring: List[Tuple[int, str]] = []  # (hash, node_id), sorted
         self._key_replication: Dict[str, int] = {}  # selective replication
+        # memoized ring placement: every data-path op consults _owners,
+        # and md5 + ring walk per key dominates batched reads otherwise.
+        # Invalidated whenever placement inputs change (membership,
+        # per-key replication).  Entries are shared lists: never mutated.
+        self._owners_cache: Dict[str, List[str]] = {}
         # cached-keyset index (paper §4.2): key -> caches that hold it
         self._cache_index: Dict[str, Set[str]] = defaultdict(set)
         self._cache_pushes: Dict[str, PlaneBuffer] = defaultdict(PlaneBuffer)
@@ -125,6 +135,7 @@ class AnnaKVS:
 
     def add_node(self, node_id: str) -> None:
         assert node_id not in self.nodes
+        self._owners_cache.clear()  # ring placement changes
         self.nodes[node_id] = StorageNode(node_id, self.registry)
         for v in range(self.VNODES):
             bisect.insort(self._ring, (_hash(f"{node_id}#{v}"), node_id))
@@ -140,6 +151,7 @@ class AnnaKVS:
 
     def remove_node(self, node_id: str) -> None:
         node = self.nodes.pop(node_id)
+        self._owners_cache.clear()  # ring placement changes
         self._ring = [(h, n) for (h, n) in self._ring if n != node_id]
         # hand off data to the new owners by merge: group the departing
         # node's keys per new owner, one packed export per owner
@@ -162,24 +174,29 @@ class AnnaKVS:
 
     # -- ring routing -----------------------------------------------------------
     def _owners(self, key: str) -> List[str]:
+        owners = self._owners_cache.get(key)
+        if owners is not None:
+            return owners
         if not self._ring:
             return []
         k = self._key_replication.get(key, self.replication)
         k = min(k, len(self.nodes))
         h = _hash(key)
         idx = bisect.bisect_left(self._ring, (h, ""))
-        owners: List[str] = []
+        owners = []
         i = idx
         while len(owners) < k and len(owners) < len(self.nodes):
             _, node_id = self._ring[i % len(self._ring)]
             if node_id not in owners:
                 owners.append(node_id)
             i += 1
+        self._owners_cache[key] = owners
         return owners
 
     def set_replication(self, key: str, k: int) -> None:
         """Selective replication for hot keys (Anna [87])."""
         self._key_replication[key] = k
+        self._owners_cache.pop(key, None)
 
     # -- data path --------------------------------------------------------------
     def _route_put(
@@ -279,6 +296,19 @@ class AnnaKVS:
         clock: Optional[VirtualClock] = None,
         prefer: Optional[str] = None,
     ) -> Optional[Lattice]:
+        """Anna any-replica read — intentionally stale-prone.
+
+        The request routes to ONE replica (random live owner, or
+        ``prefer`` first) and that replica's answer is authoritative:
+        the clock is charged and the value returned after the FIRST
+        alive replica, *even when that replica holds nothing while
+        another replica already has the value* (async replication lag).
+        This is Anna's semantics, not a bug — it is the source of the
+        stale reads behind the paper's Table-2 anomalies; callers that
+        need freshness use :meth:`get_merged` (read-repair).  Dead
+        replicas are skipped; ``None`` only means "no live replica
+        answered with a value from its local store".
+        """
         owners = self._owners(key)
         if not owners:
             return None
@@ -301,16 +331,13 @@ class AnnaKVS:
             return val
         return None
 
-    def get_merged(self, key: str, clock: Optional[VirtualClock] = None) -> Optional[Lattice]:
-        """Read-repair style read: merge across all live replicas.
-
-        Tensor-valued LWW replicas reduce as one batched R-replica
-        ``ops.lww_merge_many`` launch; other lattice types fold
-        ``Lattice.merge`` per replica as before.
-        """
-        owners = self._owners(key)
+    def _merge_replicas(self, key: str) -> Optional[Lattice]:
+        """Per-key read-repair fold (no clock accounting): merge the key
+        across all live replicas, in owner order, dead replicas skipped.
+        Both ``get_merged`` and the leftover path of ``get_merged_many``
+        route through here so scalar and batched reads cannot drift."""
         replicas: List[Lattice] = []
-        for owner in owners:
+        for owner in self._owners(key):
             node = self.nodes[owner]
             if not node.alive:
                 continue
@@ -321,10 +348,120 @@ class AnnaKVS:
         if result is None:
             for val in replicas:
                 result = val if result is None else result.merge(val)
+        return result
+
+    def get_merged(self, key: str, clock: Optional[VirtualClock] = None) -> Optional[Lattice]:
+        """Read-repair style read: merge across all live replicas.
+
+        Tensor-valued LWW replicas reduce as one batched R-replica
+        ``ops.lww_merge_many`` launch; other lattice types fold
+        ``Lattice.merge`` per replica as before.
+        """
+        result = self._merge_replicas(key)
         if clock is not None:
             size = result.byte_size() if result is not None else 0
             clock.advance(self.profile.sample(self.profile.kvs_op, size))
         return result
+
+    # -- the read plane (batched multi-key reads) ---------------------------------
+    def get_many(
+        self,
+        keys: Sequence[str],
+        clock: Optional[VirtualClock] = None,
+        prefer: Optional[str] = None,
+    ) -> PlaneBatch:
+        """Batched any-replica read: per key, the SAME replica choice as
+        :meth:`get` (random live owner, or ``prefer`` first) — including
+        its intentional staleness: the chosen replica is authoritative
+        even when it holds nothing while another replica has the value,
+        so such keys are simply absent from the result.  Arena rows
+        travel packed (no per-key lattice objects); fallback-held values
+        ride the sidecar as existing object references.  The virtual
+        clock advances ONCE for the whole batch, sized by total payload
+        bytes.
+        """
+        chosen: List[Tuple[str, StorageNode]] = []
+        for key in dict.fromkeys(keys):
+            owners = self._owners(key)
+            if not owners:
+                continue
+            if prefer is None:
+                order = list(owners)
+                self.rng.shuffle(order)
+            else:
+                order = sorted(owners, key=lambda o: o != prefer)
+            for owner in order:
+                node = self.nodes[owner]
+                if not node.alive:
+                    continue
+                node.gets += 1
+                chosen.append((key, node))
+                break
+        batch, leftover = self.reader.reduce_replica_planes(
+            [(key, (node.engine,)) for key, node in chosen])
+        by_key = dict(chosen)
+        for key in leftover:  # fallback-held at the chosen replica
+            val = by_key[key].engine.fallback.get(key)
+            if val is not None:
+                batch.sidecar.append((key, val))
+        if clock is not None:
+            clock.advance(
+                self.profile.sample(self.profile.kvs_op, batch.byte_size()))
+        return batch
+
+    def get_merged_many(
+        self,
+        keys: Sequence[str],
+        clock: Optional[VirtualClock] = None,
+    ) -> PlaneBatch:
+        """Batched read-repair over a whole key list (the read plane).
+
+        Per key the semantics are identical to :meth:`get_merged` —
+        merge across all live replicas in owner order, dead replicas
+        skipped — but tensor-valued LWW keys reduce as ONE
+        ``ops.lww_merge_many`` launch per slab group through
+        ``MergeEngine.reduce_replica_planes`` ((R, K, D) candidate
+        stack), winners travel as packed planes (zero per-key lattice
+        objects), and the clock advances ONCE for the batch, sized by
+        total payload bytes.  Keys held nowhere are absent from the
+        result; non-arena lattices (opaque, causal, Set/Map, 64-bit
+        exact-path payloads) fold per key exactly as before and ride
+        the sidecar.
+        """
+        live = {nid: node.engine for nid, node in self.nodes.items()
+                if node.alive}
+        keyed = [
+            (key, [live[o] for o in self._owners(key) if o in live])
+            for key in dict.fromkeys(keys)
+        ]
+        batch, leftover = self.reader.reduce_replica_planes(keyed)
+        for key in leftover:
+            merged = self._merge_replicas(key)
+            if merged is not None:
+                batch.sidecar.append((key, merged))
+        if clock is not None:
+            clock.advance(
+                self.profile.sample(self.profile.kvs_op, batch.byte_size()))
+        return batch
+
+    def get_merged_many_values(
+        self,
+        keys: Sequence[str],
+        clock: Optional[VirtualClock] = None,
+    ) -> Dict[str, Optional[Lattice]]:
+        """Materializing convenience over :meth:`get_merged_many`:
+        key -> merged lattice, with ``None`` recorded for keys held
+        nowhere (so callers can cache negative results).  Packed winners
+        materialize one object per key here — arena-backed consumers
+        (the executor cache) ingest the batch form instead.
+        """
+        batch = self.get_merged_many(keys, clock=clock)
+        out: Dict[str, Optional[Lattice]] = {
+            key: None for key in dict.fromkeys(keys)
+        }
+        for key, lat in batch.iter_entries():
+            out[key] = lat
+        return out
 
     def delete(self, key: str) -> None:
         """Remove a key everywhere, including in-flight copies: gossip

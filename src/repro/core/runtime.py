@@ -55,6 +55,7 @@ class Cluster:
         max_retries: int = 3,
         straggler_speculation: bool = False,
         tick_jitter: float = 0.0,
+        read_prefetch: bool = True,
     ):
         self.profile = profile or NetworkProfile(seed=seed)
         self.rng = random.Random(seed)
@@ -63,6 +64,10 @@ class Cluster:
         self.max_retries = max_retries
         self.straggler_speculation = straggler_speculation
         self.tick_jitter = tick_jitter
+        # DAG read-set prefetch: executors warm their cache with one
+        # batched read-repair fetch of a function's reference keys before
+        # user code runs (off => per-key scalar miss path, for A/B runs)
+        self.read_prefetch = read_prefetch
         self.kvs = AnnaKVS(
             num_nodes=n_kvs_nodes, replication=replication, profile=self.profile
         )
@@ -166,7 +171,8 @@ class Cluster:
             dag_id=f"call-{self._dag_seq}", mode=mode or self.mode
         )
         result = executor.invoke(
-            fn_name, args, session, self.caches, clock=clock, tracker=self.tracker
+            fn_name, args, session, self.caches, clock=clock,
+            tracker=self.tracker, prefetch=self.read_prefetch,
         )
         clock.advance(self.profile.sample(self.profile.tcp, 256))  # exec->client
         return result, clock.now - t0
@@ -246,7 +252,7 @@ class Cluster:
             t_before = clock.now
             result = executor.invoke(
                 fn_name, args, session, self.caches, clock=clock,
-                tracker=self.tracker,
+                tracker=self.tracker, prefetch=self.read_prefetch,
             )
             elapsed = clock.now - t_before
             budget = self._straggler_budget(fn_name)
@@ -261,7 +267,7 @@ class Cluster:
                     spec_clock = VirtualClock(t_before)
                     alt_result = alt.invoke(
                         fn_name, args, session, self.caches, clock=spec_clock,
-                        tracker=self.tracker,
+                        tracker=self.tracker, prefetch=self.read_prefetch,
                     )
                     speculated += 1
                     if spec_clock.now < clock.now:

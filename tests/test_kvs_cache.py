@@ -6,7 +6,14 @@ try:
 except ImportError:  # deterministic seeded fallback (see _hypothesis_stub)
     from _hypothesis_stub import given, settings, strategies as st
 
-from repro.core import AnnaKVS, ExecutorCache, LamportClock, LWWLattice, SetLattice
+from repro.core import (
+    AnnaKVS,
+    ExecutorCache,
+    LamportClock,
+    LWWLattice,
+    SetLattice,
+    VirtualClock,
+)
 
 
 def test_put_get_roundtrip():
@@ -14,6 +21,29 @@ def test_put_get_roundtrip():
     clk = LamportClock("w")
     kvs.put("k", LWWLattice(clk.tick(), 42))
     assert kvs.get("k").reveal() == 42
+
+
+def test_get_any_replica_staleness_is_intentional():
+    """Pins Anna's any-replica read semantics: ``get`` charges the clock
+    and answers from the FIRST alive replica consulted, even when that
+    replica holds nothing while another replica already has the value
+    (async replication lag) — the Table-2 staleness source.  This is
+    intentional; freshness-needing callers use ``get_merged``."""
+    kvs = AnnaKVS(num_nodes=2, replication=2)
+    clk = LamportClock("w")
+    kvs.put("k", LWWLattice(clk.tick(), "v"), sync=False)  # coordinator only
+    owners = kvs._owners("k")
+    lagging = [o for o in owners if "k" not in kvs.nodes[o].store]
+    assert lagging  # async: the non-coordinator replica has not seen it
+    clock = VirtualClock()
+    # the lagging replica is authoritative for this read: None, and the
+    # clock is still charged for the round trip
+    assert kvs.get("k", clock=clock, prefer=lagging[0]) is None
+    assert clock.now > 0
+    # read-repair sees the value; after gossip the stale window closes
+    assert kvs.get_merged("k").reveal() == "v"
+    kvs.tick()
+    assert kvs.get("k", prefer=lagging[0]).reveal() == "v"
 
 
 def test_async_replication_then_gossip_converges():

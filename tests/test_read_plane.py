@@ -1,0 +1,355 @@
+"""The plane-native read path: batched R-replica read-repair + prefetch.
+
+The invariant: ``AnnaKVS.get_merged_many`` must be indistinguishable from
+per-key ``get_merged`` (and from the pure-Python ``Lattice.merge`` fold)
+— across mixed slab shapes/dtypes, opaque/int64 sidecar payloads, dead
+replicas, missing keys, and mid-stream ``NodeRegistry`` rank remaps —
+while constructing ZERO per-key lattice objects for packed traffic.  On
+top sit ``ExecutorCache.read_many`` (batched miss fill through
+``ingest_planes``) and the DAG read-set prefetch.
+"""
+
+import numpy as np
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # deterministic seeded fallback (see _hypothesis_stub)
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core import (
+    CloudburstReference,
+    Cluster,
+    ExecutorCache,
+    LamportClock,
+    LWWLattice,
+    ProtocolClient,
+    SessionContext,
+    VirtualClock,
+)
+from repro.core.arena import oracle_lww_fold
+from repro.core.kvs import AnnaKVS
+from repro.core.lattices import CausalLattice, VectorClock
+
+KEYS = [f"k{i}" for i in range(6)]
+# ids straddling several sort positions force remaps when they appear late
+NODE_IDS = ["anna-1", "b-mid", "m-node", "zz-late", "a-first"]
+
+
+def _payload(kind: str, seed: int):
+    rng = np.random.default_rng(seed)
+    if kind == "f32":
+        return rng.normal(size=(4,)).astype(np.float32)
+    if kind == "f16":
+        return rng.normal(size=(2, 3)).astype(np.float16)
+    if kind == "i32":
+        return rng.integers(-100, 100, size=(5,)).astype(np.int32)
+    if kind == "i64":  # 64-bit: exact per-key path (sidecar on the wire)
+        return np.array([2 ** 40 + seed, seed], dtype=np.int64)
+    if kind == "opaque":
+        return f"opaque-{seed}"
+    raise AssertionError(kind)
+
+
+def _entry(key_i: int, clock: int, node_i: int, kind_i: int, replica: int):
+    kind = ["f32", "f32", "f16", "i32", "i64", "opaque"][kind_i]
+    # one (clock, node) <-> one payload, as in the real system
+    seed = abs(hash((clock, node_i, kind))) % 2 ** 31
+    return (KEYS[key_i],
+            LWWLattice((clock, NODE_IDS[node_i]), _payload(kind, seed)),
+            replica)
+
+
+ENTRY = st.builds(
+    _entry,
+    st.integers(0, len(KEYS) - 1),   # key
+    st.integers(0, 3),               # clock: small range -> frequent ties
+    st.integers(0, len(NODE_IDS) - 1),
+    st.integers(0, 5),               # payload kind
+    st.integers(0, 3),               # which replica diverges
+)
+
+
+def _diverged_kvs(entries, fail_idx=None):
+    """A 3-node, replication-2 tier whose replicas diverged per entry:
+    each write lands on ONE owner only, so read-repair has real work."""
+    kvs = AnnaKVS(num_nodes=3, replication=2)
+    for key, lat, replica in entries:
+        owners = kvs._owners(key)
+        owner = owners[replica % len(owners)]
+        kvs.nodes[owner].engine.merge_one(key, lat)
+    if fail_idx is not None:
+        kvs.fail_node(f"anna-{fail_idx % 3}")
+    return kvs
+
+
+def _assert_same(got, want, ctx=""):
+    if want is None:
+        assert got is None, (ctx, got)
+        return
+    assert got is not None, (ctx, want.timestamp)
+    assert got.timestamp == want.timestamp, (ctx, got.timestamp, want.timestamp)
+    gv, wv = got.value, want.value
+    if isinstance(wv, np.ndarray):
+        assert isinstance(gv, np.ndarray) and gv.dtype == wv.dtype, ctx
+        np.testing.assert_array_equal(gv, wv)
+    else:
+        assert gv == wv, ctx
+
+
+@given(st.lists(ENTRY, max_size=30), st.integers(0, 3))
+@settings(max_examples=40, deadline=None)
+def test_get_merged_many_equals_per_key_get_merged(entries, fail_sel):
+    """get_merged_many == {key: get_merged(key)} over mixed slab/sidecar
+    traffic, a dead replica, and keys held nowhere."""
+    fail_idx = fail_sel if fail_sel < 3 else None  # sometimes all alive
+    kvs = _diverged_kvs(entries, fail_idx)
+    probe = KEYS + ["never-written"]
+    got = kvs.get_merged_many_values(probe)
+    for key in probe:
+        _assert_same(got[key], kvs.get_merged(key), key)
+
+
+@given(st.lists(ENTRY, max_size=30))
+@settings(max_examples=30, deadline=None)
+def test_get_merged_many_equals_python_fold(entries):
+    """Batched winners == the pure-Python owner-order merge fold."""
+    kvs = _diverged_kvs(entries)
+    got = kvs.get_merged_many_values(KEYS)
+    for key in KEYS:
+        replicas = []
+        for owner in kvs._owners(key):
+            node = kvs.nodes[owner]
+            if node.alive and key in node.store:
+                replicas.append(node.store[key])
+        want = oracle_lww_fold(replicas) if replicas else None
+        _assert_same(got[key], want, key)
+
+
+@given(st.lists(ENTRY, max_size=30), st.integers(0, 2))
+@settings(max_examples=30, deadline=None)
+def test_get_many_prefer_equals_per_key_get(entries, prefer_i):
+    """Batched any-replica reads keep scalar ``get`` semantics exactly —
+    including the intentional staleness: the preferred replica answers
+    even when it holds nothing while another replica has the value."""
+    prefer = f"anna-{prefer_i}"
+    kvs = _diverged_kvs(entries)
+    batch = kvs.get_many(KEYS, prefer=prefer)
+    got = {k: v for k, v in batch.iter_entries()}
+    for key in KEYS:
+        _assert_same(got.get(key), kvs.get(key, prefer=prefer), key)
+
+
+def test_get_merged_many_survives_midstream_rank_remap():
+    """Replica node planes hold registry ranks; interning an id that
+    sorts before everything shifts every stored rank between writes and
+    the batched read — the reduction's tie-break must not corrupt."""
+    kvs = AnnaKVS(num_nodes=2, replication=2)
+    a = LWWLattice((3, "m-node"), np.full((4,), 1.0, np.float32))
+    b = LWWLattice((3, "zz-late"), np.full((4,), 2.0, np.float32))
+    o1, o2 = kvs._owners("k")
+    kvs.nodes[o1].engine.merge_one("k", a)
+    kvs.nodes[o2].engine.merge_one("k", b)
+    # mid-stream: a fresh id that sorts first shifts every rank
+    kvs.nodes[o1].engine.merge_one(
+        "other", LWWLattice((1, "a-first"), np.zeros((4,), np.float32)))
+    got = kvs.get_merged_many_values(["k", "other"])
+    _assert_same(got["k"], a.merge(b), "k")
+    assert got["k"].timestamp == (3, "zz-late")
+
+
+def test_batched_read_repair_constructs_no_perkey_objects():
+    """The read plane's acceptance counter: a pure-tensor batched read
+    answers entirely from packed planes — zero LWWLattice
+    materializations on any node, zero object fallbacks."""
+    kvs = AnnaKVS(num_nodes=2, replication=2)
+    rng = np.random.default_rng(0)
+    keys = [f"t{i}" for i in range(12)]
+    for key in keys:
+        for owner in kvs._owners(key):
+            node = kvs.nodes[owner]
+            node.engine.merge_one(key, LWWLattice(
+                (int(rng.integers(0, 9)), node.node_id),
+                rng.normal(size=(8,)).astype(np.float32)))
+    for node in kvs.nodes.values():
+        node.engine.arena.clear_memo()
+    mats = sum(n.engine.arena.materializations for n in kvs.nodes.values())
+    batch = kvs.get_merged_many(keys)
+    assert not batch.sidecar and batch.packed_len() == 12
+    assert sum(n.engine.arena.materializations
+               for n in kvs.nodes.values()) == mats
+    assert kvs.reader.plane_reads == 12
+    assert kvs.reader.plane_object_fallbacks == 0
+    assert kvs.reader.launches >= 1
+
+
+def test_warmed_read_set_constructs_no_perkey_objects():
+    """Mirror of PR 2's zero-object write assertion: warming a DAG read
+    set via read_many (batched fetch + packed ingest) and re-reading it
+    (all hits) constructs zero per-key LWWLattice objects anywhere."""
+    kvs = AnnaKVS(num_nodes=2, replication=2)
+    clk = LamportClock("w")
+    keys = [f"w{i}" for i in range(10)]
+    for i, key in enumerate(keys):
+        kvs.put(key, LWWLattice(clk.tick(),
+                                np.full((8,), i, np.float32)), sync=True)
+    cache = ExecutorCache("c0", kvs)
+    for node in kvs.nodes.values():
+        node.engine.arena.clear_memo()
+
+    def total_mats():
+        return (sum(n.engine.arena.materializations
+                    for n in kvs.nodes.values())
+                + kvs.reader.arena.materializations
+                + cache.engine.arena.materializations)
+
+    mats = total_mats()
+    warmed = cache.read_many(keys)
+    assert warmed == set(keys)
+    assert cache.batched_misses == 10 and cache.misses == 10
+    assert total_mats() == mats
+    # steady state: a second warm is all hits, still zero objects
+    assert cache.read_many(keys) == set(keys)
+    assert cache.batched_misses == 10 and cache.hits == 10
+    assert total_mats() == mats
+    # the warmed rows are real: a per-key read now materializes exactly
+    # the merged winner the scalar path would have fetched
+    for i, key in enumerate(keys):
+        np.testing.assert_array_equal(
+            cache.read(key).value, np.full((8,), i, np.float32))
+
+
+def test_read_many_sidecar_and_missing_keys():
+    """Opaque/int64 values warm through the sidecar with exact
+    semantics; keys the KVS does not hold stay non-resident."""
+    kvs = AnnaKVS(num_nodes=2, replication=2)
+    clk = LamportClock("w")
+    kvs.put("s", LWWLattice(clk.tick(), "a string"), sync=True)
+    kvs.put("big", LWWLattice(clk.tick(), np.array([2 ** 50], np.int64)),
+            sync=True)
+    kvs.put("t", LWWLattice(clk.tick(), np.ones((4,), np.float32)), sync=True)
+    cache = ExecutorCache("c0", kvs)
+    clock = VirtualClock()
+    resident = cache.read_many(["s", "big", "t", "absent"], clock=clock)
+    assert resident == {"s", "big", "t"}
+    assert clock.now > 0
+    assert cache.read_local("s").reveal() == "a string"
+    assert cache.read_local("big").value.dtype == np.int64
+    np.testing.assert_array_equal(cache.read_local("t").value,
+                                  np.ones((4,), np.float32))
+    assert cache.read_local("absent") is None
+
+
+def test_read_many_causal_routes_through_cut_maintenance():
+    """A causal value whose dependency closure is unavailable must stay
+    buffered by read_many (bolt-on write buffering), not blind-merged."""
+    kvs = AnnaKVS(num_nodes=2, replication=1)
+    vc = VectorClock({"n1": 2})
+    dep_vc = VectorClock({"n2": 5})
+    # value depends on dep-key@n2:5, which the KVS does not hold
+    lat = CausalLattice.of(vc, "payload", {"dep-key": dep_vc})
+    kvs.put("ck", lat, sync=True)
+    cache = ExecutorCache("c0", kvs)
+    resident = cache.read_many(["ck"])
+    assert resident == set()            # cut not coverable: stays buffered
+    assert cache.pending_causal and cache.pending_causal[0][0] == "ck"
+    # once the dependency lands in the KVS, the buffered update applies
+    kvs.put("dep-key", CausalLattice.of(dep_vc, "dep"), sync=True)
+    cache.tick()
+    assert cache.read_local("ck").reveal() == "payload"
+    assert cache.read_local("dep-key").reveal() == "dep"
+
+
+def test_causal_dep_closure_fetches_batched():
+    """_deps_covered batches its uncovered dep level through ONE
+    get_merged_many round trip (counted via the reader's telemetry
+    rather than per-dep scalar get_merged calls)."""
+    kvs = AnnaKVS(num_nodes=2, replication=1)
+    deps = {}
+    for i in range(6):
+        dvc = VectorClock({f"d{i}": 1})
+        kvs.put(f"dep{i}", CausalLattice.of(dvc, i), sync=True)
+        deps[f"dep{i}"] = dvc
+    lat = CausalLattice.of(VectorClock({"w": 1}), "v", deps)
+    cache = ExecutorCache("c0", kvs)
+    calls_before = kvs.reader.plane_reads
+    scalar_gets = [0]
+    real_get_merged = kvs.get_merged
+
+    def counting_get_merged(key, clock=None):
+        scalar_gets[0] += 1
+        return real_get_merged(key, clock=clock)
+
+    kvs.get_merged = counting_get_merged
+    try:
+        cache.insert("ck", lat)
+    finally:
+        kvs.get_merged = real_get_merged
+    assert cache.read_local("ck") is not None
+    assert scalar_gets[0] == 0          # no per-dep scalar fetches
+    for i in range(6):                  # the whole closure level landed
+        assert cache.read_local(f"dep{i}") is not None
+    assert kvs.reader.plane_reads == calls_before  # causal = sidecar path
+
+
+def test_dag_read_set_prefetch_warms_cache():
+    """A scheduled function's KVS-reference args prefetch as ONE batched
+    read_many before user code runs; the per-key gets are then hits."""
+    c = Cluster(n_vms=1, executors_per_vm=1, seed=0)
+    n = 6
+    for i in range(n):
+        c.put(f"in{i}", np.full((4,), float(i), np.float32))
+    c.register(lambda *xs: float(sum(float(np.sum(x)) for x in xs)), "sumfn")
+    c.register_dag("d", ["sumfn"])
+    refs = tuple(CloudburstReference(f"in{i}") for i in range(n))
+    r = c.call_dag("d", {"sumfn": refs})
+    assert r.value == sum(4.0 * i for i in range(n))
+    cache = next(iter(c.caches.values()))
+    assert cache.batched_misses == n     # one batched warm fetched all
+    assert cache.hits >= n               # the reference resolutions hit
+
+
+def test_read_prefetch_knob_disables_warm():
+    c = Cluster(n_vms=1, executors_per_vm=1, seed=0, read_prefetch=False)
+    for i in range(4):
+        c.put(f"in{i}", np.full((4,), float(i), np.float32))
+    c.register(lambda *xs: float(sum(float(np.sum(x)) for x in xs)), "sumfn")
+    c.register_dag("d", ["sumfn"])
+    refs = tuple(CloudburstReference(f"in{i}") for i in range(4))
+    r = c.call_dag("d", {"sumfn": refs})
+    assert r.value == sum(4.0 * i for i in range(4))
+    cache = next(iter(c.caches.values()))
+    assert cache.batched_misses == 0     # scalar miss path only
+    assert cache.misses == 4
+
+
+def test_prefetch_skips_pinned_dsrr_snapshots():
+    """Under dsrr a session-pinned key must re-serve the pinned version;
+    the warm path skips it, so a fresher KVS value can neither land in
+    the downstream cache nor force the exact-version upstream fetch for
+    the other (warmable) keys."""
+    kvs = AnnaKVS(num_nodes=2, replication=1)
+    clk = LamportClock("w")
+    for i in range(3):
+        kvs.put(f"in{i}",
+                LWWLattice(clk.tick(), np.full((4,), float(i), np.float32)),
+                sync=True)
+    c0 = ExecutorCache("c0", kvs)
+    c1 = ExecutorCache("c1", kvs)
+    caches = {"c0": c0, "c1": c1}
+    session = SessionContext(dag_id="d1", mode="dsrr")
+    p0 = ProtocolClient(cache=c0, caches=caches, session=session,
+                        node_id="e0", lamport=LamportClock("e0"))
+    pinned = p0.get_lattice("in0")       # upstream pins in0 at c0
+    # a fresher write lands mid-DAG; the session must still see pinned
+    kvs.put("in0",
+            LWWLattice(clk.tick(), np.full((4,), 9.0, np.float32)),
+            sync=True)
+    p1 = ProtocolClient(cache=c1, caches=caches, session=session,
+                        node_id="e1", lamport=LamportClock("e1"))
+    p1.warm_read_set(["in0", "in1", "in2"])
+    assert "in0" not in c1.data          # pinned key skipped by the warm
+    assert c1.batched_misses == 2        # the rest warmed in one batch
+    got = p1.get_lattice("in0")          # snapshot fetch from the holder
+    assert got.timestamp == pinned.timestamp
+    np.testing.assert_array_equal(got.value, pinned.value)
