@@ -13,11 +13,14 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
   merge_plane  batched arena data plane vs per-key merges
   gossip_plane  packed-plane replication wire vs per-key-object inbox
   read_plane  batched R-replica read-repair vs per-key get_merged
+  pipeline_throughput  open-loop fig8 serving at in-flight {1,4,16}
 
-``--smoke`` runs only the kernel micro-benches (kernels + merge_plane +
-gossip_plane + read_plane) at tiny sizes — the fast perf-regression gate
-used by scripts/verify.sh (the merge/read benches cross-check winners
-against the Python oracle and assert on mismatch).
+``--smoke`` runs the kernel micro-benches (kernels + merge_plane +
+gossip_plane + read_plane) plus a tiny pipeline_throughput pass — the
+fast perf-regression gate used by scripts/verify.sh (the merge/read
+benches cross-check winners against the Python oracle and assert on
+mismatch; pipeline_throughput asserts its cross-request batching
+telemetry).
 """
 
 from __future__ import annotations
@@ -39,6 +42,7 @@ def main(argv=None) -> None:
         gossip_plane,
         kernels_micro,
         merge_plane,
+        pipeline_throughput,
         read_plane,
         table2_anomalies,
     )
@@ -52,6 +56,8 @@ def main(argv=None) -> None:
             ("merge_plane", lambda: merge_plane.main(smoke=True)),
             ("gossip_plane", lambda: gossip_plane.main(smoke=True)),
             ("read_plane", lambda: read_plane.main(smoke=True)),
+            ("pipeline_throughput",
+             lambda: pipeline_throughput.main(smoke=True)),
         ]
     else:
         suites = [
@@ -67,6 +73,7 @@ def main(argv=None) -> None:
             ("merge_plane", merge_plane.main),
             ("gossip_plane", gossip_plane.main),
             ("read_plane", read_plane.main),
+            ("pipeline_throughput", pipeline_throughput.main),
         ]
     failed = []
     for name, fn in suites:

@@ -18,4 +18,12 @@ python -m pytest -x -q
 echo "== kernel micro-bench smoke =="
 python -m benchmarks.run --smoke
 
+echo "== examples/quickstart.py =="
+if ! python examples/quickstart.py > /dev/null; then
+    echo "verify: FAILED — examples/quickstart.py errored (the Figure-2" >&2
+    echo "client script is the public API contract; a broken quickstart" >&2
+    echo "means the release is broken no matter what the tests say)" >&2
+    exit 1
+fi
+
 echo "verify: OK"

@@ -43,7 +43,7 @@ from .lattices import (
     encapsulate,
 )
 from .netsim import LatencyModel, NetworkProfile, VirtualClock, DEFAULT_PROFILE
-from .runtime import Cluster, DagResult
+from .runtime import Cluster, DagResult, DagRun
 from .scheduler import LocalityPolicy, RandomPolicy, Scheduler, SchedulingPolicy
 
 __all__ = [
@@ -58,6 +58,7 @@ __all__ = [
     "Cluster",
     "Dag",
     "DagResult",
+    "DagRun",
     "DagRestart",
     "DEFAULT_PROFILE",
     "Executor",

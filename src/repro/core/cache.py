@@ -80,6 +80,7 @@ class ExecutorCache:
         self,
         keys: Sequence[str],
         clock: Optional[VirtualClock] = None,
+        clocks: Optional[Sequence[VirtualClock]] = None,
     ) -> Set[str]:
         """Batched local read / miss fill — the DAG read-set warm path.
 
@@ -94,17 +95,33 @@ class ExecutorCache:
         uncovered causal update stays buffered, exactly as on the push
         path).  Returns the requested keys now resident, so callers can
         distinguish warmed keys from ones the KVS does not hold.
+
+        ``clocks`` is the cross-request form: when the cluster engine
+        fuses SEVERAL in-flight requests' read sets into one call, every
+        waiting request's clock is charged the SAME batched cost (one
+        IPC sample + one batched KVS fetch) — the whole point of sharing
+        the launch.  Passing a single ``clock`` is the per-request path
+        and draws exactly the samples it always did.
         """
         self._check_alive()
-        if clock is not None:
-            clock.advance(self.profile.sample(self.profile.ipc))
+        all_clocks = (list(clocks) if clocks is not None
+                      else ([] if clock is None else [clock]))
+        if all_clocks:
+            ipc = self.profile.sample(self.profile.ipc)
+            for c in all_clocks:
+                c.advance(ipc)
+        primary = all_clocks[0] if all_clocks else None
         uniq = list(dict.fromkeys(keys))
         misses = [k for k in uniq if k not in self.data]
         self.hits += len(uniq) - len(misses)
         if misses:
             self.misses += len(misses)
             self.batched_misses += len(misses)
-            batch = self.kvs.get_merged_many(misses, clock=clock)
+            t_fetch = primary.now if primary is not None else 0.0
+            batch = self.kvs.get_merged_many(misses, clock=primary)
+            if primary is not None:
+                for c in all_clocks[1:]:
+                    c.advance(primary.now - t_fetch)
             if batch:
                 for key, value in batch.sidecar:
                     if isinstance(value, CausalLattice):

@@ -9,6 +9,14 @@
     print(sq(reference))          # -> 4
     future = sq(3, store_in_kvs=True)
     print(future.get())           # -> 9
+
+The API is asynchronous-first, as in the paper (§3, Fig. 2 lines 11-12):
+``call_async`` / ``call_dag_async`` enqueue the invocation on the cluster
+engine and immediately return a KVS-backed :class:`CloudburstFuture`; many
+invocations progress concurrently and their scheduling / read-set
+prefetches / response writes batch per engine turn.  ``call`` /
+``call_dag`` are the synchronous wrappers (drive the engine until the
+future resolves).
 """
 
 from __future__ import annotations
@@ -18,7 +26,7 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 from .executor import CloudburstReference  # re-export: part of the public API
 from .netsim import VirtualClock
-from .runtime import Cluster, DagResult
+from .runtime import CloudburstFuture, Cluster, DagResult
 
 __all__ = [
     "CloudburstClient",
@@ -29,22 +37,6 @@ __all__ = [
 ]
 
 
-class CloudburstFuture:
-    """Result stored in the KVS; retrieved on ``get()`` (Fig. 2 lines 11-12)."""
-
-    def __init__(self, key: str, cluster: Cluster, clock: Optional[VirtualClock]):
-        self.key = key
-        self._cluster = cluster
-        self._clock = clock
-
-    def get(self) -> Any:
-        value = self._cluster.get(self.key, clock=self._clock)
-        while value is None:  # not yet flushed: force background progress
-            self._cluster.tick()
-            value = self._cluster.get(self.key, clock=self._clock)
-        return value
-
-
 @dataclasses.dataclass
 class RegisteredFunction:
     name: str
@@ -52,6 +44,9 @@ class RegisteredFunction:
 
     def __call__(self, *args: Any, store_in_kvs: bool = False) -> Any:
         return self.client.call(self.name, *args, store_in_kvs=store_in_kvs)
+
+    def call_async(self, *args: Any) -> CloudburstFuture:
+        return self.client.call_async(self.name, *args)
 
 
 @dataclasses.dataclass
@@ -63,6 +58,11 @@ class RegisteredDag:
         self, args_by_fn: Optional[Dict[str, Sequence]] = None, **kw
     ) -> DagResult:
         return self.client.call_dag(self.name, args_by_fn, **kw)
+
+    def call_async(
+        self, args_by_fn: Optional[Dict[str, Sequence]] = None, **kw
+    ) -> CloudburstFuture:
+        return self.client.call_dag_async(self.name, args_by_fn, **kw)
 
 
 class CloudburstClient:
@@ -92,14 +92,33 @@ class CloudburstClient:
         self.cluster.register_dag(name, functions, edges)
         return RegisteredDag(name, self)
 
-    # -- invocation ------------------------------------------------------------------
+    # -- asynchronous invocation (the paper's native API) --------------------------
+    def call_async(self, fn_name: str, *args: Any,
+                   mode: Optional[str] = None) -> CloudburstFuture:
+        """Enqueue a single-function invocation; returns a future
+        immediately.  Each in-flight invocation owns its virtual
+        timeline, so concurrent requests model concurrent clients."""
+        return self.cluster.call_async(fn_name, *args, mode=mode)
+
+    def call_dag_async(
+        self,
+        dag_name: str,
+        args_by_fn: Optional[Dict[str, Sequence]] = None,
+        mode: Optional[str] = None,
+    ) -> CloudburstFuture:
+        """Enqueue a DAG invocation; returns a KVS-backed future
+        immediately.  Submit many, then ``future.get()`` (or
+        ``cluster.step()``) drives them all concurrently."""
+        return self.cluster.call_dag_async(dag_name, args_by_fn, mode=mode)
+
+    # -- synchronous wrappers ------------------------------------------------------
     def call(self, fn_name: str, *args: Any, store_in_kvs: bool = False) -> Any:
         result, _latency = self.cluster.call(fn_name, *args, clock=self.clock)
         if store_in_kvs:
             self._future_seq += 1
             key = f"__result_{fn_name}_{self._future_seq}"
             self.cluster.put(key, result, clock=self.clock)
-            return CloudburstFuture(key, self.cluster, self.clock)
+            return CloudburstFuture(key, self.cluster, clock=self.clock)
         return result
 
     def call_dag(
@@ -117,7 +136,7 @@ class CloudburstClient:
             dag_name, args_by_fn, clock=self.clock, mode=mode, store_in_kvs=key
         )
         if store_in_kvs:
-            result.value = CloudburstFuture(key, self.cluster, self.clock)
+            result.value = CloudburstFuture(key, self.cluster, clock=self.clock)
         return result
 
     def tick(self) -> None:

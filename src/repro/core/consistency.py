@@ -44,6 +44,25 @@ class DagRestart(RuntimeError):
     """An upstream cache failed / a pinned snapshot was lost: rerun the DAG."""
 
 
+def session_prefetch_keys(
+    session: "SessionContext", keys: Sequence[str]
+) -> List[str]:
+    """The session-legal subset of a function's read set, deduplicated.
+
+    This is the filter :meth:`ProtocolClient.warm_read_set` applies before
+    warming the cache, factored out so the cluster engine can fuse MANY
+    functions' read sets into one batched fetch per cache: under dsrr,
+    keys with a pinned snapshot are skipped (the protocol must re-serve
+    the pinned version — a fresher warmed value would only force the
+    exact-version fetch from the upstream holder); every other mode
+    prefetches its full read set (causal values warm through the cache's
+    cut-maintaining insert, so no consistency level weakens).
+    """
+    if session.mode == "dsrr":
+        keys = [k for k in keys if k not in session.rr_snapshots]
+    return list(dict.fromkeys(keys))
+
+
 # ---------------------------------------------------------------------------
 # Session metadata shipped along DAG edges
 # ---------------------------------------------------------------------------
@@ -116,23 +135,37 @@ class ProtocolClient:
         same locality metadata the scheduler already uses for placement
         (paper §4.3/§5.2), now reused to batch the state fetch itself.
 
-        Mode-aware: under dsrr, keys with a pinned snapshot are skipped
-        — the protocol must re-serve the pinned version, and a fresher
-        warmed value would only force the exact-version fetch from the
-        upstream holder.  Causal values warm through the cache's
-        cut-maintaining insert, so no consistency level weakens.  A
-        single-key read set skips the warm: there is nothing to batch,
-        and the scalar miss path keeps its any-replica semantics.
+        Mode-aware via :func:`session_prefetch_keys` (dsrr-pinned keys
+        skipped; causal values warm through the cache's cut-maintaining
+        insert, so no consistency level weakens).  A single-key read set
+        skips the warm: there is nothing to batch, and the scalar miss
+        path keeps its any-replica semantics.
         """
-        if self.session.mode == "dsrr":
-            keys = [k for k in keys if k not in self.session.rr_snapshots]
-        keys = list(dict.fromkeys(keys))
+        keys = session_prefetch_keys(self.session, keys)
         if len(keys) > 1:
             self.cache.read_many(keys, clock=self.clock)
 
     def get(self, key: str) -> Any:
         lat = self.get_lattice(key)
         return None if lat is None else lat.reveal()
+
+    def get_many(self, keys: Sequence[str]) -> List[Any]:
+        """Batched multi-get (Table 1 ``get_many``): warm the colocated
+        cache with ONE batched read-repair fetch of the whole key list,
+        then resolve each key through the session protocol as a cache
+        hit.  Per-key semantics (snapshot pinning, causal cuts, anomaly
+        tracking) are exactly those of :meth:`get`; only the miss fill
+        is batched."""
+        self.warm_read_set(keys)
+        return [self.get(k) for k in keys]
+
+    def put_many(self, pairs: Sequence[Tuple[str, Any]]) -> List[Lattice]:
+        """Batched multi-put: each value takes the same mode-aware write
+        path as :meth:`put` (causal metadata, snapshot pinning, anomaly
+        tracking stay per-key); all writes land in the cache's
+        ``pending_flush`` and leave for the KVS in ONE batched
+        ``put_many`` flush / packed plane on the next tick."""
+        return [self.put(k, v) for k, v in pairs]
 
     def get_lattice(self, key: str) -> Optional[Lattice]:
         mode = self.session.mode

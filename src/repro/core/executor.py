@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import time
+import weakref
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .cache import ExecutorCache
@@ -42,6 +43,18 @@ class UserLibrary:
 
     def get(self, key: str) -> Any:
         return self._protocol.get(key)
+
+    def get_many(self, keys: List[str]) -> List[Any]:
+        """Batched multi-get: one ``ExecutorCache.read_many`` warm (ONE
+        ``get_merged_many`` launch for all misses), then per-key session
+        resolution as cache hits.  Same semantics as a ``get`` loop,
+        minus the per-key scalar round trips."""
+        return self._protocol.get_many(keys)
+
+    def put_many(self, pairs: List[Tuple[str, Any]]) -> None:
+        """Batched multi-put: per-key session write semantics; the
+        writes leave the cache as ONE batched flush on the next tick."""
+        self._protocol.put_many(pairs)
 
     def put(self, key: str, value: Any) -> None:
         self._protocol.put(key, value)
@@ -182,9 +195,27 @@ class Executor:
         self.cache.recover()
 
 
+_WANTS_USERLIB_MEMO: "weakref.WeakKeyDictionary[Callable, bool]" = (
+    weakref.WeakKeyDictionary()
+)
+
+
 def _wants_userlib(fn: Callable) -> bool:
+    # memoized per function object: signature inspection costs ~40us and
+    # executors invoke the same pinned functions for their whole lifetime
+    try:
+        cached = _WANTS_USERLIB_MEMO.get(fn)
+    except TypeError:  # unhashable/unweakrefable callable
+        cached = None
+    if cached is not None:
+        return cached
     try:
         params = list(inspect.signature(fn).parameters)
+        wants = bool(params) and params[0] in ("cloudburst", "userlib", "cb")
     except (TypeError, ValueError):
-        return False
-    return bool(params) and params[0] in ("cloudburst", "userlib", "cb")
+        wants = False
+    try:
+        _WANTS_USERLIB_MEMO[fn] = wants
+    except TypeError:
+        pass
+    return wants

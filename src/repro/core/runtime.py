@@ -1,12 +1,41 @@
-"""Cluster wiring + DAG execution engine (paper §4) with fault tolerance.
+"""Cluster wiring + the event-driven DAG execution engine (paper §4).
 
 ``Cluster`` builds the whole deployment: Anna storage nodes, VMs (one cache
 per VM, several executor processes per VM — the paper uses 3 executor cores
 + 1 cache core per c5.2xlarge), schedulers, and the monitoring engine.
 
-DAG execution is synchronous-in-process with virtual-latency accounting:
-scheduler hop -> trigger source executor -> execute -> trigger downstream
-(shipping session metadata per the consistency protocol) -> sink responds.
+Execution is futures-first, matching the paper's asynchronous client API
+(§3, Fig. 2 lines 11-12): :meth:`Cluster.call_async` /
+:meth:`Cluster.call_dag_async` enqueue an invocation and immediately return
+a KVS-backed :class:`CloudburstFuture` (response key + ``done()`` /
+``get(timeout=...)``).  Each in-flight request is a :class:`DagRun` state
+machine (pending/ready/completed functions, per-attempt schedules,
+restart-on-failure per §4.5, straggler speculation); many runs progress
+concurrently, driven by :meth:`Cluster.step`:
+
+* every engine turn batch-schedules ALL ready triggers across ALL in-flight
+  DAGs through one :meth:`Scheduler.schedule_ready` call;
+* the in-flight functions' read-set prefetches are fused into ONE
+  ``ExecutorCache.read_many`` (→ one ``AnnaKVS.get_merged_many`` launch)
+  per cache per turn — cross-request plane batching;
+* response-key writes of runs completing in the same turn flush as ONE
+  ``AnnaKVS.put_many`` batch;
+* cache flush ticks (:meth:`Cluster.tick`) carry many DAGs' write-backs in
+  one ``PlaneBatch`` per channel.
+
+``call`` / ``call_dag`` are thin synchronous wrappers: submit a run and
+drive ``step()`` until it resolves.  For linear DAGs (every wave a
+single function — all the paper workloads) a solo ``call_dag``
+reproduces the sequential executor bit-for-bit: same values, retries,
+speculation, scheduling-rng draw order, per-invocation warm rule and
+latency accounting (Table-2 anomaly counts verified identical).  DAGs
+with parallel branches keep the same values/warm rule per function, but
+the wave structure schedules sibling branches before invoking them, so
+latency-model draws interleave differently than the old depth-first
+walk.  Single-function ``call`` keeps its values/retries but rides the
+engine's uniform DAG hop model (256-byte scheduler hops + cold-pin
+charge), so its modeled latencies shift by a few hundred microseconds
+versus the old bespoke two-hop path.
 
 Fault tolerance (paper §4.5): if an executor/cache fails mid-DAG, the whole
 DAG is re-executed after a configurable timeout (idempotence is the user's
@@ -19,10 +48,16 @@ from __future__ import annotations
 
 import dataclasses
 import random
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .cache import CacheFailure, ExecutorCache
-from .consistency import AnomalyTracker, DagRestart, SessionContext
+from .consistency import (
+    AnomalyTracker,
+    DagRestart,
+    SessionContext,
+    session_prefetch_keys,
+)
 from .dag import Dag
 from .executor import CloudburstReference, Executor, ExecutorFailure
 from .kvs import AnnaKVS
@@ -38,6 +73,157 @@ class DagResult:
     schedule: Dict[str, str]
     retries: int = 0
     speculated: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Per-request state machine
+# ---------------------------------------------------------------------------
+
+RUN_RUNNING = "running"
+RUN_DONE = "done"
+RUN_FAILED = "failed"
+
+
+@dataclasses.dataclass
+class DagRun:
+    """One in-flight DAG invocation: the engine's unit of concurrency.
+
+    Tracks the function state machine for the CURRENT attempt (functions
+    whose upstreams are all complete sit in ``ready``; ``waiting`` counts
+    unfinished upstreams; ``results`` holds completed outputs) plus the
+    per-attempt schedule and the across-attempt restart bookkeeping
+    (``attempt``, ``exclude``) of §4.5.  The virtual clock is per-run:
+    concurrent runs own independent timelines, exactly like concurrent
+    client requests against a real deployment.
+    """
+
+    run_id: str
+    dag: Dag
+    args_by_fn: Dict[str, Sequence]
+    mode: str
+    clock: VirtualClock
+    response_key: Optional[str] = None
+    t0: float = 0.0
+    # -- per-attempt state --------------------------------------------------
+    session: Optional[SessionContext] = None
+    schedule: Dict[str, str] = dataclasses.field(default_factory=dict)
+    results: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    ready: List[str] = dataclasses.field(default_factory=list)
+    waiting: Dict[str, int] = dataclasses.field(default_factory=dict)
+    attempt: int = 0
+    exclude: Set[str] = dataclasses.field(default_factory=set)
+    speculated: int = 0
+    # -- lifecycle ----------------------------------------------------------
+    state: str = RUN_RUNNING
+    value: Any = None
+    error: Optional[BaseException] = None
+    # user-code exception (not infra): surfaced as-is, never retried
+    user_failed: bool = False
+    result: Optional[DagResult] = None
+
+    def reset_attempt(self) -> None:
+        """Seed the function state machine for a (re)started attempt."""
+        self.schedule = {}
+        self.results = {}
+        # per-attempt, like the pre-engine executor: DagResult reports
+        # only the successful attempt's speculation count
+        self.speculated = 0
+        self.waiting = {
+            fn: len(self.dag.upstream(fn)) for fn in self.dag.functions
+        }
+        # sources release in topo order so single-run turns replay the
+        # sequential executor's within-DAG function order exactly
+        self.ready = [fn for fn in self.dag.topo_order()
+                      if self.waiting[fn] == 0]
+
+    def complete_fn(self, fn: str, result: Any) -> None:
+        self.results[fn] = result
+        for down in self.dag.downstream(fn):
+            self.waiting[down] -= 1
+            if self.waiting[down] == 0:
+                self.ready.append(down)
+
+    @property
+    def finished(self) -> bool:
+        return self.state != RUN_RUNNING
+
+
+class CloudburstFuture:
+    """Result stored in the KVS; retrieved on ``get()`` (Fig. 2 lines 11-12).
+
+    ``call_async`` / ``call_dag_async`` return one of these immediately:
+    the invocation's sink value lands at ``key`` when the run completes.
+    ``get`` drives the cluster engine (``step``, falling back to ``tick``
+    for background progress) while waiting; ``timeout`` (wall-clock
+    seconds) bounds the wait — a failed or garbage-collected DAG whose
+    response key never arrives raises :class:`TimeoutError` instead of
+    busy-looping forever.
+    """
+
+    def __init__(
+        self,
+        key: str,
+        cluster: "Cluster",
+        clock: Optional[VirtualClock] = None,
+        run: Optional[DagRun] = None,
+    ):
+        self.key = key
+        self._cluster = cluster
+        self._clock = clock
+        self.run = run
+
+    def done(self) -> bool:
+        """Non-blocking completion probe (no engine driving, no latency)."""
+        if self.run is not None:
+            return self.run.finished
+        # key EXISTENCE, not value: a stored None still counts as done
+        return self._cluster.kvs.get_merged(self.key) is not None
+
+    def result(self) -> DagResult:
+        """Full :class:`DagResult` (latency/schedule/retries); blocks via
+        :meth:`get` until the run resolves."""
+        if self.run is None:
+            raise ValueError("future is not bound to an in-flight run")
+        self.get()
+        assert self.run.result is not None
+        return self.run.result
+
+    def get(self, timeout: Optional[float] = None) -> Any:
+        deadline = (None if timeout is None
+                    else time.monotonic() + max(0.0, timeout))
+        while True:
+            if self.run is not None:
+                # bound future: the run's state is authoritative.  The
+                # KVS key is deliberately NOT polled while the run is in
+                # flight — a user-supplied ``store_in_kvs`` key may hold
+                # an EARLIER invocation's value, which must not be
+                # returned as this run's result (and polling would pay a
+                # read-repair fetch per engine turn for nothing).
+                if self.run.state == RUN_FAILED:
+                    if self.run.user_failed:
+                        raise self.run.error  # user-code error, as-is
+                    raise RuntimeError(
+                        f"DAG {self.run.dag.name} failed after "
+                        f"{self.run.attempt} retries"
+                    ) from self.run.error
+                if self.run.state == RUN_DONE:
+                    return self.run.value
+            else:
+                # existence probe, not value probe: a key legitimately
+                # storing None must resolve to None, not spin forever
+                lat = self._cluster.kvs.get_merged(self.key,
+                                                   clock=self._clock)
+                if lat is not None:
+                    return lat.reveal()
+            if deadline is not None and time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"result key {self.key!r} did not arrive within "
+                    f"{timeout}s (failed or garbage-collected DAG?)"
+                )
+            if self._cluster.step() == 0:
+                # engine idle: the key can only arrive via background
+                # progress (an unflushed cache write-back, gossip)
+                self._cluster.tick()
 
 
 class Cluster:
@@ -87,7 +273,21 @@ class Cluster:
         self.client_clock = LamportClock("client")
         self.tracker: Optional[AnomalyTracker] = None
         self._dag_seq = 0
+        self._run_seq = 0
+        self._runs: Dict[str, DagRun] = {}  # in flight, submission-ordered
         self._fn_latency_stats: Dict[str, List[float]] = {}
+        # engine telemetry: read-set warm launch accounting.  Both the
+        # per-request warms (single-run groups) and the cross-request
+        # fused fetches count here — cross-request batching shows up as
+        # FEWER batches per request, which is what the serving
+        # benchmarks compare against the scalar hop count.
+        self.engine_turns = 0
+        self.fused_prefetch_batches = 0
+        self.fused_prefetch_keys = 0
+        self.batched_response_puts = 0
+        # run_id -> warm cost charged by _fused_prefetch this turn,
+        # folded back into the invocation window by _invoke_trigger
+        self._warm_charged: Dict[str, float] = {}
 
     # -- elasticity ---------------------------------------------------------------
     def add_vm(self, executors_per_vm: int = 3) -> List[str]:
@@ -138,17 +338,70 @@ class Cluster:
         self.scheduler.register_dag(dag)
         return dag
 
-    def put(self, key: str, value: Any, clock: Optional[VirtualClock] = None) -> None:
-        lat = value if isinstance(value, Lattice) else LWWLattice(
+    def _client_lattice(self, value: Any) -> Lattice:
+        """Client-side LWW encapsulation, shared by the scalar put path
+        and the engine's batched response flush."""
+        return value if isinstance(value, Lattice) else LWWLattice(
             self.client_clock.tick(), value
         )
+
+    def put(self, key: str, value: Any, clock: Optional[VirtualClock] = None) -> None:
         # client puts block until all replicas ack (read-your-writes for
         # the issuing client); executor cache flushes stay async
-        self.kvs.put(key, lat, clock=clock, sync=True)
+        self.kvs.put(key, self._client_lattice(value), clock=clock, sync=True)
 
     def get(self, key: str, clock: Optional[VirtualClock] = None) -> Any:
         lat = self.kvs.get_merged(key, clock=clock)
         return None if lat is None else lat.reveal()
+
+    # -- futures-first invocation API (paper §3, Fig. 2) ------------------------------
+    @property
+    def in_flight(self) -> int:
+        """Number of DAG runs currently in flight in the engine."""
+        return len(self._runs)
+
+    def call_async(
+        self,
+        fn_name: str,
+        *args: Any,
+        clock: Optional[VirtualClock] = None,
+        mode: Optional[str] = None,
+    ) -> CloudburstFuture:
+        """Enqueue a single-function invocation; returns immediately.
+
+        The function runs as an ephemeral one-node DAG through the engine
+        (so it shares restart-on-failure, speculation and the per-turn
+        batched paths); the result lands at the future's KVS key.
+        """
+        self._require_function(fn_name)
+        key = f"__async_result_{fn_name}_{self._run_seq + 1}"
+        run = self._submit(
+            Dag(f"call.{fn_name}", [fn_name]), {fn_name: tuple(args)},
+            clock=clock, mode=mode, response_key=key,
+        )
+        return CloudburstFuture(key, self, run=run)
+
+    def call_dag_async(
+        self,
+        dag_name: str,
+        args_by_fn: Optional[Dict[str, Sequence]] = None,
+        clock: Optional[VirtualClock] = None,
+        mode: Optional[str] = None,
+        store_in_kvs: Optional[str] = None,
+    ) -> CloudburstFuture:
+        """Enqueue a DAG invocation; returns a KVS-backed future immediately.
+
+        Many calls may be in flight at once — drive them with
+        :meth:`step` (or just ``future.get()``), and the engine batches
+        their scheduling, read-set prefetches and response writes per
+        turn.  ``store_in_kvs`` overrides the auto-generated response key.
+        """
+        key = store_in_kvs or f"__dag_result_{dag_name}_{self._run_seq + 1}"
+        run = self._submit(
+            self.scheduler.dags[dag_name], args_by_fn,
+            clock=clock, mode=mode, response_key=key,
+        )
+        return CloudburstFuture(key, self, run=run)
 
     # -- single-function call (paper §4.3 "single function execution") ----------------
     def call(
@@ -158,24 +411,14 @@ class Cluster:
         clock: Optional[VirtualClock] = None,
         mode: Optional[str] = None,
     ) -> Tuple[Any, float]:
-        clock = clock or VirtualClock()
-        t0 = clock.now
-        clock.advance(self.profile.sample(self.profile.tcp, 128))  # client->sched
-        eid = self.scheduler.pick_executor(fn_name, args)
-        executor = self.executors[eid]
-        if not executor.has_function(fn_name):
-            executor.pin_function(fn_name, self.scheduler.load_function(fn_name))
-        clock.advance(self.profile.sample(self.profile.tcp, 128))  # sched->exec
-        self._dag_seq += 1
-        session = SessionContext(
-            dag_id=f"call-{self._dag_seq}", mode=mode or self.mode
+        """Synchronous single-function call: submit + drive to completion."""
+        self._require_function(fn_name)
+        run = self._submit(
+            Dag(f"call.{fn_name}", [fn_name]), {fn_name: tuple(args)},
+            clock=clock, mode=mode, response_key=None,
         )
-        result = executor.invoke(
-            fn_name, args, session, self.caches, clock=clock,
-            tracker=self.tracker, prefetch=self.read_prefetch,
-        )
-        clock.advance(self.profile.sample(self.profile.tcp, 256))  # exec->client
-        return result, clock.now - t0
+        result = self._drive(run)
+        return result.value, result.latency
 
     # -- DAG call with restart-on-failure (paper §4.5) ---------------------------------
     def call_dag(
@@ -186,98 +429,380 @@ class Cluster:
         mode: Optional[str] = None,
         store_in_kvs: Optional[str] = None,
     ) -> DagResult:
-        dag = self.scheduler.dags[dag_name]
-        args_by_fn = args_by_fn or {}
-        clock = clock or VirtualClock()
-        t0 = clock.now
-        exclude: Set[str] = set()
-        last_err: Optional[Exception] = None
-        for attempt in range(self.max_retries + 1):
-            self._dag_seq += 1
-            session = SessionContext(
-                dag_id=f"{dag_name}-{self._dag_seq}", mode=mode or self.mode
-            )
-            clock.advance(self.profile.sample(self.profile.tcp, 256))  # client->sched
-            schedule = self.scheduler.schedule_dag(dag, args_by_fn, exclude=exclude)
-            try:
-                value, speculated = self._execute(
-                    dag, schedule, args_by_fn, session, clock
-                )
-                if store_in_kvs is not None:
-                    self.put(store_in_kvs, value, clock=clock)
-                clock.advance(self.profile.sample(self.profile.tcp, 256))
-                if self.tracker is not None:
-                    self.tracker.finish_dag(session.dag_id)
-                self._evict_snapshots(session)
-                return DagResult(
-                    value, clock.now - t0, schedule, retries=attempt,
-                    speculated=speculated,
-                )
-            except (DagRestart, ExecutorFailure, CacheFailure) as e:
-                last_err = e
-                # configurable timeout before whole-DAG re-execution (§4.5)
-                clock.advance(self.dag_timeout)
-                exclude |= {
-                    eid
-                    for eid in schedule.values()
-                    if not self.executors[eid].alive
-                }
-        raise RuntimeError(
-            f"DAG {dag_name} failed after {self.max_retries} retries"
-        ) from last_err
+        """Synchronous wrapper over the engine: drive ``step()`` until the
+        run resolves.  With no other runs in flight this degenerates to
+        the sequential executor (one ready function per turn, same
+        scheduling-rng draw order, same per-hop latency accounting)."""
+        run = self._submit(
+            self.scheduler.dags[dag_name], args_by_fn,
+            clock=clock, mode=mode, response_key=store_in_kvs,
+        )
+        return self._drive(run)
 
-    def _execute(
+    # -- engine internals ---------------------------------------------------------
+    def _require_function(self, fn_name: str) -> None:
+        """Fail-fast at submit time: an unregistered function must error
+        in the offending call (as the pre-engine path did), never inside
+        ``step()`` where it would poison the other in-flight runs'
+        already-drained triggers."""
+        sched = self.scheduler
+        if fn_name in sched.local_functions:
+            return
+        if fn_name in sched.registered_functions():  # cross-client KVS set
+            sched.local_functions.add(fn_name)
+            return
+        raise KeyError(f"function {fn_name!r} not registered")
+
+    def _submit(
         self,
         dag: Dag,
-        schedule: Dict[str, str],
-        args_by_fn: Dict[str, Sequence],
-        session: SessionContext,
-        clock: VirtualClock,
-    ) -> Tuple[Any, int]:
-        results: Dict[str, Any] = {}
-        speculated = 0
-        order = dag.topo_order()
-        for i, fn_name in enumerate(order):
-            upstream = [results[u] for u in dag.upstream(fn_name)]
-            args = tuple(upstream) + tuple(args_by_fn.get(fn_name, ()))
-            # executor->executor trigger carries session metadata (§5.3)
-            meta_bytes = session.metadata_bytes() + 256
-            clock.advance(self.profile.sample(self.profile.tcp, meta_bytes))
-            eid = schedule[fn_name]
+        args_by_fn: Optional[Dict[str, Sequence]],
+        clock: Optional[VirtualClock],
+        mode: Optional[str],
+        response_key: Optional[str],
+    ) -> DagRun:
+        self._run_seq += 1
+        run = DagRun(
+            run_id=f"run-{self._run_seq}",
+            dag=dag,
+            args_by_fn=dict(args_by_fn or {}),
+            mode=mode or self.mode,
+            clock=clock or VirtualClock(),
+            response_key=response_key,
+        )
+        run.t0 = run.clock.now
+        self._begin_attempt(run, first=True)
+        self._runs[run.run_id] = run
+        return run
+
+    def _begin_attempt(self, run: DagRun, first: bool = False) -> None:
+        """Start a (re)execution attempt: fresh session, client->scheduler
+        hop, function state machine reset (§4.5 whole-DAG re-execution)."""
+        if not first:
+            run.attempt += 1
+        self._dag_seq += 1
+        run.session = SessionContext(
+            dag_id=f"{run.dag.name}-{self._dag_seq}", mode=run.mode
+        )
+        run.clock.advance(self.profile.sample(self.profile.tcp, 256))
+        run.reset_attempt()
+
+    def _drive(self, run: DagRun) -> DagResult:
+        while run.state == RUN_RUNNING:
+            if self.step() == 0:
+                # unreachable in normal operation: invocation is
+                # synchronous inside step(), so an unfinished run always
+                # has ready triggers — guard against a looping caller
+                raise RuntimeError(
+                    f"engine stalled with run {run.run_id} unfinished")
+        if run.state == RUN_FAILED:
+            if run.user_failed:
+                raise run.error  # pre-engine semantics: user errors as-is
+            raise RuntimeError(
+                f"DAG {run.dag.name} failed after {self.max_retries} retries"
+            ) from run.error
+        assert run.result is not None
+        return run.result
+
+    def step(self) -> int:
+        """One engine turn; returns the number of triggers processed.
+
+        1. collect every ready function across all in-flight runs;
+        2. batch-schedule them (ONE ``Scheduler.schedule_ready`` call);
+        3. per trigger: downstream-trigger hop + cold function pin;
+        4. fuse the triggers' read-set prefetches per cache — one
+           ``read_many`` (one ``get_merged_many`` launch) per cache per
+           turn, every waiting run charged the same batched cost;
+        5. invoke (synchronously), with per-function straggler
+           speculation; failures restart their run (§4.5) without
+           disturbing the other in-flight runs;
+        6. finalize runs whose functions all completed — response keys
+           flush as ONE batched ``put_many``.
+        """
+        triggers: List[Tuple[DagRun, str, Tuple[Any, ...], int]] = []
+        for run in list(self._runs.values()):
+            if run.state != RUN_RUNNING:
+                continue
+            ready, run.ready = run.ready, []
+            for fn in ready:
+                upstream = [run.results[u] for u in run.dag.upstream(fn)]
+                args = tuple(upstream) + tuple(run.args_by_fn.get(fn, ()))
+                triggers.append((run, fn, args, run.attempt))
+        if not triggers:
+            return 0
+        self.engine_turns += 1
+        # batched scheduling: one entry point call for the whole wave.
+        # If it raises (a trigger with no schedulable executor, a buggy
+        # custom policy), fall back to per-trigger picks so ONLY the
+        # offending runs fail — exclude sets are per-run, so one run's
+        # unschedulable trigger must not kill the healthy wave.
+        trigger_specs = [(fn, run.args_by_fn.get(fn, ()), run.exclude)
+                         for run, fn, _args, _att in triggers]
+        try:
+            picks: List[Optional[str]] = list(
+                self.scheduler.schedule_ready(trigger_specs))
+        except Exception:
+            picks = []
+            for (run, fn, _args, attempt), spec in zip(triggers,
+                                                       trigger_specs):
+                try:
+                    picks.append(self.scheduler.pick_executor(
+                        spec[0], spec[1], exclude=spec[2]))
+                except Exception as e:
+                    picks.append(None)
+                    if run.state == RUN_RUNNING and run.attempt == attempt:
+                        self._fail_user(run, e)  # propagate as-is, no retry
+        plans: List[Tuple[DagRun, str, Tuple[Any, ...], str, int]] = []
+        for (run, fn, args, attempt), eid in zip(triggers, picks):
+            if eid is None:
+                continue
+            run.schedule[fn] = eid
             executor = self.executors[eid]
-            if not executor.has_function(fn_name):
+            # executor->executor trigger carries session metadata (§5.3)
+            meta_bytes = run.session.metadata_bytes() + 256
+            run.clock.advance(self.profile.sample(self.profile.tcp, meta_bytes))
+            if not executor.has_function(fn):
                 # cold executor: pull + deserialize the function from Anna
-                executor.pin_function(fn_name, self.scheduler.load_function(fn_name))
-                clock.advance(self.profile.sample(self.profile.kvs_op, 1024))
-            t_before = clock.now
-            result = executor.invoke(
-                fn_name, args, session, self.caches, clock=clock,
-                tracker=self.tracker, prefetch=self.read_prefetch,
+                try:
+                    executor.pin_function(fn, self.scheduler.load_function(fn))
+                except Exception as e:  # function vanished from the KVS
+                    self._fail_user(run, e)
+                    continue
+                run.clock.advance(self.profile.sample(self.profile.kvs_op, 1024))
+            plans.append((run, fn, args, eid, attempt))
+        if self.read_prefetch:
+            self._fused_prefetch(plans)
+        for run, fn, args, eid, attempt in plans:
+            # skip triggers whose run restarted/failed earlier this turn
+            if run.state != RUN_RUNNING or run.attempt != attempt:
+                continue
+            self._invoke_trigger(run, fn, args, eid)
+        self._finalize_completed()
+        return len(triggers)
+
+    def _fused_prefetch(
+        self, plans: Sequence[Tuple[DagRun, str, Tuple[Any, ...], str, int]]
+    ) -> None:
+        """Fuse the wave's read-set prefetches into one batched
+        ``read_many`` per cache.
+
+        Each function's read set is its KVS-reference args filtered by
+        the session protocol (``session_prefetch_keys``: dsrr-pinned keys
+        skipped).  A cache serving a single function this turn keeps the
+        per-invocation warm rule (only batch when the read set has >= 2
+        keys, preserving the scalar miss path's any-replica semantics);
+        a cache serving SEVERAL functions fuses ALL their keys — even
+        single-key read sets — into one read-repair fetch, the
+        cross-request batching this engine exists for.  Every run waiting
+        on the fused fetch is charged the same batched virtual cost.
+        """
+        by_cache: Dict[str, List[Tuple[DagRun, List[str], int]]] = {}
+        for run, fn, args, eid, attempt in plans:
+            keys = session_prefetch_keys(
+                run.session,
+                [a.key for a in args if isinstance(a, CloudburstReference)],
             )
-            elapsed = clock.now - t_before
-            budget = self._straggler_budget(fn_name)
-            if (
-                self.straggler_speculation
-                and budget is not None
-                and elapsed > budget
-            ):
-                # speculative re-execution on another executor; faster wins
-                alt = self._pick_alternate(fn_name, eid)
-                if alt is not None:
-                    spec_clock = VirtualClock(t_before)
+            if not keys:
+                continue
+            cache_id = self.executors[eid].cache.cache_id
+            by_cache.setdefault(cache_id, []).append((run, keys, attempt))
+        for cache_id, group in by_cache.items():
+            cache = self.caches.get(cache_id)
+            if cache is None:
+                continue
+            # drop entries whose run failed or restarted while an
+            # earlier cache group of THIS turn was processed — a dead
+            # attempt must not have keys fetched or its clock charged
+            group = [(run, keys, att) for run, keys, att in group
+                     if run.state == RUN_RUNNING and run.attempt == att]
+            if not group:
+                continue
+            if len({id(run) for run, _keys, _att in group}) == 1:
+                # every trigger belongs to ONE run: keep the pre-engine
+                # per-invocation warm rule exactly — each function's read
+                # set warms on its own, and only when it has >= 2 keys
+                # (the scalar miss path keeps its any-replica semantics).
+                # Fusing here would change what a solo sync call_dag
+                # observes; cross-REQUEST fusion below is the new power.
+                for run, keys, attempt in group:
+                    if (len(keys) < 2 or run.state != RUN_RUNNING
+                            or run.attempt != attempt):
+                        continue
+                    t_warm = run.clock.now
+                    try:
+                        cache.read_many(keys, clocks=[run.clock])
+                        self.fused_prefetch_batches += 1
+                        self.fused_prefetch_keys += len(keys)
+                        self._warm_charged[run.run_id] = (
+                            self._warm_charged.get(run.run_id, 0.0)
+                            + run.clock.now - t_warm)
+                    except CacheFailure as e:
+                        self._fail_attempt(run, e)
+                continue
+            fused = list(dict.fromkeys(
+                k for _run, keys, _att in group for k in keys))
+            # dedup by CLOCK identity, not run identity: two runs
+            # sharing one VirtualClock (public ``clock=`` parameter)
+            # must be charged the batched cost once, not twice
+            seen: Dict[int, VirtualClock] = {}
+            for run, _keys, _att in group:
+                seen.setdefault(id(run.clock), run.clock)
+            clocks = list(seen.values())
+            t_warms = {run.run_id: run.clock.now for run, _k, _a in group}
+            try:
+                cache.read_many(fused, clocks=clocks)
+                self.fused_prefetch_batches += 1
+                self.fused_prefetch_keys += len(fused)
+                for run, _keys, _att in group:
+                    self._warm_charged[run.run_id] = (
+                        self._warm_charged.get(run.run_id, 0.0)
+                        + run.clock.now - t_warms[run.run_id])
+            except CacheFailure as e:
+                # fail only runs still on the attempt that planned this
+                # fetch: a run already restarted by an earlier group this
+                # turn must not burn a second retry for the same turn
+                for run, _keys, attempt in group:
+                    if run.state == RUN_RUNNING and run.attempt == attempt:
+                        self._fail_attempt(run, e)
+
+    def _invoke_trigger(
+        self, run: DagRun, fn: str, args: Tuple[Any, ...], eid: str
+    ) -> None:
+        executor = self.executors[eid]
+        # the pre-engine executor charged the read-set warm INSIDE the
+        # invocation window (invoke ran warm_read_set itself); the
+        # engine warmed earlier in the turn, so fold that cost back in —
+        # straggler stats and the speculation trigger stay equivalent
+        warm = self._warm_charged.pop(run.run_id, 0.0)
+        t_before = run.clock.now - warm
+        try:
+            # prefetch=False: the engine already fused this trigger's
+            # read-set warm into the per-cache batch (or skipped it,
+            # exactly as the per-invocation warm rule would)
+            result = executor.invoke(
+                fn, args, run.session, self.caches, clock=run.clock,
+                tracker=self.tracker, prefetch=False,
+            )
+        except (DagRestart, ExecutorFailure, CacheFailure) as e:
+            self._fail_attempt(run, e)
+            return
+        except Exception as e:
+            # user-code error: deterministic, so no §4.5 retry — fail
+            # THIS run and surface the original exception through its
+            # future / sync wrapper.  It must not escape step(): the
+            # other in-flight runs' triggers still need invoking.
+            self._fail_user(run, e)
+            return
+        elapsed = run.clock.now - t_before
+        budget = self._straggler_budget(fn)
+        if (
+            self.straggler_speculation
+            and budget is not None
+            and elapsed > budget
+        ):
+            # speculative re-execution on another executor; faster wins.
+            # A failure here is contained exactly like a primary-invoke
+            # failure: §4.5 whole-DAG restart, not an escaped exception
+            # that would abort the other in-flight runs' drive.
+            alt = self._pick_alternate(fn, eid)
+            if alt is not None:
+                spec_clock = VirtualClock(t_before)
+                try:
                     alt_result = alt.invoke(
-                        fn_name, args, session, self.caches, clock=spec_clock,
+                        fn, args, run.session, self.caches, clock=spec_clock,
                         tracker=self.tracker, prefetch=self.read_prefetch,
                     )
-                    speculated += 1
-                    if spec_clock.now < clock.now:
-                        clock.now = spec_clock.now
-                        result = alt_result
-            self._record_latency(fn_name, elapsed)
-            results[fn_name] = result
-        sinks = dag.sinks()
-        # sink notifies upstream caches of completion -> snapshots evictable
-        return (results[sinks[0]] if len(sinks) == 1 else [results[s] for s in sinks]), speculated
+                except (DagRestart, ExecutorFailure, CacheFailure) as e:
+                    self._fail_attempt(run, e)
+                    return
+                except Exception as e:
+                    # user-code error on the speculative copy (§4.5:
+                    # idempotence is the user's concern): fail this run
+                    # as-is, exactly like the primary-invoke path
+                    self._fail_user(run, e)
+                    return
+                run.speculated += 1
+                if spec_clock.now < run.clock.now:
+                    run.clock.now = spec_clock.now
+                    result = alt_result
+        self._record_latency(fn, elapsed)
+        run.complete_fn(fn, result)
+
+    def _fail_user(self, run: DagRun, err: BaseException) -> None:
+        """User-visible, non-retryable failure (user-code error, missing
+        function, unschedulable trigger): surfaced as-is through the
+        run's future / sync wrapper; never disturbs other runs."""
+        run.error = err
+        run.user_failed = True
+        run.state = RUN_FAILED
+        self._runs.pop(run.run_id, None)
+        self._warm_charged.pop(run.run_id, None)
+
+    def _fail_attempt(self, run: DagRun, err: BaseException) -> None:
+        """§4.5: configurable timeout, then whole-DAG re-execution on a
+        schedule excluding the executors observed dead — or permanent
+        failure once the retry budget is spent."""
+        run.error = err
+        self._warm_charged.pop(run.run_id, None)
+        run.clock.advance(self.dag_timeout)
+        run.exclude |= {
+            eid
+            for eid in run.schedule.values()
+            if eid not in self.executors or not self.executors[eid].alive
+        }
+        if run.attempt >= self.max_retries:
+            run.state = RUN_FAILED
+            self._runs.pop(run.run_id, None)
+        else:
+            self._begin_attempt(run)
+
+    def _finalize_completed(self) -> None:
+        """Complete runs whose every function produced a result.
+
+        The sink value is computed per run; response-key writes for ALL
+        runs completing this turn land as ONE batched ``kvs.put_many``
+        (sync: futures read the key immediately via read-repair), each
+        run charged its own payload's virtual put cost.  A single
+        completion keeps the scalar client-put path bit-for-bit."""
+        completed = [
+            run for run in self._runs.values()
+            if run.state == RUN_RUNNING
+            and len(run.results) == len(run.dag.functions)
+        ]
+        if not completed:
+            return
+        responses: List[Tuple[DagRun, Lattice]] = []
+        for run in completed:
+            sinks = run.dag.sinks()
+            run.value = (
+                run.results[sinks[0]] if len(sinks) == 1
+                else [run.results[s] for s in sinks]
+            )
+            if run.response_key is not None:
+                if len(completed) == 1:
+                    self.put(run.response_key, run.value, clock=run.clock)
+                else:
+                    responses.append((run, self._client_lattice(run.value)))
+        if responses:
+            self.kvs.put_many(
+                [(run.response_key, lat) for run, lat in responses],
+                clock=None, sync=True,
+            )
+            self.batched_response_puts += 1
+            for run, lat in responses:
+                run.clock.advance(
+                    self.profile.sample(self.profile.kvs_op, lat.byte_size()))
+        for run in completed:
+            run.clock.advance(self.profile.sample(self.profile.tcp, 256))
+            if self.tracker is not None:
+                self.tracker.finish_dag(run.session.dag_id)
+            self._evict_snapshots(run.session)
+            run.state = RUN_DONE
+            run.result = DagResult(
+                run.value, run.clock.now - run.t0, dict(run.schedule),
+                retries=run.attempt, speculated=run.speculated,
+            )
+            self._runs.pop(run.run_id, None)
 
     def _evict_snapshots(self, session: SessionContext) -> None:
         for cache in self.caches.values():
@@ -322,6 +847,8 @@ class Cluster:
         # with tick_jitter > 0 individual items defer randomly, modeling
         # continuous out-of-order background propagation (legal because
         # merges are ACI) — the staleness skew behind Table 2's anomalies.
+        # With many DAGs in flight, one cache flush carries ALL their
+        # pending write-backs in one put_many / PlaneBatch.
         p = self.tick_jitter if defer_prob is None else defer_prob
         self.kvs.tick(p)
         for cache in self.caches.values():

@@ -92,6 +92,10 @@ class Scheduler:
         self.function_locations: Dict[str, List[str]] = defaultdict(list)
         self.dags: Dict[str, Dag] = {}
         self.call_counts: Dict[str, int] = defaultdict(int)
+        # names registered THROUGH this scheduler: a local fast path for
+        # submit-time validation (the KVS set stays authoritative for
+        # functions registered by other schedulers)
+        self.local_functions: Set[str] = set()
 
     # -- registration mechanisms ---------------------------------------------------
     def register_function(self, name: str, fn: Callable) -> None:
@@ -99,6 +103,7 @@ class Scheduler:
         self.kvs.put(f"__func_{name}", LWWLattice(self.lamport.tick(), fn))
         cur = self.kvs.get_merged(FUNCS_KEY) or SetLattice()
         self.kvs.put(FUNCS_KEY, cur.merge(SetLattice.of([name])))
+        self.local_functions.add(name)
 
     def registered_functions(self) -> Set[str]:
         lat = self.kvs.get_merged(FUNCS_KEY)
@@ -156,6 +161,25 @@ class Scheduler:
             raise RuntimeError("no live executors")
         self.call_counts[fn_name] += 1
         return self.policy.pick(self, fn_name, args, candidates)
+
+    def schedule_ready(
+        self,
+        triggers: Sequence[Tuple[str, Sequence, Optional[Set[str]]]],
+    ) -> List[str]:
+        """Batched scheduling entry point for the cluster engine.
+
+        ``triggers`` is one engine turn's worth of ready functions across
+        ALL in-flight DAGs: ``(fn_name, args, exclude)`` tuples in
+        submission order.  Placement is per-trigger :meth:`pick_executor`
+        (same policy, same rng draw sequence — a single in-flight DAG
+        reproduces the sequential scheduler's picks exactly); what is
+        batched is the entry point itself: one scheduler hop serves the
+        whole wave instead of one per function.
+        """
+        return [
+            self.pick_executor(fn_name, args, exclude=exclude)
+            for fn_name, args, exclude in triggers
+        ]
 
     def schedule_dag(
         self,

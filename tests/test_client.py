@@ -1,0 +1,210 @@
+"""Futures-first client API: async invocation, KVS-backed futures, timeouts."""
+
+import pytest
+
+from repro.core import (
+    CloudburstClient,
+    CloudburstFuture,
+    CloudburstReference,
+    Cluster,
+    DagRestart,
+)
+
+
+def _mk(seed=0, **kw):
+    kw.setdefault("n_vms", 2)
+    kw.setdefault("executors_per_vm", 2)
+    return Cluster(seed=seed, **kw)
+
+
+# -- future timeout regression ------------------------------------------------
+#
+# A future whose response key never arrives (failed or garbage-collected
+# DAG) used to busy-loop cluster.tick() forever; get(timeout=...) must
+# raise TimeoutError instead.
+
+
+def test_future_get_times_out_on_missing_key():
+    c = _mk(seed=1)
+    fut = CloudburstFuture("__never_written", c)
+    with pytest.raises(TimeoutError):
+        fut.get(timeout=0.2)
+
+
+def test_future_get_timeout_zero_returns_immediately():
+    c = _mk(seed=2)
+    fut = CloudburstFuture("__never_written", c)
+    with pytest.raises(TimeoutError):
+        fut.get(timeout=0.0)
+
+
+def test_future_with_none_result_resolves_instead_of_looping():
+    """A run whose sink legitimately returns None must resolve (the
+    bound run knows it finished) — not spin until the timeout because
+    the KVS poll cannot tell None from absent."""
+    c = _mk(seed=20)
+    c.register(lambda x: None, "swallow")
+    c.register_dag("d", ["swallow"])
+    fut = c.call_dag_async("d", {"swallow": (1,)})
+    assert fut.get(timeout=5.0) is None
+    assert fut.done()
+
+
+def test_unbound_future_with_stored_none_resolves():
+    """An unbound (key-only) future over a key that legitimately stores
+    None must resolve to None — existence probe, not value probe."""
+    cloud = CloudburstClient(_mk(seed=21))
+    cloud.register(lambda x: None, name="swallow")
+    fut = cloud.call("swallow", 1, store_in_kvs=True)
+    assert fut.done()
+    assert fut.get(timeout=5.0) is None
+
+
+def test_speculation_count_resets_per_attempt():
+    from repro.core import Dag, DagRun
+    from repro.core.netsim import VirtualClock
+
+    run = DagRun(run_id="r", dag=Dag("d", ["f"]), args_by_fn={},
+                 mode="lww", clock=VirtualClock())
+    run.speculated = 3
+    run.reset_attempt()  # §4.5 restart: only the winning attempt counts
+    assert run.speculated == 0
+
+
+def test_future_resolves_after_timeout_survivable_wait():
+    """A key that DOES arrive resolves well within a generous timeout."""
+    c = _mk(seed=3)
+    c.register(lambda x: x * 3, "f")
+    c.register_dag("d", ["f"])
+    fut = c.call_dag_async("d", {"f": (4,)})
+    assert fut.get(timeout=30.0) == 12
+
+
+def test_failed_run_raises_instead_of_looping():
+    """A run that exhausts its retry budget raises RuntimeError from
+    get() — the bound future knows the run failed and does not wait for
+    a response key that will never be written."""
+    c = _mk(seed=4, max_retries=0, dag_timeout=0.01)
+
+    def boom(x):
+        raise DagRestart("injected upstream loss")
+
+    c.register(boom, "boom")
+    c.register_dag("d", ["boom"])
+    fut = c.call_dag_async("d", {"boom": (1,)})
+    with pytest.raises(RuntimeError):
+        fut.get(timeout=10.0)
+    # and an unbound future for the (never-written) key times out cleanly
+    with pytest.raises(TimeoutError):
+        CloudburstFuture(fut.key, c).get(timeout=0.1)
+
+
+# -- async invocation API ------------------------------------------------------
+
+
+def test_call_async_returns_future_immediately():
+    c = _mk(seed=5)
+    c.register(lambda x: x + 1, "inc")
+    fut = c.call_async("inc", 41)
+    assert c.in_flight == 1  # enqueued, not executed
+    assert not fut.done()
+    assert fut.get(timeout=30.0) == 42
+    assert fut.done()
+    assert c.in_flight == 0
+    # the result landed at the future's KVS key (Fig. 2 lines 11-12)
+    assert c.get(fut.key) == 42
+
+
+def test_many_dags_in_flight_concurrently():
+    c = _mk(seed=6)
+    c.register(lambda x: x + 1, "inc")
+    c.register(lambda x: x * x, "sq")
+    c.register_dag("sqinc", ["inc", "sq"])
+    futs = [c.call_dag_async("sqinc", {"inc": (i,)}) for i in range(8)]
+    assert c.in_flight == 8
+    # one step() turn advances EVERY in-flight run by one wave
+    c.step()
+    assert all(not f.done() for f in futs)  # inc done, sq pending
+    vals = [f.get(timeout=30.0) for f in futs]
+    assert vals == [(i + 1) ** 2 for i in range(8)]
+    assert c.in_flight == 0
+
+
+def test_future_result_carries_dag_metadata():
+    c = _mk(seed=7)
+    c.register(lambda x: x - 1, "dec")
+    c.register_dag("d", ["dec"])
+    fut = c.call_dag_async("d", {"dec": (10,)})
+    r = fut.result()
+    assert r.value == 9
+    assert r.latency > 0
+    assert set(r.schedule) == {"dec"}
+
+
+def test_cross_request_prefetch_batches_fuse():
+    """Concurrent runs reading KVS references on the same cache fuse
+    their read sets into ONE batched fetch per cache per turn."""
+    c = Cluster(n_vms=1, executors_per_vm=3, seed=8)
+    for i in range(6):
+        c.put(f"in-{i}", i * 10)
+    c.register(lambda x: x + 1, "f")
+    c.register_dag("d", ["f"])
+    futs = [c.call_dag_async("d", {"f": (CloudburstReference(f"in-{i}"),)})
+            for i in range(6)]
+    vals = [f.get(timeout=30.0) for f in futs]
+    assert vals == [i * 10 + 1 for i in range(6)]
+    # single cache -> the whole wave's read set fused into one batch,
+    # even though each individual read set is a single key
+    assert c.fused_prefetch_batches >= 1
+    assert c.fused_prefetch_keys >= 6
+    assert c.batched_response_puts >= 1
+
+
+def test_client_level_async_api():
+    cloud = CloudburstClient(_mk(seed=9))
+    cloud.put("k", 5)
+    sq = cloud.register(lambda x: x * x, name="square")
+    fut = sq.call_async(CloudburstReference("k"))
+    assert fut.get(timeout=30.0) == 25
+    cloud.register(lambda x: x + 1, name="inc")
+    dag = cloud.register_dag("pipe", ["inc", "square"])
+    fut2 = dag.call_async({"inc": (3,)})
+    assert fut2.get(timeout=30.0) == 16
+    # sync sugar unchanged
+    assert sq(3) == 9
+    stored = sq(4, store_in_kvs=True)
+    assert stored.get(timeout=30.0) == 16
+
+
+def test_userlib_get_many_put_many():
+    c = _mk(seed=10)
+    for i in range(5):
+        c.put(f"s-{i}", i)
+
+    def fan_in(cloudburst, _):
+        vals = cloudburst.get_many([f"s-{i}" for i in range(5)])
+        cloudburst.put_many([(f"d-{i}", v * 2) for i, v in enumerate(vals)])
+        return sum(vals)
+
+    c.register(fan_in, "fan_in")
+    c.register_dag("d", ["fan_in"])
+    r = c.call_dag("d", {"fan_in": (None,)})
+    assert r.value == 0 + 1 + 2 + 3 + 4
+    c.tick()  # batched write-back flush
+    assert [c.get(f"d-{i}") for i in range(5)] == [0, 2, 4, 6, 8]
+
+
+def test_userlib_get_many_rides_batched_miss_path():
+    c = Cluster(n_vms=1, executors_per_vm=1, seed=11)
+    for i in range(8):
+        c.put(f"m-{i}", i)
+
+    def reader(cloudburst, _):
+        return cloudburst.get_many([f"m-{i}" for i in range(8)])
+
+    c.register(reader, "reader")
+    c.register_dag("d", ["reader"])
+    r = c.call_dag("d", {"reader": (None,)})
+    assert r.value == list(range(8))
+    cache = next(iter(c.caches.values()))
+    assert cache.batched_misses >= 8  # misses filled by ONE get_merged_many

@@ -1,0 +1,263 @@
+"""Engine interleaving: concurrent in-flight DAGs ≡ sequential execution.
+
+The event-driven engine must not change semantics: N DAGs driven
+concurrently (waves interleaved across runs each ``step()``) produce the
+same values — and the same Table-2 shadow anomaly counts — as the same
+DAGs driven to completion one at a time.  Two equivalence laws hold and
+are pinned here:
+
+* requests over private keyspaces are bit-equal to sequential runs,
+  including their *same-run* staleness anomalies (a write on one cache
+  read stale through another) — concurrency must not perturb a request
+  that races with nobody;
+* requests racing on SHARED keys agree on the post-flush KVS state —
+  lattice merges are ACI, so the interleaving the engine picks and the
+  sequential interleaving converge (mid-flight read visibility between
+  racing requests is inherently order-dependent on ANY concurrent
+  server and is not asserted).
+
+Failure restarts (§4.5) and straggler speculation must stay per-run:
+one run's trouble never disturbs the others in flight.
+"""
+
+import pytest
+
+from repro.core import AnomalyTracker, Cluster, ExecutorFailure
+from repro.core.scheduler import SchedulingPolicy
+
+
+class StickyPolicy(SchedulingPolicy):
+    """Deterministic, hash-free placement: ``w1`` on the first executor,
+    everything else on the last.  With 2 single-executor VMs this pins
+    the two DAG stages to DIFFERENT caches (the cross-cache staleness
+    shape) identically for a sequential and a concurrent drive, with no
+    dependence on rng draw order or PYTHONHASHSEED."""
+
+    def pick(self, scheduler, fn_name, args, candidates):
+        ordered = sorted(candidates)
+        return ordered[0] if fn_name == "w1" else ordered[-1]
+
+
+def _w1(cloudburst, slot, rnd):
+    """Stage 1 (cache A): write the run's private key, read it back."""
+    cloudburst.put(f"{slot}", rnd + 1)
+    return cloudburst.get(f"{slot}") or 0
+
+
+def _w2(cloudburst, upstream, slot, rnd):
+    """Stage 2 (cache B): re-read the key the run just wrote.  The write
+    is still unflushed in cache A, so this read serves the KVS's stale
+    version — the §5.3 repeated-read anomaly, *within one run*."""
+    b = cloudburst.get(f"{slot}") or 0
+    return (upstream or 0) + b
+
+
+def _build(seed):
+    c = Cluster(n_vms=2, executors_per_vm=1, seed=seed,
+                scheduler_policy=StickyPolicy(), tick_jitter=0.0)
+    c.register(_w1, "w1")
+    c.register(_w2, "w2")
+    c.register_dag("chain", ["w1", "w2"], edges=[("w1", "w2")])
+    c.register_dag("single", ["w1"])
+    return c
+
+
+def _workload():
+    """(dag, args_by_fn, mode) triples — mixed lww/causal; each run owns
+    a private key so sequential/concurrent equality is exact."""
+    out = []
+    for i in range(10):
+        mode = "dsc" if i % 3 == 2 else "lww"
+        slot = f"{'c' if mode == 'dsc' else 'l'}priv-{i}"
+        if i % 2:
+            out.append(("chain", {"w1": (slot, i), "w2": (slot, i)}, mode))
+        else:
+            out.append(("single", {"w1": (slot, i)}, mode))
+    return out
+
+
+def _seed_keys(c):
+    # seed only the lww runs' keys: the dsc runs' causal writes must not
+    # merge into plain LWW registers
+    for dag, args, mode in _workload():
+        if mode == "lww":
+            c.put(args["w1"][0], 100)
+
+
+def test_concurrent_equals_sequential_values_and_anomalies():
+    # sequential: one call_dag at a time
+    seq = _build(seed=42)
+    _seed_keys(seq)
+    seq_tracker = AnomalyTracker()
+    seq.tracker = seq_tracker
+    with seq_tracker:
+        seq_vals = [
+            seq.call_dag(dag, args, mode=mode).value
+            for dag, args, mode in _workload()
+        ]
+    # concurrent: submit ALL, then drive the engine — waves interleave
+    con = _build(seed=42)
+    _seed_keys(con)
+    con_tracker = AnomalyTracker()
+    con.tracker = con_tracker
+    with con_tracker:
+        futs = [con.call_dag_async(dag, args, mode=mode)
+                for dag, args, mode in _workload()]
+        assert con.in_flight == len(futs)
+        con_vals = [f.get(timeout=60.0) for f in futs]
+    assert con_vals == seq_vals
+    assert con_tracker.counts() == seq_tracker.counts()
+    # non-trivial: every lww chain run hit the cross-cache repeated-read
+    # anomaly (write on cache A, stale re-read through cache B)
+    n_lww_chains = sum(1 for dag, _a, mode in _workload()
+                       if dag == "chain" and mode == "lww")
+    assert con_tracker.counts()["dsrr"] == n_lww_chains > 0
+
+
+def test_concurrent_equals_sequential_post_flush_state():
+    """Runs racing on SHARED keys: one cache flush tick carries MANY
+    concurrent DAGs' write-backs in one batch, and ACI lattice merges
+    make the post-flush KVS state equal to the sequential drive's."""
+
+    def acc(cloudburst, slot, rnd):
+        cur = cloudburst.get(f"shared-{slot}") or 0
+        cloudburst.put(f"shared-{slot}", cur + rnd + 1)
+        return cur
+
+    seq = Cluster(n_vms=2, executors_per_vm=1, seed=7,
+                  scheduler_policy=StickyPolicy())
+    con = Cluster(n_vms=2, executors_per_vm=1, seed=7,
+                  scheduler_policy=StickyPolicy())
+    for c in (seq, con):
+        c.register(acc, "w1")
+        c.register_dag("d", ["w1"])
+    for i in range(12):
+        seq.call_dag("d", {"w1": (i % 3, i)})
+    seq.tick()
+    futs = [con.call_dag_async("d", {"w1": (i % 3, i)}) for i in range(12)]
+    while con.in_flight:
+        con.step()
+    con.tick()
+    for f in futs:
+        assert f.done()
+    for slot in range(3):
+        assert con.get(f"shared-{slot}") == seq.get(f"shared-{slot}")
+
+
+def test_midflight_failure_restarts_only_its_runs():
+    """§4.5 per-run restart isolation: two runs hit a mid-invoke
+    executor death; they retry (whole-DAG re-execution) while the other
+    in-flight runs complete untouched on attempt 0."""
+    c = Cluster(n_vms=3, executors_per_vm=1, seed=5, dag_timeout=0.01)
+    crashes = {"left": 2}
+
+    def flaky(x):
+        if crashes["left"] > 0:
+            crashes["left"] -= 1
+            raise ExecutorFailure("injected mid-invoke VM death")
+        return x + 1
+
+    c.register(flaky, "f")
+    c.register(lambda x: x * 2, "g")
+    c.register_dag("two", ["f", "g"], edges=[("f", "g")])
+    futs = [c.call_dag_async("two", {"f": (i,)}) for i in range(6)]
+    vals = [f.get(timeout=60.0) for f in futs]
+    assert vals == [(i + 1) * 2 for i in range(6)]
+    retried = [f.run.attempt for f in futs]
+    assert sum(1 for a in retried if a >= 1) == 2  # exactly the crashed runs
+    assert sum(1 for a in retried if a == 0) == 4  # the rest untouched
+
+
+def test_user_exception_fails_only_its_run():
+    """A plain user-code exception (not an infra failure) must fail
+    exactly its own run — surfaced as-is through the future — while the
+    other in-flight runs keep making progress and the engine drains."""
+    c = Cluster(n_vms=2, executors_per_vm=2, seed=9)
+
+    def picky(x):
+        if x == 3:
+            raise ValueError("bad input 3")
+        return x + 1
+
+    c.register(picky, "picky")
+    c.register_dag("d", ["picky"])
+    futs = [c.call_dag_async("d", {"picky": (i,)}) for i in range(6)]
+    for i, f in enumerate(futs):
+        if i == 3:
+            with pytest.raises(ValueError, match="bad input 3"):
+                f.get(timeout=30.0)
+        else:
+            assert f.get(timeout=30.0) == i + 1
+    assert c.in_flight == 0  # no zombie runs left behind
+
+
+def test_unregistered_function_fails_fast_without_poisoning_engine():
+    """call_async of an unknown function raises at SUBMIT time (as the
+    pre-engine path did) — it must never detonate inside step() after
+    other runs' ready triggers were already drained."""
+    c = Cluster(n_vms=2, executors_per_vm=2, seed=11)
+    c.register(lambda x: x + 1, "real")
+    c.register_dag("d", ["real"])
+    healthy = c.call_dag_async("d", {"real": (1,)})
+    with pytest.raises(KeyError, match="not registered"):
+        c.call_async("typo_fn", 1)
+    with pytest.raises(KeyError):
+        c.call_dag_async("typo_dag")
+    assert healthy.get(timeout=30.0) == 2
+
+
+def test_store_in_kvs_key_reuse_returns_new_runs_value():
+    """A bound future must wait for ITS run even when the user-supplied
+    response key already holds an earlier invocation's value."""
+    c = Cluster(n_vms=2, executors_per_vm=2, seed=12)
+    c.register(lambda x: x * 10, "f")
+    c.register_dag("d", ["f"])
+    first = c.call_dag_async("d", {"f": (1,)}, store_in_kvs="slot")
+    assert first.get(timeout=30.0) == 10
+    second = c.call_dag_async("d", {"f": (2,)}, store_in_kvs="slot")
+    assert second.get(timeout=30.0) == 20  # not the stale 10
+    assert c.get("slot") == 20
+
+
+def test_sync_call_dag_reraises_user_exception():
+    """Pre-engine semantics: user errors propagate as-is (no §4.5
+    retries — they are deterministic)."""
+    c = Cluster(n_vms=2, executors_per_vm=2, seed=10)
+
+    def boom(x):
+        raise KeyError("user bug")
+
+    c.register(boom, "boom")
+    c.register_dag("d", ["boom"])
+    with pytest.raises(KeyError, match="user bug"):
+        c.call_dag("d", {"boom": (1,)})
+    assert c.in_flight == 0
+
+
+def test_midflight_failure_does_not_disturb_completed_runs():
+    c = Cluster(n_vms=3, executors_per_vm=1, seed=6, dag_timeout=0.01)
+    c.register(lambda x: x + 1, "f")
+    c.register_dag("d", ["f"])
+    done = c.call_dag_async("d", {"f": (1,)})
+    assert done.get(timeout=60.0) == 2
+    # now fail a VM and run more load: the completed future stays valid
+    # and new runs schedule around the dead executor
+    c.fail_vm("vm-0")
+    later = [c.call_dag_async("d", {"f": (i,)}) for i in range(4)]
+    assert [f.get(timeout=60.0) for f in later] == [i + 1 for i in range(4)]
+    assert done.get(timeout=1.0) == 2
+
+
+def test_speculation_with_concurrent_runs():
+    c = Cluster(n_vms=3, executors_per_vm=1, seed=8,
+                straggler_speculation=True)
+    c.register(lambda x: x + 1, "f")
+    c.register_dag("d", ["f"])
+    for i in range(20):  # warm latency stats
+        c.call_dag("d", {"f": (i,)})
+    victim = c.scheduler.function_locations["f"][0]
+    c.executors[victim].slow_factor = 1000.0
+    futs = [c.call_dag_async("d", {"f": (i,)}) for i in range(20)]
+    vals = [f.get(timeout=120.0) for f in futs]
+    assert vals == [i + 1 for i in range(20)]
+    assert sum(f.run.speculated for f in futs) > 0
