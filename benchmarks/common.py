@@ -50,12 +50,30 @@ class Timed:
         return False
 
 
+def _block(out) -> None:
+    """Wait for device work hiding behind async dispatch before the
+    timer stops.  Anything with a ``block_until_ready`` (jax arrays,
+    PlaneBatch) blocks directly; other containers go through
+    ``jax.block_until_ready`` (host values pass through untouched), so
+    a timed fn returning device results measures compute, not dispatch."""
+    if out is None:
+        return
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+        return
+    try:
+        import jax
+    except ImportError:
+        return
+    jax.block_until_ready(out)
+
+
 def _timeit(fn, iters: int) -> List[float]:
-    fn()  # warm (jit compile, slab growth, allocator)
+    _block(fn())  # warm (jit compile, slab growth, allocator)
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        fn()
+        _block(fn())
         ts.append(time.perf_counter() - t0)
     return ts
 

@@ -33,10 +33,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lattices import LWWLattice, VectorClock
-from repro.core.arena import vc_classify_batch
+from repro.core.arena import (
+    MergeEngine,
+    NodeRegistry,
+    oracle_lww_fold,
+    vc_classify_batch,
+)
 from repro.kernels import ops
 
-from .common import emit, median_time as _median_time
+from .common import best_time, emit, median_time as _median_time
+
+# device-resident slab repair vs the host-numpy plane path (per-call
+# plan + host candidate staging, the pre-device-tier repair plane)
+DEVICE_ACCEPTANCE_SPEEDUP = 3.0
 
 
 def _pack(rng, R: int, K: int, D: int):
@@ -118,6 +127,79 @@ def bench_case(K: int, D: int, R: int, iters: int = 10, seed: int = 0) -> Dict[s
     }
 
 
+def bench_device_case(K: int, D: int, R: int, iters: int = 5,
+                      seed: int = 0) -> Dict[str, float]:
+    """R-replica repair over device-resident slabs vs the host-numpy
+    plane path — the arena-level twin of ``read_plane``'s device cell.
+
+    R replica arenas hold identical diverged data on both tiers.  The
+    host baseline is the repair plane as shipped before the device tier:
+    ``reduce_replica_planes`` on host-numpy arenas, which replans and
+    restages the (R, K, D) candidate pile on the host every call.  The
+    device cell re-executes a cached plan as ONE fused on-device
+    gather-reduce launch; slab planes and winners never leave the
+    device (zero host syncs, counter-asserted), and winners are
+    cross-checked bit-identical against the per-key Python fold.
+    """
+    rng = np.random.default_rng(seed)
+    node_pool = [f"anna-{i}" for i in range(8)]
+    keys = [f"k{i}" for i in range(K)]
+    per_replica = [
+        [(key, LWWLattice(
+            (int(rng.integers(0, 1000)),
+             node_pool[int(rng.integers(0, len(node_pool)))]),
+            rng.normal(size=(D,)).astype(np.float32))) for key in keys]
+        for _ in range(R)
+    ]
+
+    def build(device: bool):
+        registry = NodeRegistry()
+        reader = MergeEngine(registry, device=device)
+        engines = []
+        for items in per_replica:
+            eng = MergeEngine(registry, device=device)
+            eng.merge_batch(list(items))
+            engines.append(eng)
+        return reader, engines
+
+    host_reader, host_engines = build(False)
+    dev_reader, dev_engines = build(True)
+    keyed_host = [(key, host_engines) for key in keys]
+
+    def host_plane():
+        return host_reader.reduce_replica_planes(keyed_host)[0]
+
+    plan = dev_reader.plan_replica_reduce(
+        [(key, dev_engines) for key in keys])
+
+    def device_plane():
+        return dev_reader.execute_reduce_plan(plan)[0]
+
+    device_plane().block_until_ready()  # warm: compile the fused launch
+    xfer0 = tuple((e.h2d_bytes, e.d2h_bytes, e.device_syncs)
+                  for e in [dev_reader] + dev_engines)
+    t_host = best_time(host_plane, iters)
+    t_dev = best_time(device_plane, iters * 3)
+    assert tuple((e.h2d_bytes, e.d2h_bytes, e.device_syncs)
+                 for e in [dev_reader] + dev_engines) == xfer0, (
+        "warmed device repair must perform zero host syncs")
+
+    # device winners == per-key python folds in replica order,
+    # bit-identical (the same oracle the host plane is held to)
+    got = {k: v for k, v in device_plane().iter_entries()}
+    for i, key in enumerate(keys):
+        want = oracle_lww_fold([per_replica[r][i][1] for r in range(R)])
+        assert got[key].timestamp == want.timestamp, (key, got[key].timestamp)
+        np.testing.assert_array_equal(np.asarray(got[key].value), want.value)
+
+    return {
+        "device_keys_per_s": K / t_dev,
+        "host_plane_keys_per_s": K / t_host,
+        "speedup": t_host / max(t_dev, 1e-12),
+        "t_device_us": t_dev * 1e6,
+    }
+
+
 def bench_vc(K: int, N: int = 16, iters: int = 10, seed: int = 1) -> Dict[str, float]:
     """Batched VC classify (packed steady state) vs per-pair Python.
 
@@ -183,6 +265,28 @@ def main(smoke: bool = False) -> None:
                 f";speedup={r['speedup']:.1f}x"
                 f";speedup_vs_python={r['speedup_vs_python']:.1f}x",
             )
+    # device-resident slab tier cells: cached-plan fused repair vs the
+    # host-numpy plane path, identical data, oracle-checked
+    dev_cases = ([(128, 64, 2)] if smoke
+                 else [(4096, 512, 2), (4096, 512, 4)])
+    dev_gated = []
+    for Kd, Dd, Rd in dev_cases:
+        r = bench_device_case(Kd, Dd, Rd, iters=iters)
+        emit(
+            f"merge_plane/device K={Kd} D={Dd} R={Rd}",
+            r["t_device_us"],
+            f"device_keys_per_s={r['device_keys_per_s']:.0f}"
+            f";host_plane_keys_per_s={r['host_plane_keys_per_s']:.0f}"
+            f";speedup={r['speedup']:.1f}x",
+        )
+        if Kd >= 4096 and Dd == 512:
+            dev_gated.append(r["speedup"])
+    if dev_gated:  # device tier acceptance: >= 3x over the host-numpy
+        # plane path at K=4096 D=512, best of R in {2, 4}
+        best = max(dev_gated)
+        assert best >= DEVICE_ACCEPTANCE_SPEEDUP, (
+            f"device repair speedup {best:.1f}x below the "
+            f"{DEVICE_ACCEPTANCE_SPEEDUP:.0f}x bar at K=4096 D=512")
     v = bench_vc(K, iters=iters)
     emit(
         f"merge_plane/vc_classify K={K}",

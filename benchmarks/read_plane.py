@@ -39,22 +39,29 @@ from repro.core.lattices import LWWLattice
 from .common import best_time, emit
 
 ACCEPTANCE_SPEEDUP = 10.0
+# device-resident slab tier vs the host-numpy plane path (per-call plan
+# + host candidate staging, the pre-device-tier read plane)
+DEVICE_ACCEPTANCE_SPEEDUP = 3.0
 BENCH_RECORD = Path(__file__).resolve().parent.parent / "BENCH_read_plane.json"
 
 
-def _build_kvs(K: int, D: int, R: int, seed: int):
+def _build_kvs(K: int, D: int, R: int, seed: int, device: bool = False):
     """An R-way replicated tier whose replicas have DIVERGED: every owner
     stores its own (clock, node, payload) row per key, so a read-repair
-    read has real R-candidate reductions to do."""
-    kvs = AnnaKVS(num_nodes=R, replication=R)
+    read has real R-candidate reductions to do.  The same seed draws the
+    same data regardless of ``device``, so host and device tiers can be
+    oracle-compared cell for cell."""
+    kvs = AnnaKVS(num_nodes=R, replication=R, device_tier=device)
     rng = np.random.default_rng(seed)
     keys = [f"k{i}" for i in range(K)]
+    per_owner: Dict[str, List] = {}
     for key in keys:
         for owner in kvs._owners(key):
-            node = kvs.nodes[owner]
-            node.engine.merge_one(key, LWWLattice(
-                (int(rng.integers(0, 1000)), node.node_id),
-                rng.normal(size=(D,)).astype(np.float32)))
+            per_owner.setdefault(owner, []).append((key, LWWLattice(
+                (int(rng.integers(0, 1000)), owner),
+                rng.normal(size=(D,)).astype(np.float32))))
+    for owner, items in per_owner.items():
+        kvs.nodes[owner].engine.merge_batch(items)
     return kvs, keys
 
 
@@ -125,6 +132,62 @@ def bench_case(K: int, D: int, R: int, iters: int = 5, seed: int = 0,
     }
 
 
+def bench_device_case(K: int, D: int, R: int, iters: int = 5,
+                      seed: int = 0) -> Dict[str, float]:
+    """Device-resident slab tier vs the host-numpy plane path.
+
+    Two tiers hold IDENTICAL replica data (same seed).  The baseline is
+    the read plane as it ran before the device tier: plan + host
+    candidate staging rebuilt per call (``reduce_replica_planes`` on
+    host-numpy arenas).  The device cell is the warmed steady state the
+    tentpole buys: ``get_merged_many`` re-executes its cached plan as
+    one fused on-device gather-reduce per slab group, winners stay on
+    device, ZERO host syncs (counter-asserted).  Winners are
+    cross-checked bit-identical against the per-key Python fold over the
+    host twin's replicas.
+    """
+    kvs_host, keys = _build_kvs(K, D, R, seed)
+    kvs_dev, _ = _build_kvs(K, D, R, seed, device=True)
+    live = {nid: n.engine for nid, n in kvs_host.nodes.items() if n.alive}
+
+    def host_plane():
+        keyed = [(k, [live[o] for o in kvs_host._owners(k) if o in live])
+                 for k in keys]
+        return kvs_host.reader.reduce_replica_planes(keyed)[0]
+
+    def device_read():
+        return kvs_dev.get_merged_many(keys)
+
+    device_read().block_until_ready()  # warm: cache the plan, compile
+    xfer0 = kvs_dev.transfer_stats()
+    t_host = best_time(host_plane, iters)
+    t_dev = best_time(device_read, iters * 3)
+    assert kvs_dev.transfer_stats() == xfer0, (
+        "warmed device reads must perform zero host syncs",
+        kvs_dev.transfer_stats(), xfer0)
+
+    # device winners == per-key pure-Python merge folds, bit-identical
+    batch = device_read()
+    got = {k: v for k, v in batch.iter_entries()}
+    for key in keys:
+        replicas = []
+        for owner in kvs_host._owners(key):
+            node = kvs_host.nodes[owner]
+            if node.alive and key in node.store:
+                replicas.append(node.store[key])
+        want = oracle_lww_fold(replicas)
+        assert got[key].timestamp == want.timestamp, (key, got[key].timestamp)
+        np.testing.assert_array_equal(np.asarray(got[key].value), want.value)
+    assert kvs_dev.reader.plane_object_fallbacks == 0
+
+    return {
+        "device_keys_per_s": K / t_dev,
+        "host_plane_keys_per_s": K / t_host,
+        "speedup": t_host / max(t_dev, 1e-12),
+        "t_device_us": t_dev * 1e6,
+    }
+
+
 def _record_cells(cells: List[Dict[str, float]], smoke: bool) -> None:
     """Append this run's cells to BENCH_read_plane.json (one JSON object
     per run, newest last) — the machine-readable perf trajectory."""
@@ -160,6 +223,27 @@ def main(smoke: bool = False) -> None:
                       "speedup": round(r["speedup"], 2)})
         if K >= 1024 and D == 512:
             gated.append(r["speedup"])
+    # device-resident slab tier cells: warmed fused reads vs the
+    # host-numpy plane path, identical data, oracle-checked
+    dev_cases = ([(128, 64, 2)] if smoke
+                 else [(4096, 512, 2), (4096, 512, 4)])
+    dev_gated = []
+    for K, D, R in dev_cases:
+        r = bench_device_case(K, D, R, iters=iters)
+        emit(
+            f"read_plane/device K={K} D={D} R={R}",
+            r["t_device_us"],
+            f"device_keys_per_s={r['device_keys_per_s']:.0f}"
+            f";host_plane_keys_per_s={r['host_plane_keys_per_s']:.0f}"
+            f";speedup={r['speedup']:.1f}x",
+        )
+        cells.append({"K": K, "D": D, "R": R, "tier": "device",
+                      "device_keys_per_s": round(r["device_keys_per_s"], 1),
+                      "host_plane_keys_per_s":
+                          round(r["host_plane_keys_per_s"], 1),
+                      "speedup": round(r["speedup"], 2)})
+        if K >= 4096 and D == 512:
+            dev_gated.append(r["speedup"])
     _record_cells(cells, smoke)
     if gated:  # acceptance: >= 10x keys/s at K >= 1024, D = 512, best of
         # the qualifying R cells — shields the gate from one-off spikes
@@ -167,6 +251,12 @@ def main(smoke: bool = False) -> None:
         assert best >= ACCEPTANCE_SPEEDUP, (
             f"read plane speedup {best:.1f}x below the "
             f"{ACCEPTANCE_SPEEDUP:.0f}x acceptance bar at K>=1024 D=512")
+    if dev_gated:  # device tier acceptance: >= 3x over the host-numpy
+        # plane path at K=4096 D=512, best of R in {2, 4}
+        best = max(dev_gated)
+        assert best >= DEVICE_ACCEPTANCE_SPEEDUP, (
+            f"device tier speedup {best:.1f}x below the "
+            f"{DEVICE_ACCEPTANCE_SPEEDUP:.0f}x bar at K=4096 D=512")
 
 
 if __name__ == "__main__":

@@ -21,13 +21,117 @@ fast perf-regression gate used by scripts/verify.sh (the merge/read
 benches cross-check winners against the Python oracle and assert on
 mismatch; pipeline_throughput asserts its cross-request batching
 telemetry).
+
+``--check`` is the trajectory regression gate: it runs the read_plane
+and pipeline_throughput smoke benches fresh and compares their new
+records against the LAST matching entries already in
+``BENCH_read_plane.json`` / ``BENCH_pipeline_throughput.json``, failing
+on a >20% keys/s or req/s drop on the batched/plane paths (the
+jitter-prone per-key Python baselines are recorded but not gated).
+CI consumes the trajectory files through this gate instead of only
+appending to them.
 """
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
+
+# a fresh record must keep >= this fraction of the last recorded rate
+CHECK_KEEP = 0.8
+# gated rate fields: the optimized paths; per-key python baselines are
+# informational (they swing with host load and would flake the gate)
+CHECK_FIELDS = ("batched_keys_per_s", "device_keys_per_s",
+                "plane_keys_per_s", "host_plane_keys_per_s", "req_per_s")
+
+_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _load_runs(path: Path) -> list:
+    if not path.exists():
+        return []
+    try:
+        runs = json.loads(path.read_text())
+    except (ValueError, OSError):
+        return []
+    return runs if isinstance(runs, list) else []
+
+
+def _last_smoke(runs: list) -> dict:
+    for run in reversed(runs):
+        if isinstance(run, dict) and run.get("smoke"):
+            return run
+    return {}
+
+
+def _gate_rates(label: str, base: dict, fresh: dict) -> list:
+    """Compare every gated rate field present in both records."""
+    failures = []
+    for field in CHECK_FIELDS:
+        b, f = base.get(field), fresh.get(field)
+        if not b or f is None:
+            continue
+        if f < CHECK_KEEP * b:
+            failures.append(
+                f"{label}: {field} {f:.0f} < {CHECK_KEEP:.0%} of "
+                f"recorded {b:.0f}")
+    return failures
+
+
+def check() -> None:
+    """Run the recorded smoke benches fresh and fail on regression vs
+    the last entries in the trajectory files."""
+    from . import pipeline_throughput, read_plane
+
+    rp_path = _ROOT / "BENCH_read_plane.json"
+    pt_path = _ROOT / "BENCH_pipeline_throughput.json"
+    base_rp = _last_smoke(_load_runs(rp_path))
+    base_pt = _last_smoke(_load_runs(pt_path))
+
+    print("name,us_per_call,derived")
+    read_plane.main(smoke=True)
+    pipeline_throughput.main(smoke=True)
+
+    fresh_rp = _load_runs(rp_path)[-1]
+    fresh_pt = _load_runs(pt_path)[-1]
+    failures: list = []
+
+    base_cells = {
+        (c.get("K"), c.get("D"), c.get("R"), c.get("tier", "host")): c
+        for c in base_rp.get("cells", [])
+    }
+    for cell in fresh_rp.get("cells", []):
+        ident = (cell.get("K"), cell.get("D"), cell.get("R"),
+                 cell.get("tier", "host"))
+        base = base_cells.get(ident)
+        if base is None:
+            continue  # new cell shape: nothing recorded to gate against
+        failures += _gate_rates(
+            f"read_plane K={ident[0]} D={ident[1]} R={ident[2]} "
+            f"tier={ident[3]}", base, cell)
+
+    base_rows = {r.get("in_flight"): r for r in base_pt.get("rows", [])}
+    for row in fresh_pt.get("rows", []):
+        base = base_rows.get(row.get("in_flight"))
+        if base is None:
+            continue
+        failures += _gate_rates(
+            f"pipeline_throughput in_flight={row.get('in_flight')}",
+            base, row)
+
+    checked = bool(base_cells or base_rows)
+    if failures:
+        print("# PERF REGRESSION (>20% below recorded trajectory):",
+              file=sys.stderr)
+        for f in failures:
+            print(f"#   {f}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"# --check ok: no >20% regression vs recorded trajectory"
+          f" (baselines: {'present' if checked else 'none yet'})",
+          file=sys.stderr)
 
 
 def main(argv=None) -> None:
@@ -48,6 +152,9 @@ def main(argv=None) -> None:
     )
 
     args = sys.argv[1:] if argv is None else argv
+    if "--check" in args:
+        check()
+        return
     smoke = "--smoke" in args
     print("name,us_per_call,derived")
     if smoke:

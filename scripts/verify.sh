@@ -15,8 +15,22 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 echo "== tier-1 pytest =="
 python -m pytest -x -q
 
+echo "== tier-1 pytest (device tier, 4 host devices) =="
+# same suite with the device-resident slab tier on everywhere and the
+# CPU backend split into 4 devices, so every merge/gossip/read path also
+# exercises donated device slabs + the "kvs" mesh sharding
+JAX_PLATFORMS=cpu \
+XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+REPRO_DEVICE_TIER=1 \
+python -m pytest -x -q
+
 echo "== kernel micro-bench smoke =="
 python -m benchmarks.run --smoke
+
+echo "== perf regression gate (vs recorded trajectory) =="
+# re-runs the smoke benches and fails if keys/s or req/s fell more than
+# 20% below the last recorded BENCH_*.json entries
+python -m benchmarks.run --check
 
 echo "== examples/quickstart.py =="
 if ! python examples/quickstart.py > /dev/null; then

@@ -83,6 +83,7 @@ from __future__ import annotations
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import math
+import os
 import weakref
 
 try:  # MutableMapping moved in 3.10
@@ -190,6 +191,67 @@ def _contiguous_span(rows: np.ndarray) -> Optional[Tuple[int, int]]:
 
 
 # ---------------------------------------------------------------------------
+# Device-tier plumbing: mode knob, array dispatch, transfer telemetry
+# ---------------------------------------------------------------------------
+
+_DEVICE_TIER_ENV = "REPRO_DEVICE_TIER"
+_DEVICE_TIER_CACHE: Optional[bool] = None
+
+
+def device_tier_default() -> bool:
+    """Whether new arenas keep their slabs device-resident by default:
+    the ``REPRO_DEVICE_TIER`` env knob (1/true/on/yes), forced off when
+    jax is unavailable so ``core`` stays importable without it."""
+    global _DEVICE_TIER_CACHE
+    if _DEVICE_TIER_CACHE is None:
+        flag = os.environ.get(_DEVICE_TIER_ENV, "").strip().lower()
+        on = flag in ("1", "true", "on", "yes")
+        if on:
+            try:
+                from ..kernels import ops  # noqa: F401
+            except Exception:
+                on = False
+        _DEVICE_TIER_CACHE = on
+    return _DEVICE_TIER_CACHE
+
+
+def _is_device(arr: Any) -> bool:
+    """True for jax device arrays (never numpy) — duck-typed so this
+    module keeps importing without jax."""
+    return (not isinstance(arr, np.ndarray)
+            and type(arr).__module__.split(".")[0] in ("jaxlib", "jax"))
+
+
+def _concat(parts: Sequence[Any]):
+    """Concatenate plane chunks without forcing device chunks to host."""
+    if len(parts) == 1:
+        return parts[0]
+    if any(_is_device(p) for p in parts):
+        import jax.numpy as jnp
+
+        return jnp.concatenate(list(parts))
+    return np.concatenate(list(parts))
+
+
+class _XferStats:
+    """Host<->device boundary telemetry for one arena.
+
+    Counts *value-plane* bytes crossing in each direction plus discrete
+    device->host sync events; tiny row-index/scalar uploads are control
+    plane and uncounted.  The zero-host-sync acceptance asserts ride
+    these: steady-state device-tier gossip and warmed batched reads must
+    leave all three counters unchanged.
+    """
+
+    __slots__ = ("h2d_bytes", "d2h_bytes", "device_syncs")
+
+    def __init__(self) -> None:
+        self.h2d_bytes = 0
+        self.d2h_bytes = 0
+        self.device_syncs = 0
+
+
+# ---------------------------------------------------------------------------
 # Node registry: strings -> order-preserving int32 ranks
 # ---------------------------------------------------------------------------
 
@@ -289,6 +351,21 @@ class PlaneGroup:
                           self.vals[sel], self.clocks[sel],
                           self.node_idx[sel])
 
+    def is_device(self) -> bool:
+        return _is_device(self.vals)
+
+    def to_host(self) -> "PlaneGroup":
+        """Copy device planes to host numpy (the cross-node wire edge);
+        host groups pass through untouched."""
+        if not self.is_device():
+            return self
+        import jax
+
+        vals, clocks, node_idx = jax.device_get(
+            (self.vals, self.clocks, self.node_idx))
+        return PlaneGroup(self.shape, self.dtype, list(self.keys),
+                          vals, clocks, node_idx)
+
 
 class PlaneBatch:
     """The unit of arena-to-arena replication: packed plane groups plus a
@@ -331,11 +408,35 @@ class PlaneBatch:
         )
         return n + sum(v.byte_size() for _, v in self.sidecar)
 
+    def to_host(self, xfer: Optional[_XferStats] = None) -> "PlaneBatch":
+        """Copy any device-resident groups to host numpy — the explicit
+        cross-node wire edge.  Counts one sync (plus the plane bytes)
+        per device group against ``xfer`` when given."""
+        out = PlaneBatch(self.node_ids)
+        for group, pg in self.groups.items():
+            host = pg.to_host()
+            if xfer is not None and host is not pg:
+                xfer.device_syncs += 1
+                xfer.d2h_bytes += (host.vals.nbytes + host.clocks.nbytes
+                                   + host.node_idx.nbytes)
+            out.groups[group] = host
+        out.sidecar = list(self.sidecar)
+        return out
+
+    def block_until_ready(self) -> "PlaneBatch":
+        """Wait for any device-resident planes (benchmark timing edge)."""
+        for pg in self.groups.values():
+            if pg.is_device():
+                pg.vals.block_until_ready()
+        return self
+
     def iter_entries(self):
         """Materialize (key, Lattice) pairs — for object-consuming
         callers only (tests, the causal dep path); packed consumers
-        ingest the planes directly."""
+        ingest the planes directly.  Device groups convert once (one
+        bulk transfer), not per row."""
         for g in self.groups.values():
+            g = g.to_host()
             for i, key in enumerate(g.keys):
                 ts = (int(g.clocks[i, 0]),
                       self.node_ids[int(g.node_idx[i, 0])])
@@ -397,9 +498,9 @@ class _GroupAccum:
             keys = [k for c in self.chunks for k in c[0]]
             self.chunks = [(
                 keys,
-                np.concatenate([c[1] for c in self.chunks]),
-                np.concatenate([c[2] for c in self.chunks]),
-                np.concatenate([c[3] for c in self.chunks]),
+                _concat([c[1] for c in self.chunks]),
+                _concat([c[2] for c in self.chunks]),
+                _concat([c[3] for c in self.chunks]),
             )]
         return self.chunks[0]
 
@@ -477,8 +578,14 @@ class PlaneBuffer:
             if not len(pg):
                 continue
             acc = self._accum(group, pg.shape, pg.dtype)
-            acc.add_chunk(list(pg.keys), pg.vals, pg.clocks,
-                          remap[pg.node_idx[:, 0]].reshape(-1, 1))
+            if _is_device(pg.node_idx):  # remap on device: no implicit sync
+                import jax.numpy as jnp
+
+                nodes = jnp.take(
+                    jnp.asarray(remap), pg.node_idx[:, 0]).reshape(-1, 1)
+            else:
+                nodes = remap[pg.node_idx[:, 0]].reshape(-1, 1)
+            acc.add_chunk(list(pg.keys), pg.vals, pg.clocks, nodes)
         self._sidecar.extend(batch.sidecar)
 
     def purge(self, key: str) -> None:
@@ -581,13 +688,183 @@ class _Slab:
         self.row_keys.pop()
 
 
+class _DeviceSlab:
+    """Device-resident twin of :class:`_Slab`.
+
+    The (cap, D) value plane and (cap, 1) clock/node planes are jax
+    arrays — row-sharded over the "kvs" mesh when the capacity divides
+    (``ops.slab_place``) — and every update goes through the donated
+    fused jits in ``kernels.ops``, so the buffers mutate in place and
+    steady-state merge traffic never stages on the host.  Key -> row
+    bookkeeping (dicts) stays host-side: row *indices* are control
+    plane; only payloads live on the device.
+
+    The top row (``cap - 1``) is a scratch row, never key-mapped:
+    padded scatter lanes target it with identical bytes, which keeps
+    duplicate-index scatters deterministic (XLA leaves the winning
+    duplicate unspecified).  Capacities start at the K bucket and double
+    (growth re-places the planes), so the scratch row moves but every
+    key-mapped row is fully written before it is ever read.
+    """
+
+    __slots__ = ("shape", "dtype", "dim", "vals", "clocks", "nodes", "rows",
+                 "row_keys", "xfer")
+
+    def __init__(self, shape: Tuple[int, ...], dtype: np.dtype,
+                 xfer: _XferStats):
+        from ..kernels import ops
+
+        self.shape = shape
+        self.dtype = dtype
+        self.dim = int(np.prod(shape)) if shape else 1
+        cap = _k_bucket(_Slab._INITIAL_CAP)
+        self.vals = ops.slab_zeros(cap, self.dim, dtype)
+        self.clocks = ops.slab_zeros(cap, 1, np.int32)
+        self.nodes = ops.slab_zeros(cap, 1, np.int32)
+        self.rows: Dict[str, int] = {}
+        self.row_keys: List[str] = []
+        self.xfer = xfer
+
+    @property
+    def cap(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def scratch(self) -> int:
+        return self.cap - 1
+
+    def _alloc(self, key: str) -> int:
+        row = self.rows.get(key)
+        if row is not None:
+            return row
+        row = len(self.rows)
+        if row >= self.cap - 1:  # keep the top row free as scratch
+            from ..kernels import ops
+
+            self.vals, self.clocks, self.nodes = ops.slab_grow(
+                self.vals, self.clocks, self.nodes, self.cap * 2)
+        self.rows[key] = row
+        self.row_keys.append(key)
+        return row
+
+    def set_row(self, key: str, clock: int, rank: int,
+                flat: np.ndarray) -> None:
+        from ..kernels import ops
+
+        row = self._alloc(key)
+        if not _is_device(flat):
+            self.xfer.h2d_bytes += flat.nbytes
+        self.vals, self.clocks, self.nodes = ops.slab_set_row(
+            self.vals, self.clocks, self.nodes, row, clock, rank, flat)
+
+    def drop(self, key: str) -> None:
+        """Remove a key, keeping rows dense (swap the last row in).
+
+        The vacated last row keeps its stale bytes on device — it is
+        unmapped, and any re-allocation fully overwrites it before any
+        read, so a deleted key can never resurrect from the live
+        donated buffers.
+        """
+        from ..kernels import ops
+
+        row = self.rows.pop(key)
+        last = len(self.rows)
+        if row != last:
+            last_key = self.row_keys[last]
+            self.vals, self.clocks, self.nodes = ops.slab_move_row(
+                self.vals, self.clocks, self.nodes, last, row)
+            self.rows[last_key] = row
+            self.row_keys[row] = last_key
+        self.row_keys.pop()
+
+    # -- batched write-backs (the merge-engine entry points) ---------------
+    def _pad_np(self, rows: np.ndarray, clocks, ranks, vals):
+        """Pad host-side inputs to the K bucket: pad lanes scatter zeros
+        into the scratch row (identical bytes -> deterministic), and the
+        bucketed shapes keep the jit cache small."""
+        kk = len(rows)
+        Kp = _k_bucket(kk)
+        rows_in = np.full(Kp, self.scratch, np.int32)
+        rows_in[:kk] = rows
+        in_c = np.zeros((Kp, 1), np.int32)
+        in_c[:kk] = clocks
+        in_n = np.zeros((Kp, 1), np.int32)
+        in_n[:kk] = ranks
+        in_v = np.zeros((Kp, self.dim), self.dtype)
+        in_v[:kk] = vals
+        self.xfer.h2d_bytes += in_v.nbytes + in_c.nbytes + in_n.nbytes
+        return rows_in, in_c, in_n, in_v
+
+    def write_rows(self, rows: np.ndarray, clocks, ranks, vals) -> None:
+        """Multi-row overwrite scatter (bulk_write / scatter_existing)."""
+        from ..kernels import ops
+
+        if _is_device(vals):
+            rows_in, in_c, in_n, in_v = (
+                np.asarray(rows, np.int32), clocks, ranks, vals)
+        else:
+            rows_in, in_c, in_n, in_v = self._pad_np(rows, clocks, ranks, vals)
+        self.vals, self.clocks, self.nodes = ops.slab_write_rows(
+            self.vals, self.clocks, self.nodes, rows_in, in_c, in_n, in_v)
+
+    def ingest_rows(self, rows: np.ndarray, has: np.ndarray,
+                    clocks, ranks, vals) -> None:
+        """Fused pairwise ingest: every lane's target row exists (callers
+        allocate first); ``has`` marks lanes with a stored value."""
+        from ..kernels import ops
+
+        if _is_device(vals):
+            rows_in = np.asarray(rows, np.int32)
+            has_in = np.asarray(has, bool).reshape(-1, 1)
+            in_c, in_n, in_v = clocks, ranks, vals
+        else:
+            kk = len(rows)
+            rows_in, in_c, in_n, in_v = self._pad_np(rows, clocks, ranks, vals)
+            has_in = np.zeros((len(rows_in), 1), bool)
+            has_in[:kk, 0] = has
+        self.vals, self.clocks, self.nodes = ops.slab_ingest_rows(
+            self.vals, self.clocks, self.nodes, rows_in, has_in,
+            in_c, in_n, in_v)
+
+    def ingest_multi(self, urows: np.ndarray, idx: np.ndarray,
+                     stored_take: Sequence[int], clocks, ranks,
+                     vals) -> None:
+        """Fused R-candidate ingest for duplicate-key batches: ``idx``
+        (R, U) indexes [incoming; gathered stored] per unique key."""
+        from ..kernels import ops
+
+        R, U = idx.shape
+        Rp, Up = _bucket(R, 2), _k_bucket(U)
+        urows_in = np.full(Up, self.scratch, np.int32)
+        urows_in[:U] = urows
+        idx_in = np.empty((Rp, Up), np.int32)
+        idx_in[:R, :U] = idx
+        idx_in[R:, :U] = idx[0]       # repeat a candidate: idempotent
+        idx_in[:, U:] = idx[0, 0]     # pad columns all write one winner
+        if not _is_device(vals):
+            self.xfer.h2d_bytes += vals.nbytes + clocks.nbytes + ranks.nbytes
+        self.vals, self.clocks, self.nodes = ops.slab_ingest_multi(
+            self.vals, self.clocks, self.nodes, urows_in, idx_in,
+            np.asarray(stored_take, np.int32), clocks, ranks, vals)
+
+
 class LatticeArena:
     """Columnar tensor-LWW storage grouped into shape/dtype slabs."""
 
-    def __init__(self, registry: NodeRegistry):
+    def __init__(self, registry: NodeRegistry,
+                 device: Optional[bool] = None):
         self.registry = registry
+        # device mode: slabs live as donated jax arrays; host numpy slabs
+        # otherwise (the default, and the fallback sans jax)
+        self.device = device_tier_default() if device is None else bool(device)
+        self._xfer = _XferStats()
         self._slabs: Dict[_GroupKey, _Slab] = {}
         self._key_group: Dict[str, _GroupKey] = {}
+        # bumps whenever the key -> (slab, row) layout changes (new key,
+        # delete, cross-group move) — read-plan caches key off it; pure
+        # row-content updates (gossip, puts over existing keys) do NOT
+        # bump, so steady-state traffic never invalidates a plan
+        self.layout_version = 0
         # memoized LWWLattice per key so repeated reads cost a dict hit,
         # not an O(D) payload copy; invalidated on any row write
         self._materialized: Dict[str, LWWLattice] = {}
@@ -596,6 +873,19 @@ class LatticeArena:
         self.materializations = 0
         registry.subscribe(self)
 
+    # -- transfer telemetry (device tier) ---------------------------------
+    @property
+    def h2d_bytes(self) -> int:
+        return self._xfer.h2d_bytes
+
+    @property
+    def d2h_bytes(self) -> int:
+        return self._xfer.d2h_bytes
+
+    @property
+    def device_syncs(self) -> int:
+        return self._xfer.device_syncs
+
     # -- plumbing -------------------------------------------------------------
     @staticmethod
     def group_of(arr: np.ndarray) -> _GroupKey:
@@ -603,7 +893,12 @@ class LatticeArena:
 
     def _remap_ranks(self, remap: np.ndarray) -> None:
         for slab in self._slabs.values():
-            slab.nodes = remap[slab.nodes].astype(np.int32)
+            if isinstance(slab, _DeviceSlab):
+                from ..kernels import ops
+
+                slab.nodes = ops.slab_remap_nodes(slab.nodes, remap)
+            else:
+                slab.nodes = remap[slab.nodes].astype(np.int32)
         self._materialized.clear()  # conservative: rank planes just moved
 
     def slab_for(self, group: _GroupKey, arr: np.ndarray) -> _Slab:
@@ -613,7 +908,8 @@ class LatticeArena:
                       dtype: np.dtype) -> _Slab:
         slab = self._slabs.get(group)
         if slab is None:
-            slab = _Slab(shape, dtype)
+            slab = (_DeviceSlab(shape, dtype, self._xfer) if self.device
+                    else _Slab(shape, dtype))
             self._slabs[group] = slab
         return slab
 
@@ -638,6 +934,8 @@ class LatticeArena:
         prev = self._key_group.get(key)
         if prev is not None and prev != group:
             self._slabs[prev].drop(key)
+        if prev != group:
+            self.layout_version += 1
         clock, node_id = lattice.timestamp
         self.registry.ensure((node_id,))
         slab = self.slab_for(group, arr)
@@ -650,6 +948,8 @@ class LatticeArena:
         prev = self._key_group.get(key)
         if prev is not None and prev != group:
             self._slabs[prev].drop(key)
+        if prev != group:
+            self.layout_version += 1
         self._slabs[group].set_row(key, clock, rank, flat)
         self._key_group[key] = group
         self._materialized.pop(key, None)
@@ -666,25 +966,49 @@ class LatticeArena:
             return None
         slab = self._slabs[group]
         row = slab.rows[key]
-        value = slab.vals[row].copy().reshape(slab.shape)
-        ts = (int(slab.clocks[row, 0]),
-              self.registry.node_id(int(slab.nodes[row, 0])))
+        if isinstance(slab, _DeviceSlab):
+            clock, rank, flat = self._sync_row(slab, row)
+            value = flat.reshape(slab.shape)
+            ts = (clock, self.registry.node_id(rank))
+        else:
+            value = slab.vals[row].copy().reshape(slab.shape)
+            ts = (int(slab.clocks[row, 0]),
+                  self.registry.node_id(int(slab.nodes[row, 0])))
         lat = LWWLattice(ts, value)
         self._materialized[key] = lat
         self.materializations += 1
         return lat
+
+    @staticmethod
+    def _sync_row(slab: "_DeviceSlab",
+                  row: int) -> Tuple[int, int, np.ndarray]:
+        """Pull one device row to host: exactly ONE transfer (the triple
+        device_gets together), counted against the slab's telemetry."""
+        import jax
+
+        from ..kernels import ops
+
+        flat, clock, rank = jax.device_get(
+            ops.slab_row(slab.vals, slab.clocks, slab.nodes, row))
+        slab.xfer.device_syncs += 1
+        slab.xfer.d2h_bytes += flat.nbytes + 8
+        return int(clock), int(rank), np.asarray(flat)
 
     def clear_memo(self) -> None:
         """Drop memoized registers (benchmarks model cold object reads)."""
         self._materialized.clear()
 
     def row_of(self, key: str) -> Optional[Tuple[int, int, np.ndarray]]:
-        """(clock, rank, flat-view) of the stored row — no copy."""
+        """(clock, rank, flat-view) of the stored row — no copy on the
+        host tier; a counted one-transfer sync on the device tier (hot
+        device paths resolve rows in bulk instead of calling this)."""
         group = self._key_group.get(key)
         if group is None:
             return None
         slab = self._slabs[group]
         row = slab.rows[key]
+        if isinstance(slab, _DeviceSlab):
+            return self._sync_row(slab, row)
         return (int(slab.clocks[row, 0]), int(slab.nodes[row, 0]),
                 slab.vals[row])
 
@@ -694,6 +1018,7 @@ class LatticeArena:
             return False
         self._slabs[group].drop(key)
         self._materialized.pop(key, None)
+        self.layout_version += 1
         return True
 
     # -- the plane wire format -------------------------------------------------
@@ -714,6 +1039,19 @@ class LatticeArena:
                 by_group.setdefault(group, []).append(key)
         for group, ks in by_group.items():
             slab = self._slabs[group]
+            if isinstance(slab, _DeviceSlab):
+                from ..kernels import ops
+
+                # one fused gather launch; the planes STAY device-side
+                # (in-process gossip never syncs — the receiving arena
+                # ingests them directly; real wire transfer goes through
+                # PlaneBatch.to_host, the counted edge)
+                rows = np.asarray([slab.rows[k] for k in ks], np.int32)
+                vals, clocks, nodes = ops.slab_gather(
+                    slab.vals, slab.clocks, slab.nodes, rows)
+                batch.groups[group] = PlaneGroup(
+                    slab.shape, slab.dtype, ks, vals, clocks, nodes)
+                continue
             rows = np.asarray([slab.rows[k] for k in ks], np.int64)
             span = _contiguous_span(rows)
             if span is not None:  # steady-state layout: slice copies
@@ -735,13 +1073,21 @@ class LatticeArena:
         only; the payload/clock/rank planes land as three scatters."""
         slab = self._slabs[group]
         rows = np.empty(len(keys), np.int64)
+        bumped = False
         for i, key in enumerate(keys):
             prev = self._key_group.get(key)
             if prev is not None and prev != group:
                 self._slabs[prev].drop(key)
+            if prev != group:
+                bumped = True
             rows[i] = slab._alloc(key)
             self._key_group[key] = group
             self._materialized.pop(key, None)
+        if bumped:
+            self.layout_version += 1
+        if isinstance(slab, _DeviceSlab):
+            slab.write_rows(rows, clocks, ranks, vals)
+            return
         slab.vals[rows] = vals
         slab.clocks[rows] = clocks
         slab.nodes[rows] = ranks
@@ -753,12 +1099,42 @@ class LatticeArena:
         this slab, so the update is three scatters and (only if a reader
         memoized something) memo invalidation."""
         slab = self._slabs[group]
-        slab.vals[rows] = vals
-        slab.clocks[rows] = clocks
-        slab.nodes[rows] = ranks
+        if isinstance(slab, _DeviceSlab):
+            slab.write_rows(rows, clocks, ranks, vals)
+        else:
+            slab.vals[rows] = vals
+            slab.clocks[rows] = clocks
+            slab.nodes[rows] = ranks
         if self._materialized:
             for key in keys:
                 self._materialized.pop(key, None)
+
+    def rows_for_ingest(self, group: _GroupKey,
+                        keys: Sequence[str]) -> Tuple[np.ndarray, np.ndarray]:
+        """Target rows for a device-tier ingest: every key gets a row
+        (unseen keys allocate), ``has`` marks the ones that already had
+        a stored value.  Host-side dict upkeep only — the payload merge
+        happens in one fused launch against these rows."""
+        slab = self._slabs[group]
+        kk = len(keys)
+        rows = np.empty(kk, np.int32)
+        has = np.zeros(kk, bool)
+        fresh = False
+        for i, key in enumerate(keys):
+            row = slab.rows.get(key)
+            if row is None:
+                row = slab._alloc(key)
+                self._key_group[key] = group
+                fresh = True
+            else:
+                has[i] = True
+            rows[i] = row
+        if fresh:
+            self.layout_version += 1
+        if self._materialized:
+            for key in keys:
+                self._materialized.pop(key, None)
+        return rows, has
 
 
 # ---------------------------------------------------------------------------
@@ -802,14 +1178,53 @@ class LatticeStore(MutableMapping):
         return key in self._engine.fallback or key in self._engine.arena
 
 
+class _ReduceGroupPlan:
+    """One slab group's share of a replica-reduce plan: candidate
+    (slab, rows, span) segments plus the prebuilt (Rp, K) index matrix.
+    Slab objects are held by reference — row contents are re-gathered at
+    execute, so a cached plan always reduces the newest planes."""
+
+    __slots__ = ("group", "keys", "segs", "idx", "R", "device",
+                 "idx_dev", "rows32")
+
+    def __init__(self, group: _GroupKey, keys: List[str],
+                 segs: list, idx: np.ndarray, R: int):
+        self.group = group
+        self.keys = keys
+        self.segs = segs
+        self.idx = idx
+        self.R = R
+        self.device = bool(segs) and all(
+            isinstance(s, _DeviceSlab) for s, _, _ in segs)
+        self.idx_dev: Optional[np.ndarray] = None
+        self.rows32: Optional[List[np.ndarray]] = None
+
+
+class _ReducePlan:
+    """Reusable structure half of ``reduce_replica_planes`` (see
+    ``MergeEngine.plan_replica_reduce``)."""
+
+    __slots__ = ("leftover", "groups")
+
+    def __init__(self, leftover: List[str],
+                 groups: List[_ReduceGroupPlan]):
+        self.leftover = leftover
+        self.groups = groups
+
+
 class MergeEngine:
     """Routes lattice merges: tensor-LWW traffic through the batched
     kernels, everything else through per-key ``Lattice.merge``."""
 
-    def __init__(self, registry: Optional[NodeRegistry] = None):
+    def __init__(self, registry: Optional[NodeRegistry] = None,
+                 device: Optional[bool] = None):
         self.registry = registry if registry is not None else NodeRegistry()
-        self.arena = LatticeArena(self.registry)
+        self.arena = LatticeArena(self.registry, device=device)
+        self.device = self.arena.device
         self.fallback: Dict[str, Lattice] = {}
+        # fallback *membership* version: read plans depend on which keys
+        # are fallback-held, not on their values
+        self._fb_version = 0
         self.view = LatticeStore(self)
         # telemetry: how much traffic actually batched
         self.launches = 0
@@ -824,6 +1239,25 @@ class MergeEngine:
         # (packed R-replica read-repair, no per-key objects)
         self.plane_reads = 0
 
+    # -- device-tier telemetry / versioning --------------------------------
+    @property
+    def h2d_bytes(self) -> int:
+        return self.arena.h2d_bytes
+
+    @property
+    def d2h_bytes(self) -> int:
+        return self.arena.d2h_bytes
+
+    @property
+    def device_syncs(self) -> int:
+        return self.arena.device_syncs
+
+    @property
+    def layout_version(self) -> int:
+        """Bumps when the key -> row layout or fallback membership
+        changes; cached read plans revalidate against it."""
+        return self.arena.layout_version + self._fb_version
+
     # -- point ops -------------------------------------------------------------
     def get(self, key: str) -> Optional[Lattice]:
         value = self.fallback.get(key)
@@ -833,14 +1267,18 @@ class MergeEngine:
 
     def set(self, key: str, value: Lattice) -> None:
         if is_arena_lww(value):
-            self.fallback.pop(key, None)
+            if self.fallback.pop(key, None) is not None:
+                self._fb_version += 1
             self.arena.set(key, value)
         else:
             self.arena.delete(key)
+            if key not in self.fallback:
+                self._fb_version += 1
             self.fallback[key] = value
 
     def delete(self, key: str) -> bool:
         if self.fallback.pop(key, None) is not None:
+            self._fb_version += 1
             return True
         return self.arena.delete(key)
 
@@ -894,6 +1332,30 @@ class MergeEngine:
         sample = tensor_payload(next(iter(keyed.values()))[0].value)
         slab = self.arena.slab_for(group, sample)
         D = slab.dim
+
+        if isinstance(slab, _DeviceSlab):
+            # device tier: per-key row_of syncs would serialize on the
+            # PCIe bus — pack the candidates as one incoming plane group
+            # (duplicates express multi-candidate keys) and run the same
+            # fused device ingest the gossip path uses; fold order is
+            # stored-first then item order, identical to the host pack
+            keys_flat: List[str] = []
+            clocks_l: List[int] = []
+            ranks_l: List[int] = []
+            flats: List[np.ndarray] = []
+            for key, cands in keyed.items():
+                for lat in cands:
+                    keys_flat.append(key)
+                    clocks_l.append(lat.timestamp[0])
+                    ranks_l.append(self.registry.rank(lat.timestamp[1]))
+                    flats.append(tensor_payload(lat.value).reshape(-1))
+            pg = PlaneGroup(
+                slab.shape, slab.dtype, keys_flat,
+                np.stack(flats).astype(slab.dtype, copy=False),
+                np.asarray(clocks_l, np.int32).reshape(-1, 1),
+                np.asarray(ranks_l, np.int32).reshape(-1, 1))
+            self._device_ingest(group, pg, slab, pg.node_idx)
+            return
 
         candidates: List[List[Tuple[int, int, np.ndarray]]] = []
         keys = list(keyed)
@@ -981,7 +1443,12 @@ class MergeEngine:
             return 0
         rank_of = np.asarray([self.registry.rank(n) for n in node_ids]
                              or [0], np.int32)
-        ranks = rank_of[pg.node_idx[:, 0]]
+        if _is_device(pg.node_idx):  # translate on device: no implicit sync
+            import jax.numpy as jnp
+
+            ranks = jnp.take(jnp.asarray(rank_of), pg.node_idx[:, 0])
+        else:
+            ranks = rank_of[pg.node_idx[:, 0]]
         # rows the planes cannot merge in place — a fallback-held key or a
         # cross-group shape/dtype change — take the exact per-key path
         kg = self.arena._key_group
@@ -994,11 +1461,16 @@ class MergeEngine:
                    if kg.get(k, group) != group]
         if bad:
             self.plane_object_fallbacks += len(bad)
-            for i in bad:
-                key = pg.keys[i]
-                ts = (int(pg.clocks[i, 0]), node_ids[int(pg.node_idx[i, 0])])
-                self.merge_one(
-                    key, LWWLattice(ts, pg.vals[i].copy().reshape(pg.shape)))
+            bad_pg = pg.take(bad)
+            if bad_pg.is_device():  # the exact path is host-side: one sync
+                bad_pg = bad_pg.to_host()
+                self.arena._xfer.device_syncs += 1
+                self.arena._xfer.d2h_bytes += bad_pg.vals.nbytes
+            for i, key in enumerate(bad_pg.keys):
+                ts = (int(bad_pg.clocks[i, 0]),
+                      node_ids[int(bad_pg.node_idx[i, 0])])
+                self.merge_one(key, LWWLattice(
+                    ts, bad_pg.vals[i].copy().reshape(bad_pg.shape)))
             if len(bad) == K:
                 return K
             kept = set(bad)
@@ -1009,6 +1481,9 @@ class MergeEngine:
         slab = self.arena.slab_for_meta(group, pg.shape, pg.dtype)
         ranks_in = ranks.reshape(-1, 1)
         self.plane_keys += kk
+        if isinstance(slab, _DeviceSlab):
+            self._device_ingest(group, pg, slab, ranks_in)
+            return K
         if len(set(pg.keys)) != kk:
             # duplicate keys (several gossip rounds queued): general
             # R-candidate packing, still ONE launch for the group
@@ -1146,6 +1621,62 @@ class MergeEngine:
         self.launches += 1
         self.batched_keys += kk
 
+    # -- device-tier ingest: donated fused gather/merge/scatter ------------------
+    def _device_ingest(self, group: _GroupKey, pg: PlaneGroup,
+                       slab: _DeviceSlab, ranks_in) -> None:
+        """Apply one group's rows to a device slab.  Row targets resolve
+        host-side (dict bookkeeping only); the payload merge is ONE
+        donated fused launch, so device-resident inputs (gossip between
+        device engines) cross the host boundary zero times.  Branching
+        — bulk insert vs pairwise merge vs duplicate-key multi-merge —
+        mirrors the host path exactly, including the launch counters.
+        """
+        kk = len(pg)
+        if len(set(pg.keys)) != kk:
+            self._device_ingest_multi(group, pg, slab, ranks_in)
+            return
+        rows, has = self.arena.rows_for_ingest(group, pg.keys)
+        if not has.any():  # nothing stored: overwrite scatter, no launch
+            slab.write_rows(rows, pg.clocks, ranks_in, pg.vals)
+            return
+        slab.ingest_rows(rows, has, pg.clocks, ranks_in, pg.vals)
+        self.launches += 1
+        self.batched_keys += kk
+
+    def _device_ingest_multi(self, group: _GroupKey, pg: PlaneGroup,
+                             slab: _DeviceSlab, ranks_in) -> None:
+        """Duplicate-key device ingest: same (R, U) candidate matrix as
+        the host multi path (stored candidate first, then delivery
+        order; padding repeats a candidate — idempotent), with the pool
+        gather, merge and scatter fused into one donated launch."""
+        kk = len(pg)
+        order: Dict[str, int] = {}
+        cands: List[List[int]] = []
+        for i, key in enumerate(pg.keys):
+            j = order.get(key)
+            if j is None:
+                order[key] = len(cands)
+                cands.append([i])
+            else:
+                cands[j].append(i)
+        ukeys = list(order)
+        stored_take: List[int] = []
+        for j, key in enumerate(ukeys):
+            row = slab.rows.get(key)
+            if row is not None:
+                cands[j].insert(0, kk + len(stored_take))
+                stored_take.append(row)
+        R = max(len(c) for c in cands)
+        U = len(ukeys)
+        idx = np.empty((R, U), np.int32)
+        for j, c in enumerate(cands):
+            idx[:, j] = [c[r] if r < len(c) else c[0] for r in range(R)]
+        urows, _ = self.arena.rows_for_ingest(group, ukeys)
+        slab.ingest_multi(urows, idx, stored_take, pg.clocks, ranks_in,
+                          pg.vals)
+        self.launches += 1
+        self.batched_keys += U
+
     # -- the read plane: batched R-replica read-repair reduction -----------------
     def reduce_replica_planes(
         self,
@@ -1169,14 +1700,35 @@ class MergeEngine:
         per-key ``Lattice.merge`` fold.  Winners come back as a
         :class:`PlaneBatch` whose node planes hold registry ranks
         (``node_ids`` is the registry id list): zero per-key lattice
-        objects end-to-end.
+        objects end-to-end.  On the device tier the whole pile —
+        per-replica gathers, pool concat, candidate stack, reduction —
+        is one fused jit per group and the winners stay on device.
 
         Returns ``(batch, leftover)``: leftover keys need the exact
         per-key object path (a replica holds the key in its fallback
         store, or replicas disagree on slab group); keys held by no
         replica appear in neither.
+
+        Split as ``plan_replica_reduce`` (structure: rows + candidate
+        indices) and ``execute_reduce_plan`` (value gathers + launches):
+        callers with a stable topology cache the plan and re-execute it,
+        skipping the per-key Python walk entirely.
         """
-        batch = PlaneBatch(self.registry._ids)
+        return self.execute_reduce_plan(self.plan_replica_reduce(keyed))
+
+    def plan_replica_reduce(
+        self,
+        keyed: Sequence[Tuple[str, Sequence["MergeEngine"]]],
+    ) -> "_ReducePlan":
+        """Structure half of ``reduce_replica_planes``: resolve each
+        key's candidate (slab, row) refs and prebuild the per-group
+        candidate index matrices, touching no value planes.
+
+        The plan stays valid while the replica set and every involved
+        engine's ``layout_version`` are unchanged; row *contents* are
+        re-gathered at execute, so writes over existing keys never
+        invalidate a cached plan.
+        """
         leftover: List[str] = []
         # per group: keys + per-key candidate refs (pool id, local row pos)
         plans: Dict[_GroupKey, Tuple[List[str], List[List[Tuple[int, int]]]]] = {}
@@ -1224,51 +1776,19 @@ class MergeEngine:
             plan[0].append(key)
             plan[1].append(cands)
 
-        # gather pool segments: one slice/fancy gather per (replica, group)
-        gathered: Dict[Tuple[int, _GroupKey],
-                       Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
-        for pool_id, (slab, row_list) in pools.items():
-            rows = np.asarray(row_list, np.int64)
-            span = _contiguous_span(rows) if len(rows) else None
-            if span is not None:  # steady-state layout: zero-copy slices
-                gathered[pool_id] = (slab.clocks[span[0]:span[1]],
-                                     slab.nodes[span[0]:span[1]],
-                                     slab.vals[span[0]:span[1]])
-            else:
-                gathered[pool_id] = (slab.clocks[rows], slab.nodes[rows],
-                                     slab.vals[rows])
-
-        from ..kernels import ops  # deferred: keep core importable sans jax
-
+        group_plans: List[_ReduceGroupPlan] = []
         for group, (keys, cand_refs) in plans.items():
-            # concat this group's pool segments; candidate refs become
-            # global pool indices via per-segment base offsets
-            seg_ids = [pid for pid in gathered if pid[1] == group]
+            # candidate refs become global pool indices via per-segment
+            # base offsets (segment order = pool insertion order)
+            seg_ids = [pid for pid in pools if pid[1] == group]
             base: Dict[Tuple[int, _GroupKey], int] = {}
             off = 0
             for pid in seg_ids:
                 base[pid] = off
-                off += gathered[pid][0].shape[0]
-            if len(seg_ids) == 1:
-                pool_clocks, pool_nodes, pool_vals = gathered[seg_ids[0]]
-            else:
-                pool_clocks = np.concatenate([gathered[p][0] for p in seg_ids])
-                pool_nodes = np.concatenate([gathered[p][1] for p in seg_ids])
-                pool_vals = np.concatenate([gathered[p][2] for p in seg_ids])
+                off += len(pools[pid][1])
             K = len(keys)
             R = max(len(c) for c in cand_refs)
-            shape, dtype_name = group
-            slab_dtype = pool_vals.dtype
-            D = pool_vals.shape[1]
-            self.plane_reads += K
-            if R == 1:  # single live candidate per key: a pure gather
-                idx0 = np.asarray([base[c[0][0]] + c[0][1]
-                                   for c in cand_refs], np.int64)
-                batch.groups[group] = PlaneGroup(
-                    shape, slab_dtype, list(keys), pool_vals[idx0],
-                    pool_clocks[idx0], pool_nodes[idx0])
-                continue
-            Rp, Kp, Dp = _bucket(R, 2), _k_bucket(K), _bucket(D, 128)
+            Rp = _bucket(R, 2)
             # (Rp, K) candidate index matrix, built vectorized: flat
             # per-key runs + cumsum starts; rows past a key's candidate
             # count clamp to a repeat candidate (idempotent padding —
@@ -1281,28 +1801,119 @@ class MergeEngine:
             r_grid = np.arange(Rp, dtype=np.int64)[:, None]
             idx = flat[starts[None, :]
                        + np.minimum(r_grid, counts[None, :] - 1)]
-            if Kp == K and Dp == D:
-                # bucket-aligned: the index gather IS the kernel input —
-                # no zero staging, no second payload copy
-                clocks = pool_clocks[idx]
-                nodes = pool_nodes[idx]
-                vals = pool_vals[idx]
+            segs = []
+            for pid in seg_ids:
+                slab, row_list = pools[pid]
+                rows = np.asarray(row_list, np.int64)
+                span = _contiguous_span(rows) if len(rows) else None
+                segs.append((slab, rows, span))
+            gp = _ReduceGroupPlan(group, list(keys), segs, idx, R)
+            if gp.device:
+                # fused-jit form: int32 rows + a K-bucketed index matrix
+                # (pad columns repeat one candidate; winners slice [:K])
+                Kp = _k_bucket(K)
+                idx_dev = np.empty((Rp, Kp), np.int32)
+                idx_dev[:, :K] = idx
+                idx_dev[:, K:] = idx[0, 0]
+                gp.idx_dev = idx_dev
+                gp.rows32 = [np.asarray(r, np.int32) for _, r, _ in segs]
+            group_plans.append(gp)
+        return _ReducePlan(leftover, group_plans)
+
+    def execute_reduce_plan(
+        self, plan: "_ReducePlan",
+    ) -> Tuple[PlaneBatch, List[str]]:
+        """Value half: gather candidate planes fresh (the newest row
+        contents flow through a cached plan) and reduce each group with
+        one launch — a single fused device jit when every segment slab
+        is device-resident."""
+        batch = PlaneBatch(self.registry._ids)
+        for g in plan.groups:
+            if g.device:
+                self._reduce_group_device(batch, g)
             else:
-                clocks = np.zeros((Rp, Kp, 1), np.int32)
-                nodes = np.zeros((Rp, Kp, 1), np.int32)
-                vals = np.zeros((Rp, Kp, Dp), slab_dtype)
-                clocks[:, :K] = pool_clocks[idx]
-                nodes[:, :K] = pool_nodes[idx]
-                vals[:, :K, :D] = pool_vals[idx]
-            win_val, win_clock, win_node = ops.lww_merge_many(
-                clocks, nodes, vals)
-            batch.groups[group] = PlaneGroup(
-                shape, slab_dtype, list(keys),
-                np.asarray(win_val)[:K, :D].astype(slab_dtype, copy=False),
-                np.asarray(win_clock)[:K], np.asarray(win_node)[:K])
+                self._reduce_group_host(batch, g)
+        return batch, list(plan.leftover)
+
+    def _reduce_group_host(self, batch: PlaneBatch,
+                           g: "_ReduceGroupPlan") -> None:
+        gathered = []
+        for slab, rows, span in g.segs:
+            if span is not None:  # steady-state layout: zero-copy slices
+                gathered.append((slab.clocks[span[0]:span[1]],
+                                 slab.nodes[span[0]:span[1]],
+                                 slab.vals[span[0]:span[1]]))
+            else:
+                gathered.append((slab.clocks[rows], slab.nodes[rows],
+                                 slab.vals[rows]))
+        if len(gathered) == 1:
+            pool_clocks, pool_nodes, pool_vals = gathered[0]
+        else:
+            pool_clocks = np.concatenate([t[0] for t in gathered])
+            pool_nodes = np.concatenate([t[1] for t in gathered])
+            pool_vals = np.concatenate([t[2] for t in gathered])
+        keys = g.keys
+        K = len(keys)
+        shape, _ = g.group
+        slab_dtype = pool_vals.dtype
+        D = pool_vals.shape[1]
+        self.plane_reads += K
+        if g.R == 1:  # single live candidate per key: a pure gather
+            idx0 = g.idx[0]
+            batch.groups[g.group] = PlaneGroup(
+                shape, slab_dtype, list(keys), pool_vals[idx0],
+                pool_clocks[idx0], pool_nodes[idx0])
+            return
+
+        from ..kernels import ops  # deferred: keep core importable sans jax
+
+        Rp = g.idx.shape[0]
+        Kp, Dp = _k_bucket(K), _bucket(D, 128)
+        idx = g.idx
+        if Kp == K and Dp == D:
+            # bucket-aligned: the index gather IS the kernel input —
+            # no zero staging, no second payload copy
+            clocks = pool_clocks[idx]
+            nodes = pool_nodes[idx]
+            vals = pool_vals[idx]
+        else:
+            clocks = np.zeros((Rp, Kp, 1), np.int32)
+            nodes = np.zeros((Rp, Kp, 1), np.int32)
+            vals = np.zeros((Rp, Kp, Dp), slab_dtype)
+            clocks[:, :K] = pool_clocks[idx]
+            nodes[:, :K] = pool_nodes[idx]
+            vals[:, :K, :D] = pool_vals[idx]
+        win_val, win_clock, win_node = ops.lww_merge_many(
+            clocks, nodes, vals)
+        batch.groups[g.group] = PlaneGroup(
+            shape, slab_dtype, list(keys),
+            np.asarray(win_val)[:K, :D].astype(slab_dtype, copy=False),
+            np.asarray(win_clock)[:K], np.asarray(win_node)[:K])
+        self.launches += 1
+        self.batched_keys += K
+
+    def _reduce_group_device(self, batch: PlaneBatch,
+                             g: "_ReduceGroupPlan") -> None:
+        """The device read pile: gathers, concat, candidate stack and
+        reduction fused into ``ops.slab_reduce``; winners stay on device
+        (the host boundary is only crossed if a consumer materializes)."""
+        from ..kernels import ops
+
+        win_val, win_clock, win_node = ops.slab_reduce(
+            [s.clocks for s, _, _ in g.segs],
+            [s.nodes for s, _, _ in g.segs],
+            [s.vals for s, _, _ in g.segs],
+            list(g.rows32), g.idx_dev)
+        keys = g.keys
+        K = len(keys)
+        shape, _ = g.group
+        self.plane_reads += K
+        batch.groups[g.group] = PlaneGroup(
+            shape, g.segs[0][0].dtype, list(keys),
+            win_val[:K], win_clock[:K], win_node[:K])
+        if g.R > 1:
             self.launches += 1
             self.batched_keys += K
-        return batch, leftover
 
 
 # ---------------------------------------------------------------------------

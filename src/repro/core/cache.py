@@ -36,14 +36,20 @@ class ExecutorCache:
         cache_id: str,
         kvs: AnnaKVS,
         profile: NetworkProfile = DEFAULT_PROFILE,
+        device: Optional[bool] = None,
     ):
         self.cache_id = cache_id
         self.kvs = kvs
         self.profile = profile
         # arena-backed local store: tensor-valued LWW entries live in
         # contiguous rows and merge through the batched kernels; the
-        # registry is shared with the KVS so node ranks are comparable
-        self.engine = MergeEngine(kvs.registry)
+        # registry is shared with the KVS so node ranks are comparable.
+        # The cache rides the tier's device-resident slab mode: Cloudburst
+        # colocates caches with compute, so a device KVS means the cache's
+        # hot rows live on the accelerator too (override via ``device``).
+        self.engine = MergeEngine(
+            kvs.registry,
+            device=kvs.device_tier if device is None else device)
         self.data = self.engine.view
         self.pending_flush: List[Tuple[str, Lattice]] = []
         # (dag_id, key) -> pinned lattice version

@@ -31,6 +31,7 @@ from .arena import (
     NodeRegistry,
     PlaneBatch,
     PlaneBuffer,
+    device_tier_default,
     try_reduce_lww,
 )
 from .lattices import Lattice
@@ -50,9 +51,10 @@ class StorageNode:
     keep ordinary mapping semantics.
     """
 
-    def __init__(self, node_id: str, registry: Optional[NodeRegistry] = None):
+    def __init__(self, node_id: str, registry: Optional[NodeRegistry] = None,
+                 device: Optional[bool] = None):
         self.node_id = node_id
-        self.engine = MergeEngine(registry)
+        self.engine = MergeEngine(registry, device=device)
         self.store = self.engine.view
         self.inbox = PlaneBuffer()  # pending gossip, packed on the wire
         self.alive = True
@@ -91,10 +93,15 @@ class AnnaKVS:
         replication: int = 2,
         profile: NetworkProfile = DEFAULT_PROFILE,
         sync_replication: bool = False,
+        device_tier: Optional[bool] = None,
     ):
         self.profile = profile
         self.replication = replication
         self.sync_replication = sync_replication
+        # device-resident slab tier: arena planes live as donated jax
+        # arrays on every storage node (None → REPRO_DEVICE_TIER env)
+        self.device_tier = (device_tier_default() if device_tier is None
+                            else bool(device_tier))
         self.rng = random.Random(profile.seed if hasattr(profile, "seed") else 0)
         # one node-id intern table for the whole tier, so arena node ranks
         # are comparable across storage nodes and executor caches
@@ -103,7 +110,13 @@ class AnnaKVS:
         # (get_merged_many) reduces through it; its arena stays empty —
         # it exists for the kernel façade + read-plane telemetry
         # (reader.plane_reads counts keys answered without objects)
-        self.reader = MergeEngine(self.registry)
+        self.reader = MergeEngine(self.registry, device=self.device_tier)
+        # read-plan memo for get_merged_many: a hot read set with stable
+        # placement + arena layouts re-executes its cached reduce plan,
+        # skipping the per-key ring walk and candidate-index build
+        # (row CONTENTS re-gather at execute, so writes never stale it)
+        self._read_plans: Dict[Tuple[str, ...], Tuple[tuple, object]] = {}
+        self._placement_epoch = 0
         self.nodes: Dict[str, StorageNode] = {}
         self._ring: List[Tuple[int, str]] = []  # (hash, node_id), sorted
         self._key_replication: Dict[str, int] = {}  # selective replication
@@ -136,7 +149,9 @@ class AnnaKVS:
     def add_node(self, node_id: str) -> None:
         assert node_id not in self.nodes
         self._owners_cache.clear()  # ring placement changes
-        self.nodes[node_id] = StorageNode(node_id, self.registry)
+        self._placement_epoch += 1
+        self.nodes[node_id] = StorageNode(node_id, self.registry,
+                                          device=self.device_tier)
         for v in range(self.VNODES):
             bisect.insort(self._ring, (_hash(f"{node_id}#{v}"), node_id))
         # New owner: existing replicas re-gossip their keys so ownership
@@ -152,6 +167,7 @@ class AnnaKVS:
     def remove_node(self, node_id: str) -> None:
         node = self.nodes.pop(node_id)
         self._owners_cache.clear()  # ring placement changes
+        self._placement_epoch += 1
         self._ring = [(h, n) for (h, n) in self._ring if n != node_id]
         # hand off data to the new owners by merge: group the departing
         # node's keys per new owner, one packed export per owner
@@ -164,10 +180,12 @@ class AnnaKVS:
 
     def fail_node(self, node_id: str) -> None:
         self.nodes[node_id].alive = False
+        self._placement_epoch += 1
 
     def recover_node(self, node_id: str) -> None:
         node = self.nodes[node_id]
         node.alive = True
+        self._placement_epoch += 1
         hints = self._hints.pop(node_id, None)
         if hints is not None:
             node.inbox.add_batch(hints.drain())
@@ -197,6 +215,7 @@ class AnnaKVS:
         """Selective replication for hot keys (Anna [87])."""
         self._key_replication[key] = k
         self._owners_cache.pop(key, None)
+        self._placement_epoch += 1
 
     # -- data path --------------------------------------------------------------
     def _route_put(
@@ -427,14 +446,34 @@ class AnnaKVS:
         result; non-arena lattices (opaque, causal, Set/Map, 64-bit
         exact-path payloads) fold per key exactly as before and ride
         the sidecar.
+
+        A hot read set re-executes a cached reduce plan: the per-key
+        ring walk and candidate-index build are skipped whenever the
+        placement epoch and every engine's ``layout_version`` are
+        unchanged since the plan was built (row contents re-gather at
+        execute, so steady-state writes never invalidate it — on the
+        device tier a warmed read is one fused gather-reduce launch
+        per slab group with zero host syncs).
         """
-        live = {nid: node.engine for nid, node in self.nodes.items()
-                if node.alive}
-        keyed = [
-            (key, [live[o] for o in self._owners(key) if o in live])
-            for key in dict.fromkeys(keys)
-        ]
-        batch, leftover = self.reader.reduce_replica_planes(keyed)
+        ukeys = tuple(dict.fromkeys(keys))
+        sig = (self._placement_epoch,
+               tuple((nid, node.alive, node.engine.layout_version)
+                     for nid, node in self.nodes.items()))
+        cached = self._read_plans.get(ukeys)
+        if cached is not None and cached[0] == sig:
+            plan = cached[1]
+        else:
+            live = {nid: node.engine for nid, node in self.nodes.items()
+                    if node.alive}
+            keyed = [
+                (key, [live[o] for o in self._owners(key) if o in live])
+                for key in ukeys
+            ]
+            plan = self.reader.plan_replica_reduce(keyed)
+            if len(self._read_plans) >= 32:  # bound the memo: drop oldest
+                self._read_plans.pop(next(iter(self._read_plans)))
+            self._read_plans[ukeys] = (sig, plan)
+        batch, leftover = self.reader.execute_reduce_plan(plan)
         for key in leftover:
             merged = self._merge_replicas(key)
             if merged is not None:
@@ -533,6 +572,18 @@ class AnnaKVS:
         return {
             nid: {"keys": len(n.store), "puts": n.puts, "gets": n.gets}
             for nid, n in self.nodes.items()
+        }
+
+    def transfer_stats(self) -> Dict[str, int]:
+        """Aggregate host↔device transfer telemetry across the tier
+        (storage nodes + the read-reduction engine).  All zeros on the
+        host-numpy path; on the device tier, steady-state gossip and
+        warmed batched reads must keep ``device_syncs`` flat."""
+        engines = [n.engine for n in self.nodes.values()] + [self.reader]
+        return {
+            "h2d_bytes": sum(e.h2d_bytes for e in engines),
+            "d2h_bytes": sum(e.d2h_bytes for e in engines),
+            "device_syncs": sum(e.device_syncs for e in engines),
         }
 
     def total_keys(self) -> int:

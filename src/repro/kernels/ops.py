@@ -230,6 +230,173 @@ def causal_merge(vc_a, val_a, vc_b, val_b):
 
 
 # ---------------------------------------------------------------------------
+# device-resident slab tier
+#
+# With ``core.arena`` in device mode the slab planes themselves are jax
+# arrays ((cap, D) values + (cap, 1) int32 clock/node planes, sharded
+# along rows over the "kvs" mesh when capacities divide), and the ops
+# below are the only things that touch them: donated jitted
+# gather -> merge -> scatter fusions built on the SAME ``ref`` merge
+# bodies as the host launches.  The merge is pure selection (int32
+# predicate + where), so every winner is bit-identical to the host path
+# and to the per-key ``LWWLattice.merge`` fold.
+#
+# Donation (`donate_argnums`) makes each update in place: the engine
+# hands its slab buffers to the jit and keeps the returned ones, so
+# steady-state ingest/read traffic allocates nothing host-side and never
+# crosses the PCIe boundary.  Callers must treat passed-in planes as
+# consumed (the arena reassigns them from the return value).
+#
+# Determinism at padded lanes: callers pad scatter row indices with the
+# slab's scratch row (cap - 1, never key-mapped) and pad the incoming
+# planes with zeros, so every duplicate scatter lane writes identical
+# bytes — the result is well-defined even though XLA leaves the winning
+# duplicate unspecified.
+# ---------------------------------------------------------------------------
+
+
+def slab_sharding(rows: int):
+    """NamedSharding for a device slab of ``rows`` rows (None: unsharded)."""
+    from ..launch.sharding import kvs_slab_sharding
+
+    return kvs_slab_sharding(merge_mesh(), rows)
+
+
+def slab_place(arr, rows: Optional[int] = None):
+    """Put one slab plane on the device tier, row-sharded when eligible."""
+    rows = arr.shape[0] if rows is None else rows
+    sharding = slab_sharding(rows)
+    if sharding is None:
+        return jax.device_put(arr)
+    return jax.device_put(arr, sharding)
+
+
+def slab_zeros(rows: int, cols: int, dtype):
+    return slab_place(jnp.zeros((rows, cols), dtype), rows)
+
+
+def slab_grow(vals, clocks, nodes, new_rows: int):
+    """Grow slab planes to ``new_rows`` (zero-padded) and re-place them —
+    rare (amortized by doubling), so it is a plain copy, not donated."""
+    out = []
+    for arr in (vals, clocks, nodes):
+        pad = ((0, new_rows - arr.shape[0]), (0, 0))
+        out.append(slab_place(jnp.pad(arr, pad), new_rows))
+    return tuple(out)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def slab_set_row(vals, clocks, nodes, row, clock, rank, flat):
+    """Point overwrite of one row (arena.set / set_raw)."""
+    return (vals.at[row].set(flat.astype(vals.dtype)),
+            clocks.at[row, 0].set(clock),
+            nodes.at[row, 0].set(rank))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def slab_move_row(vals, clocks, nodes, src, dst):
+    """Copy row ``src`` over row ``dst`` (the swap-last delete)."""
+    return (vals.at[dst].set(vals[src]),
+            clocks.at[dst].set(clocks[src]),
+            nodes.at[dst].set(nodes[src]))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def slab_remap_nodes(nodes, remap):
+    """Registry rank remap over the stored node plane."""
+    return jnp.take(remap, nodes, axis=0).reshape(nodes.shape)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def slab_write_rows(vals, clocks, nodes, rows, in_clocks, in_nodes, in_vals):
+    """Multi-row overwrite scatter (bulk_write / scatter_existing)."""
+    return (vals.at[rows].set(in_vals.astype(vals.dtype)),
+            clocks.at[rows].set(in_clocks),
+            nodes.at[rows].set(in_nodes))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def slab_ingest_rows(vals, clocks, nodes, rows, has, in_clocks, in_nodes,
+                     in_vals):
+    """Fused pairwise plane ingest: gather stored rows, LWW-merge against
+    the incoming planes (stored candidate first — full-timestamp ties
+    keep the stored row, like the per-key fold), scatter winners back.
+
+    ``rows`` must be a valid target row for every lane (callers allocate
+    rows for unseen keys first); ``has`` masks lanes whose key had no
+    stored value, which merge against themselves (idempotent).
+    """
+    a_clocks = jnp.where(has, jnp.take(clocks, rows, axis=0), in_clocks)
+    a_nodes = jnp.where(has, jnp.take(nodes, rows, axis=0), in_nodes)
+    a_vals = jnp.where(has, jnp.take(vals, rows, axis=0),
+                       in_vals.astype(vals.dtype))
+    win_val, win_clock, win_node = ref.lww_merge_ref(
+        a_clocks, a_nodes, a_vals,
+        in_clocks, in_nodes, in_vals.astype(vals.dtype))
+    return (vals.at[rows].set(win_val),
+            clocks.at[rows].set(win_clock),
+            nodes.at[rows].set(win_node))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def slab_ingest_multi(vals, clocks, nodes, urows, idx, stored_take,
+                      in_clocks, in_nodes, in_vals):
+    """Fused R-candidate ingest (duplicate keys in one batch): pool =
+    [incoming rows; gathered stored rows], ``idx`` (R, U) gathers each
+    unique key's candidates (stored first, then delivery order; padding
+    repeats a candidate — idempotent), one many-way merge, scatter at
+    ``urows``."""
+    pool_clocks = jnp.concatenate(
+        [in_clocks, jnp.take(clocks, stored_take, axis=0)])
+    pool_nodes = jnp.concatenate(
+        [in_nodes, jnp.take(nodes, stored_take, axis=0)])
+    pool_vals = jnp.concatenate(
+        [in_vals.astype(vals.dtype), jnp.take(vals, stored_take, axis=0)])
+    win_val, win_clock, win_node = ref.lww_merge_many_ref(
+        pool_clocks[idx], pool_nodes[idx], pool_vals[idx])
+    return (vals.at[urows].set(win_val),
+            clocks.at[urows].set(win_clock),
+            nodes.at[urows].set(win_node))
+
+
+@jax.jit
+def slab_gather(vals, clocks, nodes, rows):
+    """Row gather into fresh buffers (export snapshots: safe against the
+    source slab's later donated updates)."""
+    return (jnp.take(vals, rows, axis=0), jnp.take(clocks, rows, axis=0),
+            jnp.take(nodes, rows, axis=0))
+
+
+@jax.jit
+def slab_row(vals, clocks, nodes, row):
+    """One row's (value, clock, rank) — the materialize edge; the caller
+    device_gets the triple in a single transfer."""
+    return vals[row], clocks[row, 0], nodes[row, 0]
+
+
+@jax.jit
+def slab_reduce(seg_clocks, seg_nodes, seg_vals, seg_rows, idx):
+    """Fused R-replica read reduction: per-(replica, group) row gathers,
+    pool concat, an (R, K) candidate gather, one many-way merge — the
+    whole ``reduce_replica_planes`` pile as a single launch with the
+    winners left on device.
+
+    ``seg_*`` are equal-length lists (pytrees) of the replicas' slab
+    planes and row-index arrays; ``idx`` indexes the concatenated pool
+    in per-segment base order, padded with repeat candidates
+    (idempotent).  Returns (val, clock, node) winner planes.
+    """
+    pool_clocks = jnp.concatenate(
+        [jnp.take(c, r, axis=0) for c, r in zip(seg_clocks, seg_rows)])
+    pool_nodes = jnp.concatenate(
+        [jnp.take(n, r, axis=0) for n, r in zip(seg_nodes, seg_rows)])
+    pool_vals = jnp.concatenate(
+        [jnp.take(v, r, axis=0) for v, r in zip(seg_vals, seg_rows)])
+    return ref.lww_merge_many_ref(
+        pool_clocks[idx], pool_nodes[idx], pool_vals[idx])
+
+
+# ---------------------------------------------------------------------------
 # flash attention with flash backward
 # ---------------------------------------------------------------------------
 

@@ -41,6 +41,13 @@ def make_merge_mesh(num_devices: Optional[int] = None) -> Optional[Mesh]:
     merge launches (``kernels.ops.lww_merge_many`` / ``vc_join_classify``
     under ``shard_map``: each device merges its local slab rows).
 
+    The same mesh places device-resident arena slabs: with the device
+    tier enabled, slab row capacities are rounded to a multiple of the
+    mesh size and the (cap, D) value / (cap, 1) clock-node planes carry
+    ``NamedSharding(mesh, P("kvs", None))``
+    (``launch.sharding.kvs_slab_sharding``), so the donated in-place
+    merge jits partition along K exactly like the shard_map launches.
+
     Returns None for a single device — the caller keeps the unsharded
     launch path unchanged.
     """

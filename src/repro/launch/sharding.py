@@ -285,3 +285,27 @@ def batch_shardings(rules: ShardRules, batch) -> Any:
 def replicated(rules: ShardRules, tree) -> Any:
     return jax.tree.map(
         lambda leaf: NamedSharding(rules.mesh, P()), tree)
+
+
+# ---------------------------------------------------------------------------
+# storage-tier slab placement (the device-resident KVS tier)
+# ---------------------------------------------------------------------------
+
+
+def kvs_slab_sharding(mesh: Optional[Mesh], rows: int) -> Optional[NamedSharding]:
+    """Placement for a device-resident KVS slab plane of ``rows`` rows.
+
+    Rows are the key axis, so the slab partitions over the same 1-D "kvs"
+    merge mesh the batched lattice launches already shard along
+    (``launch.mesh.make_merge_mesh``): each device owns a contiguous row
+    block and the donated merge/scatter jits run on local rows, exactly
+    like the PR-2 ``shard_map`` launches — elementwise along K, so the
+    partitioning cannot change a bit.  Returns ``None`` when the slab
+    cannot shard (no mesh, or the row capacity does not divide); callers
+    then place the slab unsharded on the default device.
+    """
+    if mesh is None or "kvs" not in mesh.shape:
+        return None
+    if rows < mesh.size or rows % mesh.size != 0:
+        return None
+    return NamedSharding(mesh, P("kvs", None))
