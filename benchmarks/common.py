@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import sys
 import time
-from typing import Dict, Iterable, List, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
@@ -68,24 +68,32 @@ def _block(out) -> None:
     jax.block_until_ready(out)
 
 
-def _timeit(fn, iters: int) -> List[float]:
+def _timeit(fn, iters: int,
+            record: Optional[List[float]] = None) -> List[float]:
     _block(fn())  # warm (jit compile, slab growth, allocator)
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter()
         _block(fn())
         ts.append(time.perf_counter() - t0)
+    if record is not None:
+        record.extend(ts)
     return ts
 
 
-def best_time(fn, iters: int) -> float:
+def best_time(fn, iters: int,
+              record: Optional[List[float]] = None) -> float:
     """Min over iters after one warm call: robust against background
     load when the timed path is deterministic per call — the floor is
-    the honest cost (used by the plane-vs-per-key benches)."""
-    return float(np.min(_timeit(fn, iters)))
+    the honest cost (used by the plane-vs-per-key benches).  ``record``
+    collects the raw per-iteration samples so callers can report
+    p50/p95/p99 alongside the floor."""
+    return float(np.min(_timeit(fn, iters, record)))
 
 
-def median_time(fn, iters: int) -> float:
+def median_time(fn, iters: int,
+                record: Optional[List[float]] = None) -> float:
     """Median over iters after one warm call — for paths with inherent
-    per-call variance where the floor would flatter."""
-    return float(np.median(_timeit(fn, iters)))
+    per-call variance where the floor would flatter.  ``record``
+    collects the raw per-iteration samples for quantile reporting."""
+    return float(np.median(_timeit(fn, iters, record)))

@@ -39,7 +39,7 @@ import numpy as np
 from repro.core import CloudburstReference, Cluster
 from repro.core.netsim import NetworkProfile
 
-from .common import emit
+from .common import emit, pct
 
 BENCH_RECORD = (Path(__file__).resolve().parent.parent
                 / "BENCH_pipeline_throughput.json")
@@ -134,6 +134,10 @@ def _serve(c: Cluster, n_requests: int, in_flight: int, shards: int,
     submitted = 0
     t0 = time.perf_counter()
     pending: List = []
+    # per-request wall latency (submit -> completion observed), so the
+    # record carries tail quantiles, not just aggregate req/s
+    t_submit: Dict[int, float] = {}
+    lat_samples: List[float] = []
     while submitted < n_requests or pending:
         while submitted < n_requests and len(pending) < in_flight:
             refs = tuple(CloudburstReference(f"in-{submitted}-{s}")
@@ -145,9 +149,17 @@ def _serve(c: Cluster, n_requests: int, in_flight: int, shards: int,
             })
             futs.append(fut)
             pending.append(fut)
+            t_submit[id(fut)] = time.perf_counter()
             submitted += 1
         c.step()
-        pending = [f for f in pending if not f.done()]
+        now = time.perf_counter()
+        still: List = []
+        for f in pending:
+            if f.done():
+                lat_samples.append(now - t_submit.pop(id(f)))
+            else:
+                still.append(f)
+        pending = still
     elapsed = time.perf_counter() - t0
 
     stats = {
@@ -155,6 +167,9 @@ def _serve(c: Cluster, n_requests: int, in_flight: int, shards: int,
         "requests": n_requests,
         "elapsed_s": elapsed,
         "req_per_s": n_requests / elapsed,
+        "latency_p50_ms": pct(lat_samples, 50) * 1e3,
+        "latency_p95_ms": pct(lat_samples, 95) * 1e3,
+        "latency_p99_ms": pct(lat_samples, 99) * 1e3,
         "engine_turns": c.engine_turns - turns0,
         "fused_prefetch_batches": c.fused_prefetch_batches - batches0,
         "fused_prefetch_keys": c.fused_prefetch_keys - keys0,
@@ -191,6 +206,8 @@ def main(n_requests: int = 96, d: int = 2048, shards: int = 4,
         emit(f"pipeline_throughput/in_flight={k}",
              1e6 / stats["req_per_s"],
              f"req_per_s={stats['req_per_s']:.1f}"
+             f";lat_p50_ms={stats['latency_p50_ms']:.2f}"
+             f";lat_p99_ms={stats['latency_p99_ms']:.2f}"
              f";fused_batches={stats['fused_prefetch_batches']}"
              f";fused_keys={stats['fused_prefetch_keys']}"
              f";scalar_hops_would_pay={stats['scalar_hops_would_pay']}"

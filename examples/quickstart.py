@@ -44,6 +44,13 @@ def main():
         print("  visits:", cloud.call("counter", 1))
         cloud.tick()
 
+    # the cluster's telemetry snapshot: every layer reports into one
+    # registry (see README "Observability"); this is what
+    # publish_telemetry() exports to the KVS for the §4.4 monitor
+    print("telemetry snapshot:")
+    for name, value in sorted(cloud.cluster.telemetry().items()):
+        print(f"  {name} = {value}")
+
     # the same function under distributed-session causal consistency
     causal = CloudburstClient(Cluster(n_vms=2, executors_per_vm=3,
                                       mode="dsc", seed=0))

@@ -24,6 +24,12 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
 REPRO_DEVICE_TIER=1 \
 python -m pytest -x -q
 
+echo "== tier-1 pytest (REPRO_TRACE=1, span tracing on everywhere) =="
+# same suite with env-enabled span tracing: proves the observability
+# plane is a pure observer — every test must pass bit-identically with
+# every DAG run traced
+REPRO_TRACE=1 python -m pytest -x -q
+
 echo "== kernel micro-bench smoke =="
 python -m benchmarks.run --smoke
 
@@ -33,11 +39,14 @@ echo "== perf regression gate (vs recorded trajectory) =="
 python -m benchmarks.run --check
 
 echo "== examples/quickstart.py =="
-if ! python examples/quickstart.py > /dev/null; then
+if ! qs_out=$(python examples/quickstart.py); then
     echo "verify: FAILED — examples/quickstart.py errored (the Figure-2" >&2
     echo "client script is the public API contract; a broken quickstart" >&2
     echo "means the release is broken no matter what the tests say)" >&2
     exit 1
 fi
+# surface the cluster's final registry snapshot (engine/cache/kvs
+# telemetry) so each verify run leaves a readable observability record
+printf '%s\n' "$qs_out" | sed -n '/^telemetry snapshot:/,/^DSC mode/p' | sed '$d'
 
 echo "verify: OK"

@@ -886,6 +886,14 @@ class LatticeArena:
     def device_syncs(self) -> int:
         return self._xfer.device_syncs
 
+    def reset_transfer_stats(self) -> None:
+        """Zero the transfer counters in place — the slabs alias this
+        ``_XferStats`` object, so benches/tests can window device-tier
+        measurements without rebuilding the arena."""
+        self._xfer.h2d_bytes = 0
+        self._xfer.d2h_bytes = 0
+        self._xfer.device_syncs = 0
+
     # -- plumbing -------------------------------------------------------------
     @staticmethod
     def group_of(arr: np.ndarray) -> _GroupKey:
@@ -1251,6 +1259,9 @@ class MergeEngine:
     @property
     def device_syncs(self) -> int:
         return self.arena.device_syncs
+
+    def reset_transfer_stats(self) -> None:
+        self.arena.reset_transfer_stats()
 
     @property
     def layout_version(self) -> int:

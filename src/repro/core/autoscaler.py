@@ -46,6 +46,9 @@ class MonitoringEngine:
         self.kvs = kvs
         self.config = config or MonitorConfig()
         self.lamport = LamportClock("monitor")
+        # previous (time, arrivals, completions) sample: decide() derives
+        # windowed rates from consecutive cumulative-counter snapshots
+        self._last: Optional[Tuple[float, float, float]] = None
 
     def publish(self, key: str, value) -> None:
         self.kvs.put(f"__metrics_{key}", LWWLattice(self.lamport.tick(), value))
@@ -54,22 +57,41 @@ class MonitoringEngine:
         lat = self.kvs.get_merged(f"__metrics_{key}")
         return None if lat is None else lat.reveal()
 
-    def decide(
-        self,
-        avg_utilization: float,
-        arrival_rate: float,
-        completion_rate: float,
-        pending_boots: int,
-    ) -> Tuple[bool, bool, int]:
-        """-> (scale_nodes_up, scale_nodes_down, thread_replica_delta)."""
+    def decide(self) -> Tuple[bool, bool, int]:
+        """-> (scale_nodes_up, scale_nodes_down, thread_replica_delta).
+
+        Consumes ONLY the KVS-published registry snapshot (the
+        ``__metrics_*`` keys of §4.4 — ``Cluster.publish_telemetry`` or
+        the Fig. 6 simulator's publish loop writes them): utilization
+        and pending boots read directly; arrival/completion RATES are
+        derived from the cumulative ``arrivals``/``completions``
+        counters between consecutive ``decide()`` calls, so the policy
+        windows itself on the publishing cadence.  The first call has no
+        window yet and reports zero rates (no replica action).
+        """
         cfg = self.config
+        avg_utilization = float(self.read("avg_util") or 0.0)
+        pending_boots = int(self.read("pending_boots") or 0)
+        t = float(self.read("time") or 0.0)
+        arrivals = float(self.read("arrivals") or 0.0)
+        completions = float(self.read("completions") or 0.0)
+        arrival_rate = completion_rate = 0.0
+        have_window = False
+        if self._last is not None:
+            t0, a0, c0 = self._last
+            if t > t0:
+                arrival_rate = (arrivals - a0) / (t - t0)
+                completion_rate = (completions - c0) / (t - t0)
+                have_window = True
+        self._last = (t, arrivals, completions)
         up = avg_utilization > cfg.up_threshold and pending_boots == 0
         down = avg_utilization < cfg.down_threshold
         replica_delta = 0
-        if arrival_rate > 1.1 * max(completion_rate, 1e-9):
-            replica_delta = cfg.executors_per_node
-        elif arrival_rate < cfg.down_threshold * max(completion_rate, 1e-9):
-            replica_delta = -1
+        if have_window:
+            if arrival_rate > 1.1 * max(completion_rate, 1e-9):
+                replica_delta = cfg.executors_per_node
+            elif arrival_rate < cfg.down_threshold * max(completion_rate, 1e-9):
+                replica_delta = -1
         return up, down, replica_delta
 
 
@@ -114,6 +136,11 @@ class AutoscaleSimulator:
         samples: List[TraceSample] = []
         t = 0.0
         next_policy = 0.0
+        # cumulative counters, published like a registry snapshot: the
+        # monitor derives rates from consecutive reads (§4.4), so the
+        # sim hands it no rate/utilization floats directly
+        arrivals_total = 0.0
+        completions_total = 0.0
         while t < duration:
             # complete pending node boots
             finished = [b for b in self.pending_boots if b <= t]
@@ -132,12 +159,17 @@ class AutoscaleSimulator:
             busy = min(active_clients, capacity)
             throughput = busy / self.service_time
             utilization = busy / max(self.nodes * self.executors_per_node, 1)
+            # closed loop: each client re-issues as soon as it is served,
+            # so offered load accrues at clients/service_time
+            arrivals_total += active_clients / self.service_time * self.dt
+            completions_total += throughput * self.dt
+            self.monitor.publish("time", t)
             self.monitor.publish("avg_util", utilization)
+            self.monitor.publish("arrivals", arrivals_total)
+            self.monitor.publish("completions", completions_total)
+            self.monitor.publish("pending_boots", len(self.pending_boots))
             if t >= next_policy:
-                arrival_rate = active_clients / self.service_time
-                up, down, replica_delta = self.monitor.decide(
-                    utilization, arrival_rate, throughput, len(self.pending_boots)
-                )
+                up, down, replica_delta = self.monitor.decide()
                 if replica_delta > 0:
                     self.pinned_threads = min(
                         self.pinned_threads + replica_delta * 4,

@@ -17,6 +17,7 @@ talks to Anna.  Semantics reproduced:
 
 from __future__ import annotations
 
+import weakref
 from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -24,6 +25,7 @@ from .arena import MergeEngine, vc_dominates_or_concurrent_batch
 from .kvs import AnnaKVS
 from .lattices import CausalLattice, Lattice, LWWLattice
 from .netsim import NetworkProfile, VirtualClock, DEFAULT_PROFILE
+from ..obs import counter_shim
 
 
 class CacheFailure(RuntimeError):
@@ -56,11 +58,25 @@ class ExecutorCache:
         self.snapshots: Dict[Tuple[str, str], Lattice] = {}
         self.pending_causal: List[Tuple[str, CausalLattice]] = []
         self.alive = True
-        self.hits = 0
-        self.misses = 0
-        # read-plane telemetry: misses filled by a batched read_many
-        # fetch (one get_merged_many round trip, packed ingest)
-        self.batched_misses = 0
+        # hit/miss telemetry lives in the tier's shared registry;
+        # the counter_shim properties below keep the legacy attribute
+        # API (``cache.hits``, ``cache.batched_misses`` asserts).
+        # batched_misses counts misses filled by a batched read_many
+        # fetch (one get_merged_many round trip, packed ingest).
+        m = kvs.metrics
+        self._m_hits = m.counter(f"cache.{cache_id}.hits")
+        self._m_misses = m.counter(f"cache.{cache_id}.misses")
+        self._m_batched_misses = m.counter(f"cache.{cache_id}.batched_misses")
+        # weakref: the registry outlives removed caches and must not pin
+        # them (their arena subscriptions would never be pruned)
+        wself = weakref.ref(self)
+        m.register_callback(
+            f"cache.{cache_id}.keys",
+            lambda: len(c.data) if (c := wself()) is not None else 0)
+
+    hits = counter_shim("_m_hits")
+    misses = counter_shim("_m_misses")
+    batched_misses = counter_shim("_m_batched_misses")
 
     # -- basic data path ----------------------------------------------------
     def _check_alive(self):
@@ -124,7 +140,11 @@ class ExecutorCache:
             self.misses += len(misses)
             self.batched_misses += len(misses)
             t_fetch = primary.now if primary is not None else 0.0
-            batch = self.kvs.get_merged_many(misses, clock=primary)
+            with self.kvs.tracer.span(
+                    "cache", "read_many", clock=primary,
+                    cache=self.cache_id, n_keys=len(uniq),
+                    n_misses=len(misses)):
+                batch = self.kvs.get_merged_many(misses, clock=primary)
             if primary is not None:
                 for c in all_clocks[1:]:
                     c.advance(primary.now - t_fetch)

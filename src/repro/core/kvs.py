@@ -36,6 +36,7 @@ from .arena import (
 )
 from .lattices import Lattice
 from .netsim import NetworkProfile, VirtualClock, DEFAULT_PROFILE
+from ..obs import MetricsRegistry, NULL_TRACER, Tracer
 
 
 def _hash(s: str) -> int:
@@ -94,10 +95,17 @@ class AnnaKVS:
         profile: NetworkProfile = DEFAULT_PROFILE,
         sync_replication: bool = False,
         device_tier: Optional[bool] = None,
+        metrics: Optional[MetricsRegistry] = None,
+        tracer: Optional[Tracer] = None,
     ):
         self.profile = profile
         self.replication = replication
         self.sync_replication = sync_replication
+        # observability plane: a Cluster passes its shared registry and
+        # tracer; a standalone KVS gets its own registry and the shared
+        # disabled tracer (spans only record under a traced DAG run)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # device-resident slab tier: arena planes live as donated jax
         # arrays on every storage node (None → REPRO_DEVICE_TIER env)
         self.device_tier = (device_tier_default() if device_tier is None
@@ -129,6 +137,21 @@ class AnnaKVS:
         self._cache_index: Dict[str, Set[str]] = defaultdict(set)
         self._cache_pushes: Dict[str, PlaneBuffer] = defaultdict(PlaneBuffer)
         self._hints: Dict[str, PlaneBuffer] = defaultdict(PlaneBuffer)
+        # pull-based telemetry: the plane counters mutate inside kernel
+        # launch paths, so the registry reads them lazily at snapshot —
+        # zero added cost on the hot planes
+        self.metrics.register_callback(
+            "kvs.reader.plane_reads", lambda: self.reader.plane_reads)
+        self.metrics.register_callback(
+            "kvs.reader.plane_keys", lambda: self.reader.plane_keys)
+        self.metrics.register_callback(
+            "kvs.reader.plane_object_fallbacks",
+            lambda: self.reader.plane_object_fallbacks)
+        for field in ("h2d_bytes", "d2h_bytes", "device_syncs"):
+            self.metrics.register_callback(
+                f"kvs.{field}",
+                lambda f=field: self.transfer_stats()[f],
+                reset_fn=self.reset_transfer_stats)
         for i in range(num_nodes):
             self.add_node(f"anna-{i}")
 
@@ -150,8 +173,22 @@ class AnnaKVS:
         assert node_id not in self.nodes
         self._owners_cache.clear()  # ring placement changes
         self._placement_epoch += 1
-        self.nodes[node_id] = StorageNode(node_id, self.registry,
-                                          device=self.device_tier)
+        node = StorageNode(node_id, self.registry, device=self.device_tier)
+        self.nodes[node_id] = node
+        pre = f"kvs.node.{node_id}."
+        self.metrics.register_callback(
+            pre + "puts", lambda n=node: n.puts,
+            reset_fn=lambda n=node: setattr(n, "puts", 0))
+        self.metrics.register_callback(
+            pre + "gets", lambda n=node: n.gets,
+            reset_fn=lambda n=node: setattr(n, "gets", 0))
+        self.metrics.register_callback(
+            pre + "keys", lambda n=node: len(n.store))
+        self.metrics.register_callback(
+            pre + "plane_keys", lambda n=node: n.engine.plane_keys)
+        self.metrics.register_callback(
+            pre + "materializations",
+            lambda n=node: n.engine.arena.materializations)
         for v in range(self.VNODES):
             bisect.insort(self._ring, (_hash(f"{node_id}#{v}"), node_id))
         # New owner: existing replicas re-gossip their keys so ownership
@@ -166,6 +203,7 @@ class AnnaKVS:
 
     def remove_node(self, node_id: str) -> None:
         node = self.nodes.pop(node_id)
+        self.metrics.unregister_prefix(f"kvs.node.{node_id}.")
         self._owners_cache.clear()  # ring placement changes
         self._placement_epoch += 1
         self._ring = [(h, n) for (h, n) in self._ring if n != node_id]
@@ -289,6 +327,11 @@ class AnnaKVS:
         sequential ``put`` loop they replace).
         """
         sync = self.sync_replication if sync is None else sync
+        tr = self.tracer
+        sp = None
+        if tr.enabled and tr.cur is not None:
+            sp = tr.start("kvs", "put_many", clock=clock or tr.cur.clock,
+                          tid=tr.cur.tid, parent=tr.cur, n_items=len(items))
         coord_batches: Dict[str, List[Tuple[str, Lattice]]] = defaultdict(list)
 
         def apply_batches() -> None:
@@ -307,6 +350,8 @@ class AnnaKVS:
             for owner in gossip_targets:
                 self.nodes[owner].inbox.add(key, value)
         apply_batches()
+        if sp is not None:
+            tr.finish(sp)
         return len(items)
 
     def get(
@@ -399,6 +444,11 @@ class AnnaKVS:
         clock advances ONCE for the whole batch, sized by total payload
         bytes.
         """
+        tr = self.tracer
+        sp = None
+        if tr.enabled and tr.cur is not None:
+            sp = tr.start("kvs", "get_many", clock=clock or tr.cur.clock,
+                          tid=tr.cur.tid, parent=tr.cur, n_keys=len(keys))
         chosen: List[Tuple[str, StorageNode]] = []
         for key in dict.fromkeys(keys):
             owners = self._owners(key)
@@ -426,6 +476,8 @@ class AnnaKVS:
         if clock is not None:
             clock.advance(
                 self.profile.sample(self.profile.kvs_op, batch.byte_size()))
+        if sp is not None:
+            tr.finish(sp, bytes=batch.byte_size())
         return batch
 
     def get_merged_many(
@@ -455,6 +507,12 @@ class AnnaKVS:
         device tier a warmed read is one fused gather-reduce launch
         per slab group with zero host syncs).
         """
+        tr = self.tracer
+        sp = None
+        if tr.enabled and tr.cur is not None:
+            sp = tr.start("kvs", "get_merged_many",
+                          clock=clock or tr.cur.clock, tid=tr.cur.tid,
+                          parent=tr.cur, n_keys=len(keys))
         ukeys = tuple(dict.fromkeys(keys))
         sig = (self._placement_epoch,
                tuple((nid, node.alive, node.engine.layout_version)
@@ -481,6 +539,8 @@ class AnnaKVS:
         if clock is not None:
             clock.advance(
                 self.profile.sample(self.profile.kvs_op, batch.byte_size()))
+        if sp is not None:
+            tr.finish(sp, bytes=batch.byte_size())
         return batch
 
     def get_merged_many_values(
@@ -574,17 +634,41 @@ class AnnaKVS:
             for nid, n in self.nodes.items()
         }
 
-    def transfer_stats(self) -> Dict[str, int]:
-        """Aggregate host↔device transfer telemetry across the tier
-        (storage nodes + the read-reduction engine).  All zeros on the
-        host-numpy path; on the device tier, steady-state gossip and
-        warmed batched reads must keep ``device_syncs`` flat."""
-        engines = [n.engine for n in self.nodes.values()] + [self.reader]
-        return {
-            "h2d_bytes": sum(e.h2d_bytes for e in engines),
-            "d2h_bytes": sum(e.d2h_bytes for e in engines),
-            "device_syncs": sum(e.device_syncs for e in engines),
+    def transfer_stats(self) -> Dict[str, object]:
+        """Host↔device transfer telemetry across the tier.
+
+        Summed totals at the top level (all zeros on the host-numpy
+        path; on the device tier, steady-state gossip and warmed batched
+        reads must keep ``device_syncs`` flat), plus a ``per_engine``
+        breakdown keyed by storage-node id and ``"reader"`` (the
+        R-replica read-reduction engine) so regressions localize to the
+        engine that caused them.  :meth:`reset_transfer_stats` windows
+        measurements without rebuilding the tier."""
+        per_engine = {
+            nid: {
+                "h2d_bytes": n.engine.h2d_bytes,
+                "d2h_bytes": n.engine.d2h_bytes,
+                "device_syncs": n.engine.device_syncs,
+            }
+            for nid, n in self.nodes.items()
         }
+        per_engine["reader"] = {
+            "h2d_bytes": self.reader.h2d_bytes,
+            "d2h_bytes": self.reader.d2h_bytes,
+            "device_syncs": self.reader.device_syncs,
+        }
+        out: Dict[str, object] = {
+            field: sum(stats[field] for stats in per_engine.values())
+            for field in ("h2d_bytes", "d2h_bytes", "device_syncs")
+        }
+        out["per_engine"] = per_engine
+        return out
+
+    def reset_transfer_stats(self) -> None:
+        """Zero the transfer counters on every engine in the tier."""
+        for n in self.nodes.values():
+            n.engine.reset_transfer_stats()
+        self.reader.reset_transfer_stats()
 
     def total_keys(self) -> int:
         keys: Set[str] = set()

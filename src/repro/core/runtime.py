@@ -64,6 +64,8 @@ from .kvs import AnnaKVS
 from .lattices import LamportClock, Lattice, LWWLattice, encapsulate
 from .netsim import NetworkProfile, VirtualClock
 from .scheduler import Scheduler, SchedulingPolicy
+from ..obs import MetricsRegistry, Tracer, counter_shim
+from ..obs.trace import Span
 
 
 @dataclasses.dataclass
@@ -117,6 +119,10 @@ class DagRun:
     state: str = RUN_RUNNING
     value: Any = None
     error: Optional[BaseException] = None
+    # root trace span when this run is sampled (None otherwise); opened
+    # at submit on the run's virtual clock, closed at finalize so its
+    # duration IS the run's reported end-to-end latency
+    span: Optional[Span] = None
     # user-code exception (not infra): surfaced as-is, never retried
     user_failed: bool = False
     result: Optional[DagResult] = None
@@ -242,6 +248,8 @@ class Cluster:
         straggler_speculation: bool = False,
         tick_jitter: float = 0.0,
         read_prefetch: bool = True,
+        metrics: Optional[MetricsRegistry] = None,
+        tracer: Optional[Tracer] = None,
     ):
         self.profile = profile or NetworkProfile(seed=seed)
         self.rng = random.Random(seed)
@@ -254,8 +262,14 @@ class Cluster:
         # batched read-repair fetch of a function's reference keys before
         # user code runs (off => per-key scalar miss path, for A/B runs)
         self.read_prefetch = read_prefetch
+        # one observability plane per deployment: the registry and tracer
+        # are shared with the KVS tier, every cache and the scheduler
+        # (env default: REPRO_TRACE / REPRO_TRACE_SAMPLE)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer.from_env()
         self.kvs = AnnaKVS(
-            num_nodes=n_kvs_nodes, replication=replication, profile=self.profile
+            num_nodes=n_kvs_nodes, replication=replication,
+            profile=self.profile, metrics=self.metrics, tracer=self.tracer,
         )
         self.caches: Dict[str, ExecutorCache] = {}
         self.executors: Dict[str, Executor] = {}
@@ -280,14 +294,30 @@ class Cluster:
         # per-request warms (single-run groups) and the cross-request
         # fused fetches count here — cross-request batching shows up as
         # FEWER batches per request, which is what the serving
-        # benchmarks compare against the scalar hop count.
-        self.engine_turns = 0
-        self.fused_prefetch_batches = 0
-        self.fused_prefetch_keys = 0
-        self.batched_response_puts = 0
+        # benchmarks compare against the scalar hop count.  The counters
+        # live in the shared registry; the counter_shim properties below
+        # keep the legacy attribute API (``cluster.engine_turns`` etc.).
+        m = self.metrics
+        self._m_turns = m.counter("engine.turns")
+        self._m_fused_batches = m.counter("engine.fused_prefetch_batches")
+        self._m_fused_keys = m.counter("engine.fused_prefetch_keys")
+        self._m_response_puts = m.counter("engine.batched_response_puts")
+        self._m_submitted = m.counter("engine.runs_submitted")
+        self._m_completed = m.counter("engine.runs_completed")
+        self._m_failed = m.counter("engine.runs_failed")
+        self._m_restarts = m.counter("engine.run_restarts")
+        self._m_run_latency = m.histogram("engine.run_latency_s")
+        m.register_callback("engine.in_flight", lambda: len(self._runs))
         # run_id -> warm cost charged by _fused_prefetch this turn,
         # folded back into the invocation window by _invoke_trigger
         self._warm_charged: Dict[str, float] = {}
+
+    # legacy engine counters, registry-backed (benches/tests assert on
+    # these attribute names; writes pass through to the Counter objects)
+    engine_turns = counter_shim("_m_turns")
+    fused_prefetch_batches = counter_shim("_m_fused_batches")
+    fused_prefetch_keys = counter_shim("_m_fused_keys")
+    batched_response_puts = counter_shim("_m_response_puts")
 
     # -- elasticity ---------------------------------------------------------------
     def add_vm(self, executors_per_vm: int = 3) -> List[str]:
@@ -313,6 +343,7 @@ class Cluster:
             self.scheduler.remove_executor(eid)
             del self.executors[eid]
         self.caches.pop(f"cache-{vm_id}", None)
+        self.metrics.unregister_prefix(f"cache.cache-{vm_id}.")
         self._refresh_registry()
 
     def _refresh_registry(self) -> None:
@@ -471,6 +502,14 @@ class Cluster:
             response_key=response_key,
         )
         run.t0 = run.clock.now
+        if self.tracer.sample_run():
+            # root span on the run's own virtual timeline: closed at
+            # finalize, so duration == DagResult.latency exactly
+            run.span = self.tracer.start(
+                "engine", f"dag.{dag.name}", t=run.t0, clock=run.clock,
+                tid=run.run_id, run_id=run.run_id,
+            )
+        self._m_submitted.inc()
         self._begin_attempt(run, first=True)
         self._runs[run.run_id] = run
         return run
@@ -480,6 +519,7 @@ class Cluster:
         hop, function state machine reset (§4.5 whole-DAG re-execution)."""
         if not first:
             run.attempt += 1
+            self._m_restarts.inc()
         self._dag_seq += 1
         run.session = SessionContext(
             dag_id=f"{run.dag.name}-{self._dag_seq}", mode=run.mode
@@ -531,53 +571,73 @@ class Cluster:
         if not triggers:
             return 0
         self.engine_turns += 1
-        # batched scheduling: one entry point call for the whole wave.
-        # If it raises (a trigger with no schedulable executor, a buggy
-        # custom policy), fall back to per-trigger picks so ONLY the
-        # offending runs fail — exclude sets are per-run, so one run's
-        # unschedulable trigger must not kill the healthy wave.
-        trigger_specs = [(fn, run.args_by_fn.get(fn, ()), run.exclude)
-                         for run, fn, _args, _att in triggers]
-        try:
-            picks: List[Optional[str]] = list(
-                self.scheduler.schedule_ready(trigger_specs))
-        except Exception:
-            picks = []
-            for (run, fn, _args, attempt), spec in zip(triggers,
-                                                       trigger_specs):
-                try:
-                    picks.append(self.scheduler.pick_executor(
-                        spec[0], spec[1], exclude=spec[2]))
-                except Exception as e:
-                    picks.append(None)
-                    if run.state == RUN_RUNNING and run.attempt == attempt:
-                        self._fail_user(run, e)  # propagate as-is, no retry
-        plans: List[Tuple[DagRun, str, Tuple[Any, ...], str, int]] = []
-        for (run, fn, args, attempt), eid in zip(triggers, picks):
-            if eid is None:
-                continue
-            run.schedule[fn] = eid
-            executor = self.executors[eid]
-            # executor->executor trigger carries session metadata (§5.3)
-            meta_bytes = run.session.metadata_bytes() + 256
-            run.clock.advance(self.profile.sample(self.profile.tcp, meta_bytes))
-            if not executor.has_function(fn):
-                # cold executor: pull + deserialize the function from Anna
-                try:
-                    executor.pin_function(fn, self.scheduler.load_function(fn))
-                except Exception as e:  # function vanished from the KVS
-                    self._fail_user(run, e)
+        tr = self.tracer
+        # one engine-turn span on the tracer's WALL timeline (a turn
+        # serves many runs, so no single virtual clock applies); opened
+        # only when at least one sampled run participates, and set as
+        # the active context so cross-run infrastructure spans (batched
+        # scheduling, fused plane launches) attach under it
+        turn_span = None
+        if tr.enabled and any(r.span is not None for r, _f, _a, _t in triggers):
+            turn_span = tr.start("engine", "step", tid="engine",
+                                 turn=self.engine_turns,
+                                 n_triggers=len(triggers))
+        with tr.use(turn_span):
+            # batched scheduling: one entry point call for the whole wave.
+            # If it raises (a trigger with no schedulable executor, a buggy
+            # custom policy), fall back to per-trigger picks so ONLY the
+            # offending runs fail — exclude sets are per-run, so one run's
+            # unschedulable trigger must not kill the healthy wave.
+            trigger_specs = [(fn, run.args_by_fn.get(fn, ()), run.exclude)
+                             for run, fn, _args, _att in triggers]
+            try:
+                picks: List[Optional[str]] = list(
+                    self.scheduler.schedule_ready(trigger_specs))
+            except Exception:
+                picks = []
+                for (run, fn, _args, attempt), spec in zip(triggers,
+                                                           trigger_specs):
+                    try:
+                        picks.append(self.scheduler.pick_executor(
+                            spec[0], spec[1], exclude=spec[2]))
+                    except Exception as e:
+                        picks.append(None)
+                        if run.state == RUN_RUNNING and run.attempt == attempt:
+                            self._fail_user(run, e)  # propagate as-is, no retry
+            plans: List[Tuple[DagRun, str, Tuple[Any, ...], str, int]] = []
+            for (run, fn, args, attempt), eid in zip(triggers, picks):
+                if eid is None:
                     continue
-                run.clock.advance(self.profile.sample(self.profile.kvs_op, 1024))
-            plans.append((run, fn, args, eid, attempt))
-        if self.read_prefetch:
-            self._fused_prefetch(plans)
-        for run, fn, args, eid, attempt in plans:
-            # skip triggers whose run restarted/failed earlier this turn
-            if run.state != RUN_RUNNING or run.attempt != attempt:
-                continue
-            self._invoke_trigger(run, fn, args, eid)
-        self._finalize_completed()
+                run.schedule[fn] = eid
+                executor = self.executors[eid]
+                t_dispatch = run.clock.now
+                # executor->executor trigger carries session metadata (§5.3)
+                meta_bytes = run.session.metadata_bytes() + 256
+                run.clock.advance(self.profile.sample(self.profile.tcp, meta_bytes))
+                if not executor.has_function(fn):
+                    # cold executor: pull + deserialize the function from Anna
+                    try:
+                        executor.pin_function(fn, self.scheduler.load_function(fn))
+                    except Exception as e:  # function vanished from the KVS
+                        self._fail_user(run, e)
+                        continue
+                    run.clock.advance(self.profile.sample(self.profile.kvs_op, 1024))
+                plans.append((run, fn, args, eid, attempt))
+                if run.span is not None:
+                    # trigger-hop + cold-pin window on the run's timeline
+                    tr.add_complete("scheduler", f"dispatch.{fn}", t_dispatch,
+                                    run.clock.now, tid=run.run_id,
+                                    parent=run.span, executor=eid)
+            if self.read_prefetch:
+                self._fused_prefetch(plans)
+            for run, fn, args, eid, attempt in plans:
+                # skip triggers whose run restarted/failed earlier this turn
+                if run.state != RUN_RUNNING or run.attempt != attempt:
+                    continue
+                self._invoke_trigger(run, fn, args, eid)
+            self._finalize_completed()
+        if turn_span is not None:
+            tr.finish(turn_span)
         return len(triggers)
 
     def _fused_prefetch(
@@ -630,7 +690,10 @@ class Cluster:
                         continue
                     t_warm = run.clock.now
                     try:
-                        cache.read_many(keys, clocks=[run.clock])
+                        # parent the cache/KVS spans under the owning
+                        # run (no-op for unsampled runs)
+                        with self.tracer.use(run.span):
+                            cache.read_many(keys, clocks=[run.clock])
                         self.fused_prefetch_batches += 1
                         self.fused_prefetch_keys += len(keys)
                         self._warm_charged[run.run_id] = (
@@ -669,21 +732,34 @@ class Cluster:
         self, run: DagRun, fn: str, args: Tuple[Any, ...], eid: str
     ) -> None:
         executor = self.executors[eid]
+        tr = self.tracer
         # the pre-engine executor charged the read-set warm INSIDE the
         # invocation window (invoke ran warm_read_set itself); the
         # engine warmed earlier in the turn, so fold that cost back in —
         # straggler stats and the speculation trigger stay equivalent
         warm = self._warm_charged.pop(run.run_id, 0.0)
         t_before = run.clock.now - warm
+        inv_span = None
+        if run.span is not None:
+            # DAG-topology edges ride the span: ``deps`` names the
+            # upstream functions whose invoke spans feed this one
+            inv_span = tr.start(
+                "engine", f"invoke.{fn}", t=t_before, clock=run.clock,
+                tid=run.run_id, parent=run.span, executor=eid,
+                deps=list(run.dag.upstream(fn)),
+            )
         try:
             # prefetch=False: the engine already fused this trigger's
             # read-set warm into the per-cache batch (or skipped it,
             # exactly as the per-invocation warm rule would)
-            result = executor.invoke(
-                fn, args, run.session, self.caches, clock=run.clock,
-                tracker=self.tracker, prefetch=False,
-            )
+            with tr.use(inv_span):
+                result = executor.invoke(
+                    fn, args, run.session, self.caches, clock=run.clock,
+                    tracker=self.tracker, prefetch=False,
+                )
         except (DagRestart, ExecutorFailure, CacheFailure) as e:
+            if inv_span is not None:
+                tr.finish(inv_span, error=type(e).__name__)
             self._fail_attempt(run, e)
             return
         except Exception as e:
@@ -691,6 +767,8 @@ class Cluster:
             # THIS run and surface the original exception through its
             # future / sync wrapper.  It must not escape step(): the
             # other in-flight runs' triggers still need invoking.
+            if inv_span is not None:
+                tr.finish(inv_span, error=type(e).__name__)
             self._fail_user(run, e)
             return
         elapsed = run.clock.now - t_before
@@ -713,18 +791,26 @@ class Cluster:
                         tracker=self.tracker, prefetch=self.read_prefetch,
                     )
                 except (DagRestart, ExecutorFailure, CacheFailure) as e:
+                    if inv_span is not None:
+                        tr.finish(inv_span, error=type(e).__name__)
                     self._fail_attempt(run, e)
                     return
                 except Exception as e:
                     # user-code error on the speculative copy (§4.5:
                     # idempotence is the user's concern): fail this run
                     # as-is, exactly like the primary-invoke path
+                    if inv_span is not None:
+                        tr.finish(inv_span, error=type(e).__name__)
                     self._fail_user(run, e)
                     return
                 run.speculated += 1
                 if spec_clock.now < run.clock.now:
                     run.clock.now = spec_clock.now
                     result = alt_result
+        if inv_span is not None:
+            # closed AFTER a possible speculation fold-back, so the span
+            # covers exactly the latency the run was charged
+            tr.finish(inv_span)
         self._record_latency(fn, elapsed)
         run.complete_fn(fn, result)
 
@@ -735,6 +821,10 @@ class Cluster:
         run.error = err
         run.user_failed = True
         run.state = RUN_FAILED
+        self._m_failed.inc()
+        if run.span is not None:
+            self.tracer.finish(run.span, t=run.clock.now, status="failed")
+            run.span = None
         self._runs.pop(run.run_id, None)
         self._warm_charged.pop(run.run_id, None)
 
@@ -752,6 +842,11 @@ class Cluster:
         }
         if run.attempt >= self.max_retries:
             run.state = RUN_FAILED
+            self._m_failed.inc()
+            if run.span is not None:
+                self.tracer.finish(run.span, t=run.clock.now,
+                                   status="failed")
+                run.span = None
             self._runs.pop(run.run_id, None)
         else:
             self._begin_attempt(run)
@@ -780,7 +875,12 @@ class Cluster:
             )
             if run.response_key is not None:
                 if len(completed) == 1:
+                    t_resp = run.clock.now
                     self.put(run.response_key, run.value, clock=run.clock)
+                    if run.span is not None:
+                        self.tracer.add_complete(
+                            "kvs", "response_put", t_resp, run.clock.now,
+                            tid=run.run_id, parent=run.span)
                 else:
                     responses.append((run, self._client_lattice(run.value)))
         if responses:
@@ -790,8 +890,13 @@ class Cluster:
             )
             self.batched_response_puts += 1
             for run, lat in responses:
+                t_resp = run.clock.now
                 run.clock.advance(
                     self.profile.sample(self.profile.kvs_op, lat.byte_size()))
+                if run.span is not None:
+                    self.tracer.add_complete(
+                        "kvs", "response_put", t_resp, run.clock.now,
+                        tid=run.run_id, parent=run.span, batched=True)
         for run in completed:
             run.clock.advance(self.profile.sample(self.profile.tcp, 256))
             if self.tracker is not None:
@@ -802,6 +907,14 @@ class Cluster:
                 run.value, run.clock.now - run.t0, dict(run.schedule),
                 retries=run.attempt, speculated=run.speculated,
             )
+            self._m_completed.inc()
+            self._m_run_latency.observe(run.result.latency)
+            if run.span is not None:
+                # root closes at the SAME virtual instant the latency is
+                # computed from: span.duration == DagResult.latency
+                self.tracer.finish(run.span, t=run.clock.now, status="done",
+                                   retries=run.attempt)
+                run.span = None
             self._runs.pop(run.run_id, None)
 
     def _evict_snapshots(self, session: SessionContext) -> None:
@@ -839,6 +952,56 @@ class Cluster:
                 if not ex.has_function(fn_name):
                     ex.pin_function(fn_name, self.scheduler.load_function(fn_name))
         return self.rng.choice(cands) if cands else None
+
+    # -- observability (§4.4 substrate) ------------------------------------------------
+    def telemetry(self) -> Dict[str, Any]:
+        """One consistent snapshot of the deployment's registry: engine
+        counters + run-latency quantiles, per-cache hit/miss, per-node
+        KVS traffic, and the plane/transfer telemetry (pulled lazily
+        from the arenas)."""
+        return self.metrics.snapshot()
+
+    def reset_telemetry(self) -> None:
+        """Zero counters/histograms and the tier's transfer stats so
+        benches/tests can window measurements on a live deployment."""
+        self.metrics.reset()
+        self.kvs.reset_transfer_stats()
+
+    def publish_telemetry(self, now: Optional[float] = None,
+                          window: float = 1.0,
+                          pending_boots: int = 0) -> None:
+        """Publish the registry snapshot through the KVS as the
+        ``__metrics_*`` keys the §4.4 monitoring engine consumes.
+
+        ``MonitoringEngine.decide()`` reads ONLY these keys: utilization
+        and cache hit rate directly, arrival/completion rates derived
+        from the cumulative counters between successive publishes.
+        ``now`` names the publishing timeline (a driving harness's
+        virtual time); defaults to the tracer's wall clock.
+        """
+        if now is None:
+            now = self.tracer.wall()
+        utils = [ex.utilization(window) for ex in self.executors.values()]
+        snap = self.metrics.snapshot()
+        hits = sum(v for k, v in snap.items()
+                   if k.startswith("cache.") and k.endswith(".hits"))
+        misses = sum(v for k, v in snap.items()
+                     if k.startswith("cache.") and k.endswith(".misses")
+                     and not k.endswith(".batched_misses"))
+        values = {
+            "time": now,
+            "avg_util": sum(utils) / len(utils) if utils else 0.0,
+            "arrivals": snap.get("engine.runs_submitted", 0),
+            "completions": snap.get("engine.runs_completed", 0),
+            "in_flight": snap.get("engine.in_flight", 0),
+            "pending_boots": pending_boots,
+            "cache_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+            "run_latency_p50": snap.get("engine.run_latency_s.p50", 0.0),
+            "run_latency_p99": snap.get("engine.run_latency_s.p99", 0.0),
+        }
+        for key, value in values.items():
+            self.kvs.put(f"__metrics_{key}", self._client_lattice(value),
+                         sync=True)
 
     # -- background work ("periodically" in the paper) -------------------------------
     def tick(self, defer_prob: Optional[float] = None) -> None:

@@ -76,11 +76,15 @@ class Scheduler:
         policy: Optional[SchedulingPolicy] = None,
         seed: int = 0,
         pin_replicas: int = 2,
+        tracer=None,
     ):
         self.scheduler_id = scheduler_id
         self.kvs = kvs
         self.executors = executors
         self.profile = profile
+        # shares the deployment's tracer (the KVS carries it) so batched
+        # scheduling waves show up as scheduler-layer spans
+        self.tracer = tracer if tracer is not None else kvs.tracer
         self.policy = policy or LocalityPolicy()
         self.rng = random.Random(seed)
         self.pin_replicas = pin_replicas
@@ -176,10 +180,12 @@ class Scheduler:
         batched is the entry point itself: one scheduler hop serves the
         whole wave instead of one per function.
         """
-        return [
-            self.pick_executor(fn_name, args, exclude=exclude)
-            for fn_name, args, exclude in triggers
-        ]
+        with self.tracer.span("scheduler", "schedule_ready",
+                              n_triggers=len(triggers)):
+            return [
+                self.pick_executor(fn_name, args, exclude=exclude)
+                for fn_name, args, exclude in triggers
+            ]
 
     def schedule_dag(
         self,

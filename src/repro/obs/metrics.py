@@ -1,0 +1,281 @@
+"""Metrics registry: named counters, gauges and streaming-quantile
+histograms (paper §4.4 — the signals executors/schedulers publish).
+
+Design constraints, in order:
+
+* **hot-path cost ≈ attribute arithmetic.**  A :class:`Counter` is one
+  mutable ``value`` slot; the data-plane code increments it exactly the
+  way it incremented the old ad-hoc ``self.foo += 1`` attributes.  The
+  existing attribute APIs stay available through :func:`counter_shim`
+  properties, so counter-asserting tests keep working unchanged.
+* **telemetry that already exists is pulled, not pushed.**  The arena /
+  merge-engine counters (``plane_keys``, ``materializations``,
+  ``h2d_bytes``, ``device_syncs``, …) are mutated inside kernels' launch
+  paths; wrapping them would tax the planes for nothing.  A
+  :class:`CallbackGauge` reads them lazily at snapshot time — the
+  disabled-path cost of registering one is zero.
+* **histograms are log-bucketed** (4 buckets per octave, ~19% wide), so
+  streaming p50/p95/p99 costs O(1) memory per metric and one
+  ``math.log`` per observation.  Exact min/max bound the interpolation.
+
+``MetricsRegistry.snapshot()`` is the one consistent read story: a flat
+``{name: value}`` dict (histograms expand to ``name.count`` /
+``name.p50`` / …); ``reset()`` is the matching write story (counters and
+histograms zero; callback gauges reset through their optional reset
+hook, or stay live views).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, List, Optional
+
+__all__ = [
+    "CallbackGauge",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "counter_shim",
+]
+
+
+class Counter:
+    """Monotonic-by-convention counter; one mutable slot, no locking
+    (the engine is single-process, like the rest of the runtime)."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def reset(self) -> None:
+        self.value = 0
+
+    def read(self) -> Any:
+        return self.value
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+    def reset(self) -> None:
+        self.value = 0.0
+
+    def read(self) -> Any:
+        return self.value
+
+
+class CallbackGauge:
+    """Gauge whose value is computed at snapshot time (zero hot-path
+    cost: the instrumented object keeps mutating its own plain
+    attribute, and the registry pulls it lazily)."""
+
+    __slots__ = ("name", "fn", "reset_fn")
+
+    def __init__(self, name: str, fn: Callable[[], Any],
+                 reset_fn: Optional[Callable[[], None]] = None):
+        self.name = name
+        self.fn = fn
+        self.reset_fn = reset_fn
+
+    @property
+    def value(self) -> Any:
+        return self.fn()
+
+    def reset(self) -> None:
+        if self.reset_fn is not None:
+            self.reset_fn()
+
+    def read(self) -> Any:
+        return self.fn()
+
+
+class Histogram:
+    """Log-bucketed histogram with streaming quantiles.
+
+    Buckets are powers of ``GROWTH`` (2^(1/4): four buckets per octave,
+    each ~19% wide), so any positive observation lands in O(1) and
+    p50/p95/p99 interpolate to within one bucket width.  Exact ``min``
+    and ``max`` are kept so the tail quantiles never report outside the
+    observed range.  Non-positive observations count in a dedicated
+    zero bucket (they sort before every positive bucket).
+    """
+
+    GROWTH = 2.0 ** 0.25
+    _LN_GROWTH = math.log(GROWTH)
+
+    __slots__ = ("name", "buckets", "zero", "count", "total", "vmin", "vmax")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.buckets: Dict[int, int] = {}
+        self.zero = 0
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+    def observe(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        if v < self.vmin:
+            self.vmin = v
+        if v > self.vmax:
+            self.vmax = v
+        if v <= 0.0:
+            self.zero += 1
+            return
+        idx = int(math.floor(math.log(v) / self._LN_GROWTH))
+        self.buckets[idx] = self.buckets.get(idx, 0) + 1
+
+    def quantile(self, q: float) -> float:
+        """Streaming quantile: geometric midpoint of the bucket holding
+        the q-th observation, clamped to the exact observed range."""
+        if self.count == 0:
+            return float("nan")
+        target = q * self.count
+        seen = self.zero
+        if target <= seen:
+            return min(0.0, self.vmin)
+        for idx in sorted(self.buckets):
+            seen += self.buckets[idx]
+            if target <= seen:
+                lo = self.GROWTH ** idx
+                mid = lo * (self.GROWTH ** 0.5)
+                return max(self.vmin, min(self.vmax, mid))
+        return self.vmax
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else float("nan")
+
+    def reset(self) -> None:
+        self.buckets.clear()
+        self.zero = 0
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+    def read(self) -> Dict[str, float]:
+        if self.count == 0:
+            return {"count": 0}
+        return {
+            "count": self.count,
+            "sum": self.total,
+            "mean": self.mean,
+            "min": self.vmin,
+            "max": self.vmax,
+            "p50": self.quantile(0.50),
+            "p95": self.quantile(0.95),
+            "p99": self.quantile(0.99),
+        }
+
+
+class MetricsRegistry:
+    """Name -> metric map with get-or-create accessors.
+
+    One registry is shared by a whole deployment (the cluster engine,
+    the KVS tier, every executor cache), so ``snapshot()`` is the single
+    consistent view of the system — the substrate the §4.4 monitoring
+    loop publishes through the KVS.
+    """
+
+    def __init__(self) -> None:
+        self._metrics: Dict[str, Any] = {}
+
+    # -- get-or-create accessors ------------------------------------------
+    def _get(self, name: str, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            m = cls(name)
+            self._metrics[name] = m
+        elif not isinstance(m, cls):
+            raise TypeError(
+                f"metric {name!r} already registered as "
+                f"{type(m).__name__}, not {cls.__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def register_callback(
+        self, name: str, fn: Callable[[], Any],
+        reset_fn: Optional[Callable[[], None]] = None,
+    ) -> CallbackGauge:
+        """(Re-)register a lazily-evaluated gauge.  Re-registering an
+        existing name replaces the callback (membership churn: a node
+        id can come back with a fresh object)."""
+        g = CallbackGauge(name, fn, reset_fn)
+        self._metrics[name] = g
+        return g
+
+    def unregister(self, name: str) -> None:
+        self._metrics.pop(name, None)
+
+    def unregister_prefix(self, prefix: str) -> None:
+        for name in [n for n in self._metrics if n.startswith(prefix)]:
+            del self._metrics[name]
+
+    # -- the snapshot / reset story ---------------------------------------
+    def names(self) -> List[str]:
+        return sorted(self._metrics)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Flat, sorted ``{name: value}`` view; histograms expand to
+        ``name.count`` / ``name.p50`` / … sub-entries."""
+        out: Dict[str, Any] = {}
+        for name in sorted(self._metrics):
+            val = self._metrics[name].read()
+            if isinstance(val, dict):
+                for sub, v in val.items():
+                    out[f"{name}.{sub}"] = v
+            else:
+                out[name] = val
+        return out
+
+    def reset(self) -> None:
+        """Zero every counter/histogram (and callback gauges that
+        declared a reset hook) — the windowing story for benches/tests
+        that measure deltas without rebuilding the deployment."""
+        for m in self._metrics.values():
+            m.reset()
+
+
+def counter_shim(attr: str, doc: str = "") -> property:
+    """Property that exposes a registry metric's ``.value`` under the
+    legacy ad-hoc attribute name.
+
+    The instrumented class keeps its public counter API bit-for-bit
+    (``cluster.engine_turns += 1``, ``cache.hits == 3`` in tests) while
+    the storage moves into the shared registry: ``attr`` names the
+    instance slot holding the :class:`Counter`/:class:`Gauge` object.
+    """
+
+    def fget(self):
+        return getattr(self, attr).value
+
+    def fset(self, v):
+        getattr(self, attr).value = v
+
+    return property(fget, fset, doc=doc or f"registry shim over {attr!r}")
