@@ -10,11 +10,14 @@ combine on a 2-VM x 3-executor cluster) open-loop at in-flight ∈
 {1, 4, 16} and records wall-clock requests/s plus the batching
 telemetry.  Per request, ``preprocess`` reads the request's input
 shards from the KVS via ``CloudburstReference`` (the paper's client
-flow: put the input, pass a reference) and ``model`` applies a jitted
+flow: put the input, pass a reference) and ``model`` applies a numpy
 classifier head over KVS-resident weights — a calibrated-cost stand-in
 for the fig8 LM stage, whose real smoke-scale compute (~34 ms/req)
-would otherwise drown the serving plane this bench measures (fig8
-itself keeps the real model).
+would otherwise drown the serving plane this bench measures.  The
+recorded rows carry ``model_stage: "numpy-standin"`` to make that
+explicit; the REAL forward-pass serving numbers live in
+``serve_models.py`` / ``BENCH_serve_models.json`` (and fig8 itself
+keeps the real model).
 
 What the telemetry must show (the acceptance bar):
 * requests/s at in-flight=16 >= 2x in-flight=1 — cross-request batching
@@ -164,6 +167,10 @@ def _serve(c: Cluster, n_requests: int, in_flight: int, shards: int,
 
     stats = {
         "in_flight": in_flight,
+        # which model stage produced this row: this bench runs the
+        # calibrated numpy stand-in, NOT a real forward pass (those are
+        # measured in serve_models.py)
+        "model_stage": "numpy-standin",
         "requests": n_requests,
         "elapsed_s": elapsed,
         "req_per_s": n_requests / elapsed,
@@ -233,6 +240,7 @@ def main(n_requests: int = 96, d: int = 2048, shards: int = 4,
 
     record = {
         "bench": "pipeline_throughput",
+        "model_stage": "numpy-standin",
         "n_requests": n_requests,
         "d": d,
         "shards": shards,

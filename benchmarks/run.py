@@ -14,22 +14,26 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
   gossip_plane  packed-plane replication wire vs per-key-object inbox
   read_plane  batched R-replica read-repair vs per-key get_merged
   pipeline_throughput  open-loop fig8 serving at in-flight {1,4,16}
+  serve_models  continuous-batched REAL forward passes vs per-request
+                dispatch + KVS-resident-params DAG serving
 
 ``--smoke`` runs the kernel micro-benches (kernels + merge_plane +
-gossip_plane + read_plane) plus a tiny pipeline_throughput pass — the
-fast perf-regression gate used by scripts/verify.sh (the merge/read
-benches cross-check winners against the Python oracle and assert on
-mismatch; pipeline_throughput asserts its cross-request batching
-telemetry).
+gossip_plane + read_plane) plus tiny pipeline_throughput and
+serve_models passes — the fast perf-regression gate used by
+scripts/verify.sh (the merge/read benches cross-check winners against
+the Python oracle and assert on mismatch; pipeline_throughput asserts
+its cross-request batching telemetry; serve_models asserts the >= 3x
+continuous-batching speedup, token bit-identity and the zero
+second-request weight-fetch invariant).
 
-``--check`` is the trajectory regression gate: it runs the read_plane
-and pipeline_throughput smoke benches fresh and compares their new
-records against the LAST matching entries already in
-``BENCH_read_plane.json`` / ``BENCH_pipeline_throughput.json``, failing
-on a >20% keys/s or req/s drop on the batched/plane paths (the
-jitter-prone per-key Python baselines are recorded but not gated).
-CI consumes the trajectory files through this gate instead of only
-appending to them.
+``--check`` is the trajectory regression gate: it runs the read_plane,
+pipeline_throughput and serve_models smoke benches fresh and compares
+their new records against the LAST matching entries already in
+``BENCH_read_plane.json`` / ``BENCH_pipeline_throughput.json`` /
+``BENCH_serve_models.json``, failing on a >20% keys/s, req/s or
+tokens/s drop on the batched/plane paths (the jitter-prone per-key
+Python baselines are recorded but not gated).  CI consumes the
+trajectory files through this gate instead of only appending to them.
 """
 
 from __future__ import annotations
@@ -45,7 +49,8 @@ CHECK_KEEP = 0.8
 # gated rate fields: the optimized paths; per-key python baselines are
 # informational (they swing with host load and would flake the gate)
 CHECK_FIELDS = ("batched_keys_per_s", "device_keys_per_s",
-                "plane_keys_per_s", "host_plane_keys_per_s", "req_per_s")
+                "plane_keys_per_s", "host_plane_keys_per_s", "req_per_s",
+                "tokens_per_s")
 
 _ROOT = Path(__file__).resolve().parent.parent
 
@@ -84,19 +89,23 @@ def _gate_rates(label: str, base: dict, fresh: dict) -> list:
 def check() -> None:
     """Run the recorded smoke benches fresh and fail on regression vs
     the last entries in the trajectory files."""
-    from . import pipeline_throughput, read_plane
+    from . import pipeline_throughput, read_plane, serve_models
 
     rp_path = _ROOT / "BENCH_read_plane.json"
     pt_path = _ROOT / "BENCH_pipeline_throughput.json"
+    sm_path = _ROOT / "BENCH_serve_models.json"
     base_rp = _last_smoke(_load_runs(rp_path))
     base_pt = _last_smoke(_load_runs(pt_path))
+    base_sm = _last_smoke(_load_runs(sm_path))
 
     print("name,us_per_call,derived")
     read_plane.main(smoke=True)
     pipeline_throughput.main(smoke=True)
+    serve_models.main(smoke=True)
 
     fresh_rp = _load_runs(rp_path)[-1]
     fresh_pt = _load_runs(pt_path)[-1]
+    fresh_sm = _load_runs(sm_path)[-1]
     failures: list = []
 
     base_cells = {
@@ -122,7 +131,15 @@ def check() -> None:
             f"pipeline_throughput in_flight={row.get('in_flight')}",
             base, row)
 
-    checked = bool(base_cells or base_rows)
+    base_sm_rows = {r.get("mode"): r for r in base_sm.get("rows", [])}
+    for row in fresh_sm.get("rows", []):
+        base = base_sm_rows.get(row.get("mode"))
+        if base is None:
+            continue
+        failures += _gate_rates(
+            f"serve_models mode={row.get('mode')}", base, row)
+
+    checked = bool(base_cells or base_rows or base_sm_rows)
     if failures:
         print("# PERF REGRESSION (>20% below recorded trajectory):",
               file=sys.stderr)
@@ -148,6 +165,7 @@ def main(argv=None) -> None:
         merge_plane,
         pipeline_throughput,
         read_plane,
+        serve_models,
         table2_anomalies,
     )
 
@@ -165,6 +183,7 @@ def main(argv=None) -> None:
             ("read_plane", lambda: read_plane.main(smoke=True)),
             ("pipeline_throughput",
              lambda: pipeline_throughput.main(smoke=True)),
+            ("serve_models", lambda: serve_models.main(smoke=True)),
         ]
     else:
         suites = [
@@ -181,6 +200,7 @@ def main(argv=None) -> None:
             ("gossip_plane", gossip_plane.main),
             ("read_plane", read_plane.main),
             ("pipeline_throughput", pipeline_throughput.main),
+            ("serve_models", serve_models.main),
         ]
     failed = []
     for name, fn in suites:

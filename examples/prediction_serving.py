@@ -1,10 +1,21 @@
-"""End-to-end driver: serve a small LM with batched requests through the
-full Cloudburst runtime (the paper's §6.3.1 case study, with a real model).
+"""End-to-end driver: serve a small LM through the full Cloudburst
+runtime (the paper's §6.3.1 case study, with a real model).
 
-The pipeline (preprocess -> model -> combine) is registered as a Cloudburst
-DAG; model weights are fetched from Anna into the executor's cache on first
-use (LDPC locality), so repeat requests on a warm executor skip the weight
-fetch — the latency histogram shows the cold/warm split.
+Three parts:
+
+1. the 3-stage pipeline (preprocess -> model -> combine) registered as
+   a Cloudburst DAG, with the model params published to the KVS and
+   fetched ONCE per VM through the executor cache (LDPC locality).
+   Requests are driven asynchronously (``call_dag_async`` futures) with
+   many in flight, so waves of same-model invocations dispatch as ONE
+   batched forward pass (``engine.batched_invokes``).
+2. continuous-batched generation through the ServingEngine: requests at
+   unequal prompt/output lengths join and leave the slot batch
+   mid-stream.
+3. the cluster's telemetry snapshot — the serving counters
+   (``serve.param_fetch_keys``, ``serve.batch_occupancy``,
+   ``engine.batched_invokes``) land in the same registry everything
+   else reports into.
 
 Run:  PYTHONPATH=src python examples/prediction_serving.py
 """
@@ -17,49 +28,73 @@ sys.path.insert(0, "src")
 import jax
 import numpy as np
 
-from repro.core import CloudburstReference, Cluster
+from repro.core import Cluster
 from repro.models import Model, get_config
 from repro.serve import Request, ServingEngine, make_pipeline_stages
+from repro.state import TensorStore
 
 
-def main(arch: str = "llama3.2-3b", n_requests: int = 32):
+def main(arch: str = "llama3.2-3b", n_requests: int = 24, in_flight: int = 8):
     cfg = get_config(arch, smoke=True)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    # --- part 1: the 3-stage pipeline as a Cloudburst DAG -------------------
-    preprocess, predict, combine = make_pipeline_stages(model, params)
+    # --- part 1: the pipeline as a DAG over KVS-resident params -----------
     cluster = Cluster(n_vms=2, executors_per_vm=3, seed=0)
+    ts = TensorStore(cluster.kvs)
+    ts.put_tree("models/example", jax.tree.map(np.asarray, params))
+    preprocess, stage, combine = make_pipeline_stages(
+        model, namespace="models/example", metrics=cluster.metrics)
     cluster.register(preprocess, "preprocess")
-    cluster.register(predict, "model")
+    cluster.register(stage, "model")
     cluster.register(combine, "combine")
     cluster.register_dag("pipeline", ["preprocess", "model", "combine"])
 
     rng = np.random.default_rng(0)
-    lats = []
-    for i in range(n_requests):
-        x = rng.integers(0, 1000, 48)
-        r = cluster.call_dag("pipeline", {"preprocess": (x,)})
-        lats.append(r.latency * 1e3)
-        if i < 3:
-            print(f"req {i}: {r.value}  ({r.latency * 1e3:.2f} ms)")
-    lats = np.asarray(lats)
-    print(f"\npipeline over Cloudburst: median {np.median(lats):.2f} ms, "
-          f"p99 {np.percentile(lats, 99):.2f} ms "
-          f"(cold first-request: {lats[0]:.2f} ms)")
+    inputs = [rng.integers(0, 1000, 48) for _ in range(n_requests)]
 
-    # --- part 2: batched generation through the serving engine ----------------
-    engine = ServingEngine(model, params, batch_size=4, max_len=64)
+    # async futures, several requests in flight: the engine batches the
+    # wave's model invocations into one padded forward pass
+    t0 = time.time()
+    futures = []
+    results = []
+    submitted = 0
+    pending = []
+    while submitted < n_requests or pending:
+        while submitted < n_requests and len(pending) < in_flight:
+            f = cluster.call_dag_async(
+                "pipeline", {"preprocess": (inputs[submitted],)})
+            futures.append(f)
+            pending.append(f)
+            submitted += 1
+        cluster.step()
+        pending = [f for f in pending if not f.done()]
+    results = [f.get() for f in futures]
+    dt = time.time() - t0
+    for i, r in enumerate(results[:3]):
+        print(f"req {i}: {r}")
+    print(f"\npipeline over Cloudburst: {n_requests} requests, "
+          f"{in_flight} in flight, {n_requests / dt:.1f} req/s wall")
+
+    # --- part 2: continuous-batched generation ----------------------------
+    engine = ServingEngine(model, params, max_slots=4, max_len=64,
+                           metrics=cluster.metrics)
     reqs = [Request(req_id=i,
-                    prompt=rng.integers(0, cfg.vocab, 24).astype(np.int32),
-                    max_new_tokens=8)
+                    prompt=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(4, 25))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(6, 17)))
             for i in range(12)]
     t0 = time.time()
     engine.generate(reqs)
     dt = time.time() - t0
     total = sum(len(r.out_tokens) for r in reqs)
-    print(f"batched generation: {len(reqs)} requests, {total} tokens "
+    print(f"continuous batching: {len(reqs)} requests, {total} tokens "
           f"in {dt:.2f}s ({total / dt:.1f} tok/s), stats={engine.stats}")
+
+    # --- part 3: one registry, every layer --------------------------------
+    print("telemetry snapshot (serving + engine + storage):")
+    for name, value in sorted(cluster.telemetry().items()):
+        print(f"  {name} = {value}")
 
 
 if __name__ == "__main__":

@@ -49,4 +49,15 @@ fi
 # telemetry) so each verify run leaves a readable observability record
 printf '%s\n' "$qs_out" | sed -n '/^telemetry snapshot:/,/^DSC mode/p' | sed '$d'
 
+echo "== examples/prediction_serving.py =="
+if ! ps_out=$(python examples/prediction_serving.py); then
+    echo "verify: FAILED — examples/prediction_serving.py errored (the" >&2
+    echo "serving example is the continuous-batching API contract:" >&2
+    echo "KVS-resident params + batched DAG waves + slot-churn decode)" >&2
+    exit 1
+fi
+# the serving counters prove the batched paths actually ran
+printf '%s\n' "$ps_out" | grep -E \
+    '^(pipeline over Cloudburst|continuous batching|  (engine\.batched|serve\.))'
+
 echo "verify: OK"

@@ -71,6 +71,13 @@ class UserLibrary:
     def get_id(self) -> str:
         return self._invocation_id
 
+    @property
+    def vm_id(self) -> str:
+        """The VM this invocation runs on.  Functions that memoize
+        VM-local state (e.g. device-resident model params fetched once
+        per VM) key their memo on this."""
+        return self._executor.vm_id
+
 
 class Executor:
     """One executor process.  ``vm_id`` groups executors sharing a cache."""
@@ -139,6 +146,38 @@ class Executor:
         func = fn if fn is not None else self.pinned.get(fn_name)
         if func is None:
             raise KeyError(f"function {fn_name!r} not pinned at {self.executor_id}")
+        userlib, resolved = self.resolve_invocation(
+            fn_name, args, session, caches, clock=clock, tracker=tracker,
+            prefetch=prefetch,
+        )
+        t0 = time.perf_counter()
+        if _wants_userlib(func):
+            result = func(userlib, *resolved)
+        else:
+            result = func(*resolved)
+        elapsed = (time.perf_counter() - t0) * self.slow_factor
+        if clock is not None:
+            clock.advance(elapsed)
+        self.record_invocation(elapsed)
+        return result
+
+    def resolve_invocation(
+        self,
+        fn_name: str,
+        args: Tuple[Any, ...],
+        session: SessionContext,
+        caches: Dict[str, ExecutorCache],
+        clock: Optional[VirtualClock] = None,
+        tracker: Optional[AnomalyTracker] = None,
+        prefetch: bool = True,
+    ) -> Tuple[UserLibrary, List[Any]]:
+        """Everything :meth:`invoke` does BEFORE user code runs: build the
+        per-invocation session protocol + user library and resolve the
+        KVS-reference arguments.  Split out so the engine can resolve a
+        whole wave of same-function invocations, then dispatch user code
+        ONCE for the group (cross-request model batching)."""
+        if not self.alive:
+            raise ExecutorFailure(self.executor_id)
         self._invocation_seq += 1
         invocation_id = f"{self.executor_id}:{fn_name}:{self._invocation_seq}"
         protocol = ProtocolClient(
@@ -164,21 +203,17 @@ class Executor:
                 resolved.append(protocol.get(a.key))
             else:
                 resolved.append(a)
-        userlib = UserLibrary(self, protocol, invocation_id)
-        t0 = time.perf_counter()
-        if _wants_userlib(func):
-            result = func(userlib, *resolved)
-        else:
-            result = func(*resolved)
-        elapsed = (time.perf_counter() - t0) * self.slow_factor
-        if clock is not None:
-            clock.advance(elapsed)
+        return UserLibrary(self, protocol, invocation_id), resolved
+
+    def record_invocation(self, elapsed: float) -> None:
+        """Fold one finished invocation into the executor's published
+        metrics (§4.1) — shared by :meth:`invoke` and the engine's
+        batched group dispatch."""
         self.invocations += 1
         self.busy_seconds += elapsed
         self.recent_latencies.append(elapsed)
         if len(self.recent_latencies) > 256:
             del self.recent_latencies[:128]
-        return result
 
     # -- metrics / fault hooks ------------------------------------------------------
     def utilization(self, window_seconds: float) -> float:

@@ -307,6 +307,11 @@ class Cluster:
         self._m_failed = m.counter("engine.runs_failed")
         self._m_restarts = m.counter("engine.run_restarts")
         self._m_run_latency = m.histogram("engine.run_latency_s")
+        # cross-request model batching: waves of same-function triggers
+        # dispatched through the pinned callable's ``batch_call`` hook
+        self._m_batched_invokes = m.counter("engine.batched_invokes")
+        self._m_batched_invoke_requests = m.counter(
+            "engine.batched_invoke_requests")
         m.register_callback("engine.in_flight", lambda: len(self._runs))
         # run_id -> warm cost charged by _fused_prefetch this turn,
         # folded back into the invocation window by _invoke_trigger
@@ -318,6 +323,8 @@ class Cluster:
     fused_prefetch_batches = counter_shim("_m_fused_batches")
     fused_prefetch_keys = counter_shim("_m_fused_keys")
     batched_response_puts = counter_shim("_m_response_puts")
+    batched_invokes = counter_shim("_m_batched_invokes")
+    batched_invoke_requests = counter_shim("_m_batched_invoke_requests")
 
     # -- elasticity ---------------------------------------------------------------
     def add_vm(self, executors_per_vm: int = 3) -> List[str]:
@@ -555,7 +562,10 @@ class Cluster:
            turn, every waiting run charged the same batched cost;
         5. invoke (synchronously), with per-function straggler
            speculation; failures restart their run (§4.5) without
-           disturbing the other in-flight runs;
+           disturbing the other in-flight runs.  Same-function triggers
+           landing on one cache whose pinned callable has a
+           ``batch_call`` hook dispatch as ONE user-code call
+           (cross-request model batching);
         6. finalize runs whose functions all completed — response keys
            flush as ONE batched ``put_many``.
         """
@@ -630,7 +640,31 @@ class Cluster:
                                     parent=run.span, executor=eid)
             if self.read_prefetch:
                 self._fused_prefetch(plans)
-            for run, fn, args, eid, attempt in plans:
+            # cross-request model batching: a wave's same-function
+            # triggers landing on the SAME cache (VM) whose pinned
+            # callable exposes ``batch_call`` dispatch as ONE user-code
+            # call — the continuous-batching serving path.  Batched
+            # groups go first, then the leftover singles in original
+            # plan order, so a wave with nothing batchable replays the
+            # sequential invocation (and rng draw) order exactly.
+            groups: Dict[Tuple[str, str], List[
+                Tuple[DagRun, str, Tuple[Any, ...], str, int]]] = {}
+            for plan in plans:
+                _run, fn, _args, eid, _att = plan
+                func = self.executors[eid].pinned.get(fn)
+                if callable(getattr(func, "batch_call", None)):
+                    key = (fn, self.executors[eid].cache.cache_id)
+                    groups.setdefault(key, []).append(plan)
+            batched_ids: Set[int] = set()
+            for group in groups.values():
+                if len(group) < 2:
+                    continue
+                batched_ids.update(id(p) for p in group)
+                self._invoke_batched(group)
+            for plan in plans:
+                if id(plan) in batched_ids:
+                    continue
+                run, fn, args, eid, attempt = plan
                 # skip triggers whose run restarted/failed earlier this turn
                 if run.state != RUN_RUNNING or run.attempt != attempt:
                     continue
@@ -727,6 +761,105 @@ class Cluster:
                 for run, _keys, attempt in group:
                     if run.state == RUN_RUNNING and run.attempt == attempt:
                         self._fail_attempt(run, e)
+
+    def _invoke_batched(
+        self,
+        group: Sequence[Tuple[DagRun, str, Tuple[Any, ...], str, int]],
+    ) -> None:
+        """Dispatch a wave's same-function, same-cache triggers as ONE
+        user-code call through the pinned callable's ``batch_call``.
+
+        Each trigger still gets its own session protocol / user library
+        / reference resolution (``Executor.resolve_invocation``) and its
+        own clock and metric accounting; only the model call itself is
+        shared.  The group's wall time, scaled by each executor's
+        ``slow_factor``, is charged to every participating run — the
+        batch runs once for everyone.  A user-code exception fails every
+        run in the group (the batch was one call); infra failures during
+        resolution fail only the affected run.  Straggler speculation is
+        skipped: duplicating a batch would re-run the whole group.
+        """
+        live = [p for p in group
+                if p[0].state == RUN_RUNNING and p[0].attempt == p[4]]
+        if not live:
+            return
+        if len(live) == 1:
+            run, fn, args, eid, _att = live[0]
+            self._invoke_trigger(run, fn, args, eid)
+            return
+        fn = live[0][1]
+        func = self.executors[live[0][3]].pinned.get(fn)
+        tr = self.tracer
+        entries: List[Tuple[DagRun, Executor, Any, List[Any], float, Any]] = []
+        for run, _fn, args, eid, _att in live:
+            executor = self.executors[eid]
+            # fold the fused-prefetch warm back into the invocation
+            # window, exactly like _invoke_trigger
+            warm = self._warm_charged.pop(run.run_id, 0.0)
+            t_before = run.clock.now - warm
+            inv_span = None
+            if run.span is not None:
+                inv_span = tr.start(
+                    "engine", f"invoke.{fn}", t=t_before, clock=run.clock,
+                    tid=run.run_id, parent=run.span, executor=eid,
+                    deps=list(run.dag.upstream(fn)), batched=True,
+                )
+            try:
+                with tr.use(inv_span):
+                    userlib, resolved = executor.resolve_invocation(
+                        fn, args, run.session, self.caches, clock=run.clock,
+                        tracker=self.tracker, prefetch=False,
+                    )
+            except (DagRestart, ExecutorFailure, CacheFailure) as e:
+                if inv_span is not None:
+                    tr.finish(inv_span, error=type(e).__name__)
+                self._fail_attempt(run, e)
+                continue
+            except Exception as e:
+                if inv_span is not None:
+                    tr.finish(inv_span, error=type(e).__name__)
+                self._fail_user(run, e)
+                continue
+            entries.append((run, executor, userlib, resolved, t_before,
+                            inv_span))
+        if not entries:
+            return
+        t0 = time.perf_counter()
+        try:
+            results = func.batch_call(
+                [e[2] for e in entries], [tuple(e[3]) for e in entries])
+            if len(results) != len(entries):
+                raise ValueError(
+                    f"batch_call for {fn!r} returned {len(results)} results "
+                    f"for {len(entries)} invocations")
+        except (DagRestart, ExecutorFailure, CacheFailure) as e:
+            for run, _ex, _ul, _res, _tb, inv_span in entries:
+                if inv_span is not None:
+                    tr.finish(inv_span, error=type(e).__name__)
+                if run.state == RUN_RUNNING:
+                    self._fail_attempt(run, e)
+            return
+        except Exception as e:
+            # user-code error: the batch was ONE call, so every
+            # participating run fails with the original exception
+            for run, _ex, _ul, _res, _tb, inv_span in entries:
+                if inv_span is not None:
+                    tr.finish(inv_span, error=type(e).__name__)
+                if run.state == RUN_RUNNING:
+                    self._fail_user(run, e)
+            return
+        wall = time.perf_counter() - t0
+        self._m_batched_invokes.inc()
+        self._m_batched_invoke_requests.inc(len(entries))
+        for (run, executor, _ul, _res, t_before, inv_span), result in zip(
+                entries, results):
+            elapsed = wall * executor.slow_factor
+            run.clock.advance(elapsed)
+            executor.record_invocation(elapsed)
+            if inv_span is not None:
+                tr.finish(inv_span)
+            self._record_latency(fn, run.clock.now - t_before)
+            run.complete_fn(fn, result)
 
     def _invoke_trigger(
         self, run: DagRun, fn: str, args: Tuple[Any, ...], eid: str

@@ -1,8 +1,8 @@
-"""Serving driver: batched generation with a smoke-scale model.
+"""Serving driver: continuous-batched generation with a smoke-scale model.
 
-Demonstrates the full serving path (prefill -> continuous decode batches)
-for any ``--arch``; the same prefill/decode steps are what the dry-run
-lowers at production shapes.
+Demonstrates the full serving path (per-request prefill -> slot insert ->
+shared decode steps) for any ``--arch``; families without a batch serving
+path fall back to the legacy lockstep groups inside the engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --requests 8
 """
@@ -25,13 +25,14 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-slots", "--batch-size", dest="max_slots",
+                    type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params, batch_size=args.batch_size,
+    engine = ServingEngine(model, params, max_slots=args.max_slots,
                            max_len=args.prompt_len + args.new_tokens)
     rng = np.random.default_rng(0)
     reqs = [

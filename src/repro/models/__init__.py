@@ -9,10 +9,11 @@ from .config import (
     SSMConfig,
 )
 from .model import Model, ShapeCell, SHAPES
-from .registry import ARCH_IDS, get_config
+from .registry import ARCH_IDS, SERVING_ARCH_IDS, get_config
 
 __all__ = [
     "ARCH_IDS",
+    "SERVING_ARCH_IDS",
     "FrontendStub",
     "HybridConfig",
     "MLAConfig",

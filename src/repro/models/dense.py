@@ -127,6 +127,70 @@ def prefill(params, cfg: ModelConfig, tokens, patches=None):
     return logits, cache
 
 
+# -- continuous-batching serving entry points --------------------------------
+#
+# ``prefill_batch`` takes RIGHT-padded prompts (B,T) plus true per-row
+# ``lengths`` (B,): causal attention never lets a real position see the
+# trailing pads, so each row's activations match its unpadded run at the
+# same shape bucket; the head projects each row's hidden state at its
+# true last position.  ``decode_step_batch`` carries per-row lengths in
+# the cache so one jitted step serves a slot batch of requests at
+# unequal depths (the maxtext prefill/insert/generate discipline).
+
+
+def init_serve_cache(cfg: ModelConfig, batch: int, max_len: int):
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, cfg.jnp_dtype),
+        "v": jnp.zeros(shape, cfg.jnp_dtype),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill_batch(params, cfg: ModelConfig, tokens, lengths):
+    """tokens (B,T) right-padded, lengths (B,) -> per-row last logits
+    (B,1,V) + a per-row-length KV cache."""
+    B, T = tokens.shape
+    h = L.embed_tokens(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+
+    def body(h, p):
+        a, kv = L.attention_prefill(
+            p["attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps), positions,
+            cfg.rope_theta,
+        )
+        h = h + a
+        h = h + L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+        return h, kv
+
+    h, (ks, vs) = L.scan_layers(body, h, params["blocks"])
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(_head(params, cfg), L.last_token_rows(h, lengths))
+    return logits, {"k": ks, "v": vs, "lengths": lengths.astype(jnp.int32)}
+
+
+def decode_step_batch(params, cfg: ModelConfig, tokens, cache):
+    """tokens (B,1) -> logits (B,1,V); per-row positions from
+    cache['lengths'] (B,), every row advanced independently."""
+    h = L.embed_tokens(params["embed"], tokens)
+    lengths = cache["lengths"]
+
+    def body(h, inputs):
+        p, k_c, v_c = inputs
+        a, (k_c, v_c) = L.attention_decode_rows(
+            p["attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps), lengths,
+            cfg.rope_theta, (k_c, v_c),
+        )
+        h = h + a
+        h = h + L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+        return h, (k_c, v_c)
+
+    h, (ks, vs) = L.scan_layers(body, h, (params["blocks"], cache["k"], cache["v"]))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(_head(params, cfg), h)
+    return logits, {"k": ks, "v": vs, "lengths": lengths + 1}
+
+
 def decode_step(params, cfg: ModelConfig, tokens, cache):
     """tokens (B,1) -> logits (B,1,V); cache updated in place (ring)."""
     B = tokens.shape[0]

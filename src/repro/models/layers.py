@@ -160,6 +160,48 @@ def _scatter_slot(cache: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Arra
     )
 
 
+def scatter_slot_rows(cache: jax.Array, new: jax.Array,
+                      slots: jax.Array) -> jax.Array:
+    """Per-row scatter: write new (B,Hkv,1,hd) into cache (B,Hkv,S,hd) at
+    per-row position ``slots`` (B,) — the continuous-batching variant of
+    :func:`_scatter_slot`, where every batch row sits at its own length."""
+    S = cache.shape[2]
+    hit = (jnp.arange(S)[None, :] == slots[:, None])[:, None, :, None]
+    return jnp.where(hit, new.astype(cache.dtype), cache)
+
+
+def attention_decode_rows(
+    p: Params, x: jax.Array, lengths: jax.Array, theta: float,
+    kv_cache: Tuple[jax.Array, jax.Array],
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Continuous-batching decode: like :func:`attention_decode` but every
+    row carries its OWN position/length ``lengths`` (B,), so one jitted
+    step serves a slot batch of requests at unequal generation depths.
+    Row-independent by construction (per-row rope, scatter and mask):
+    idle or differently-aged neighbours cannot perturb a row's output."""
+    q = jnp.einsum("btd,dhk->bhtk", x, p["wq"])  # (B,H,1,hd)
+    k_new = jnp.einsum("btd,dhk->bhtk", x, p["wk"])
+    v_new = jnp.einsum("btd,dhk->bhtk", x, p["wv"])
+    q = apply_rope(q, lengths[:, None, None], theta)[:, :, 0]  # (B,H,hd)
+    k_new = apply_rope(k_new, lengths[:, None, None], theta)
+    k_cache, v_cache = kv_cache
+    S = k_cache.shape[2]
+    slots = lengths % S  # ring per row (idle rows wrap harmlessly)
+    k_cache = scatter_slot_rows(k_cache, k_new, slots)
+    v_cache = scatter_slot_rows(v_cache, v_new, slots)
+    vis = jnp.minimum(lengths + 1, S).astype(jnp.int32)
+    o = ops.decode_attention(q, k_cache, v_cache, vis)  # (B,H,hd)
+    y = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None, :]
+    return constrain(y, "batch", "seq", None), (k_cache, v_cache)
+
+
+def last_token_rows(h: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Gather each row's TRUE last hidden state from a right-padded
+    prefill: h (B,T,D) at per-row position ``lengths - 1`` -> (B,1,D)."""
+    idx = jnp.clip(lengths - 1, 0, h.shape[1] - 1)
+    return jnp.take_along_axis(h, idx[:, None, None], axis=1)
+
+
 # ---------------------------------------------------------------------------
 # SwiGLU MLP
 # ---------------------------------------------------------------------------

@@ -120,6 +120,38 @@ def attention_decode(p, cfg: ModelConfig, x, pos, cache, length):
     return y, (c_cache, pe_cache)
 
 
+def attention_decode_rows(p, cfg: ModelConfig, x, cache, lengths):
+    """Absorbed MLA decode with per-row positions ``lengths`` (B,): the
+    continuous-batching variant of :func:`attention_decode` — per-row
+    rope, per-row latent-cache scatter, per-row visibility mask."""
+    m = _m(cfg)
+    c_cache, pe_cache = cache
+    S = c_cache.shape[1]
+    q_nope, q_pe = _project_q(p, cfg, x, lengths[:, None])  # (B,H,1,*)
+    c_new, pe_new = _project_kv_latent(p, cfg, x, lengths[:, None])
+    slots = lengths % S  # ring per row (idle rows wrap harmlessly)
+    hit = jnp.arange(S)[None, :] == slots[:, None]  # (B,S)
+    c_cache = jnp.where(hit[:, :, None], c_new.astype(c_cache.dtype), c_cache)
+    pe_cache = jnp.where(hit[:, :, None], pe_new.astype(pe_cache.dtype),
+                         pe_cache)
+    w_nope = p["wkv_b"][..., : m.qk_nope_head_dim]  # (r,H,nope)
+    w_v = p["wkv_b"][..., m.qk_nope_head_dim:]  # (r,H,v)
+    q_abs = jnp.einsum("bhtk,rhk->bhr", q_nope, w_nope)
+    scores = (
+        jnp.einsum("bhr,bsr->bhs", q_abs.astype(jnp.float32),
+                   c_cache.astype(jnp.float32))
+        + jnp.einsum("bhtk,bsk->bhs", q_pe.astype(jnp.float32),
+                     pe_cache.astype(jnp.float32))
+    ) / ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5)
+    mask = (jnp.arange(S)[None, :] <= lengths[:, None])[:, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", w, c_cache.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_v.astype(jnp.float32))
+    y = jnp.einsum("bhv,hvd->bd", o.astype(x.dtype), p["wo"])[:, None]
+    return y, (c_cache, pe_cache)
+
+
 # ---------------------------------------------------------------------------
 # full model
 # ---------------------------------------------------------------------------
@@ -203,6 +235,61 @@ def prefill(params, cfg: ModelConfig, tokens, patches=None):
     logits = L.logits_out(params["head"], h[:, -1:, :])
     return logits, {"c_kv": c_kvs, "k_pe": k_pes,
                     "length": jnp.array(T, jnp.int32)}
+
+
+# -- continuous-batching serving entry points --------------------------------
+
+
+def init_serve_cache(cfg: ModelConfig, batch: int, max_len: int):
+    m = _m(cfg)
+    return {
+        "c_kv": jnp.zeros((cfg.n_layers, batch, max_len, m.kv_lora_rank),
+                          cfg.jnp_dtype),
+        "k_pe": jnp.zeros((cfg.n_layers, batch, max_len, m.qk_rope_head_dim),
+                          cfg.jnp_dtype),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill_batch(params, cfg: ModelConfig, tokens, lengths):
+    """Right-padded (B,T) + lengths (B,) -> per-row last logits + a
+    per-row-length latent cache (causal prefill: pads never feed back)."""
+    B, T = tokens.shape
+    h = L.embed_tokens(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+
+    def body(h, p):
+        a, (c_kv, k_pe) = attention_prefill(
+            p["attn"], cfg, L.rms_norm(h, p["ln1"], cfg.norm_eps), positions)
+        h = h + a
+        h = h + L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+        return h, (c_kv, k_pe)
+
+    h, (c_kvs, k_pes) = L.scan_layers(body, h, params["blocks"])
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(params["head"], L.last_token_rows(h, lengths))
+    return logits, {"c_kv": c_kvs, "k_pe": k_pes,
+                    "lengths": lengths.astype(jnp.int32)}
+
+
+def decode_step_batch(params, cfg: ModelConfig, tokens, cache):
+    h = L.embed_tokens(params["embed"], tokens)
+    lengths = cache["lengths"]
+
+    def body(h, inputs):
+        p, c_kv, k_pe = inputs
+        a, (c_kv, k_pe) = attention_decode_rows(
+            p["attn"], cfg, L.rms_norm(h, p["ln1"], cfg.norm_eps),
+            (c_kv, k_pe), lengths)
+        h = h + a
+        h = h + L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+        return h, (c_kv, k_pe)
+
+    h, (c_kvs, k_pes) = L.scan_layers(
+        body, h, (params["blocks"], cache["c_kv"], cache["k_pe"]))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(params["head"], h)
+    return logits, {"c_kv": c_kvs, "k_pe": k_pes, "lengths": lengths + 1}
 
 
 def decode_step(params, cfg: ModelConfig, tokens, cache):

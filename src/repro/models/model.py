@@ -83,6 +83,34 @@ class Model:
     def init_cache(self, batch: int, max_len: int):
         return self.mod.init_cache(self.cfg, batch, max_len)
 
+    # -- continuous-batching serving steps ------------------------------------
+    # Batch-shaped entry points for the slot-based ServingEngine: right-
+    # padded prompt buckets with per-row true lengths, and a decode cache
+    # carrying a ``lengths`` (B,) vector so one jitted step serves rows at
+    # unequal generation depths (prefill/insert/generate discipline).
+
+    @property
+    def supports_continuous_batching(self) -> bool:
+        return hasattr(self.mod, "decode_step_batch")
+
+    def prefill_batch(self, params, tokens, lengths):
+        self._require_serve()
+        return self.mod.prefill_batch(params, self.cfg, tokens, lengths)
+
+    def decode_step_batch(self, params, tokens, cache):
+        self._require_serve()
+        return self.mod.decode_step_batch(params, self.cfg, tokens, cache)
+
+    def init_serve_cache(self, batch: int, max_len: int):
+        self._require_serve()
+        return self.mod.init_serve_cache(self.cfg, batch, max_len)
+
+    def _require_serve(self) -> None:
+        if not self.supports_continuous_batching:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no continuous-batching "
+                "serving path (supported: dense, moe, mla, ssm)")
+
     def abstract_cache(self, batch: int, max_len: int):
         return jax.eval_shape(lambda: self.mod.init_cache(self.cfg, batch, max_len))
 

@@ -68,13 +68,20 @@ def _n_groups(n_tokens: int) -> int:
 
 
 def moe_apply(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
-              ) -> Tuple[jax.Array, jax.Array]:
-    """x (B,T,D) -> (y (B,T,D), aux_loss scalar).  Group-local dispatch."""
+              groups: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+    """x (B,T,D) -> (y (B,T,D), aux_loss scalar).  Group-local dispatch.
+
+    ``groups`` overrides the mesh-derived group count.  The continuous-
+    batching decode path passes ``groups=B`` so the position-in-expert
+    cumsum and capacity dropping are ROW-LOCAL: one request's routing can
+    never evict another request's tokens from an expert, which keeps the
+    slot batch bit-identical to per-request dispatch (with Sg=1 the
+    capacity floor of 8 >= top_k, so decode never drops at all)."""
     moe = cfg.moe
     B, T, D = x.shape
     S = B * T
     E, K = moe.n_experts, moe.top_k
-    G = _n_groups(S)
+    G = _n_groups(S) if groups is None else groups
     Sg = S // G
     C = _capacity(moe, Sg)
     xg = x.reshape(G, Sg, D)
@@ -216,6 +223,65 @@ def prefill(params, cfg: ModelConfig, tokens, patches=None):
     h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
     logits = L.logits_out(params["head"], h[:, -1:, :])
     return logits, {"k": ks, "v": vs, "length": jnp.array(T, jnp.int32)}
+
+
+# -- continuous-batching serving entry points --------------------------------
+
+
+def init_serve_cache(cfg: ModelConfig, batch: int, max_len: int):
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, cfg.jnp_dtype),
+        "v": jnp.zeros(shape, cfg.jnp_dtype),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill_batch(params, cfg: ModelConfig, tokens, lengths):
+    """Right-padded (B,T) + lengths (B,) -> per-row last logits + cache.
+
+    Dispatch stays row-local (``groups=B``): each row's top-k cumsum runs
+    over its own Sg=T tokens, and a row's trailing pads sit AFTER its
+    real tokens in token-major order, so real tokens claim the same
+    expert slots they would in a solo run at the same bucket."""
+    B, T = tokens.shape
+    h = L.embed_tokens(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+
+    def body(h, p):
+        a, kv = L.attention_prefill(
+            p["attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps), positions,
+            cfg.rope_theta)
+        h = h + a
+        y, _ = moe_apply(p["moe"], cfg, L.rms_norm(h, p["ln2"], cfg.norm_eps),
+                         groups=B)
+        return h + y, kv
+
+    h, (ks, vs) = L.scan_layers(body, h, params["blocks"])
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(params["head"], L.last_token_rows(h, lengths))
+    return logits, {"k": ks, "v": vs, "lengths": lengths.astype(jnp.int32)}
+
+
+def decode_step_batch(params, cfg: ModelConfig, tokens, cache):
+    B = tokens.shape[0]
+    h = L.embed_tokens(params["embed"], tokens)
+    lengths = cache["lengths"]
+
+    def body(h, inputs):
+        p, k_c, v_c = inputs
+        a, (k_c, v_c) = L.attention_decode_rows(
+            p["attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps), lengths,
+            cfg.rope_theta, (k_c, v_c))
+        h = h + a
+        y, _ = moe_apply(p["moe"], cfg, L.rms_norm(h, p["ln2"], cfg.norm_eps),
+                         groups=B)
+        return h + y, (k_c, v_c)
+
+    h, (ks, vs) = L.scan_layers(body, h, (params["blocks"], cache["k"], cache["v"]))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(params["head"], h)
+    return logits, {"k": ks, "v": vs, "lengths": lengths + 1}
 
 
 def decode_step(params, cfg: ModelConfig, tokens, cache):

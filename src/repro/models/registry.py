@@ -22,6 +22,15 @@ _MODULES: Dict[str, str] = {
 
 ARCH_IDS: List[str] = list(_MODULES)
 
+# one smoke-config representative per family with a continuous-batching
+# serving path (the serving bit-identity tests / serve_models bench grid)
+SERVING_ARCH_IDS: List[str] = [
+    "llama3.2-3b",          # dense
+    "granite-moe-3b-a800m",  # moe
+    "minicpm3-4b",          # mla
+    "mamba2-1.3b",          # ssm
+]
+
 
 def get_config(arch: str, smoke: bool = False) -> ModelConfig:
     if arch not in _MODULES:

@@ -217,6 +217,93 @@ def prefill(params, cfg: ModelConfig, tokens, patches=None):
                     "length": jnp.array(T, jnp.int32)}
 
 
+# -- continuous-batching serving entry points --------------------------------
+#
+# Unlike attention, the SSD recurrence is stateful in TIME: a right-pad
+# processed naively would pollute the carried state.  The exact fix rides
+# the recurrence itself — h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T — so
+# forcing dt_t = 0 at pad positions makes each pad an IDENTITY update
+# (decay exp(0)=1, contribution 0): the final state equals the unpadded
+# run's.  The decode-seeding conv tail is gathered per row at its true
+# length (zero-filled where the prompt is shorter than the conv window),
+# and the head reads each row's hidden state at its true last position.
+
+
+def init_serve_cache(cfg: ModelConfig, batch: int, max_len: int):
+    s, conv_ch, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, s.conv_width - 1, conv_ch),
+                          cfg.jnp_dtype),
+        "ssd": jnp.zeros((cfg.n_layers, batch, s.n_heads, s.state_dim,
+                          s.head_dim), cfg.jnp_dtype),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill_batch(params, cfg: ModelConfig, tokens, lengths):
+    s, conv_ch, _ = _dims(cfg)
+    B, T = tokens.shape
+    h = L.embed_tokens(params["embed"], tokens)
+    valid = jnp.arange(T)[None, :] < lengths[:, None]  # (B,T)
+    k1 = s.conv_width - 1
+    # raw conv inputs at positions length-k+1 .. length-1 seed decode;
+    # negative indices (prompt shorter than the window) read as zeros,
+    # matching the zero left-pad of the solo path
+    tail_idx = lengths[:, None] - k1 + jnp.arange(k1)[None, :]  # (B,k-1)
+
+    def body(h, p):
+        x = h
+        hn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        zxbcdt = jnp.einsum("btd,dk->btk", hn, p["in_proj"])
+        z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+        xbc_c = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        gathered = jnp.take_along_axis(
+            xbc, jnp.clip(tail_idx, 0, T - 1)[:, :, None], axis=1)
+        conv_tail = jnp.where((tail_idx >= 0)[:, :, None], gathered, 0)
+        xs = xbc_c[..., : s.d_inner]
+        g = s.n_groups * s.state_dim
+        Bm = xbc_c[..., s.d_inner: s.d_inner + g].reshape(B, T, s.n_groups,
+                                                          s.state_dim)
+        Cm = xbc_c[..., s.d_inner + g:].reshape(B, T, s.n_groups, s.state_dim)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        dt = jnp.where(valid[:, :, None], dt, 0.0)  # pads: identity updates
+        A = -jnp.exp(p["A_log"])
+        xh = xs.reshape(B, T, s.n_heads, s.head_dim)
+        h0 = jnp.zeros((B, s.n_heads, s.state_dim, s.head_dim), xs.dtype)
+        y, hT = ops.ssd_scan(xh, dt.astype(xs.dtype), A.astype(jnp.float32),
+                             Bm, Cm, h0, chunk=s.chunk)
+        y = y + p["D_skip"].astype(y.dtype)[None, None, :, None] * xh
+        y = y.reshape(B, T, s.d_inner)
+        y = L.rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+        out = jnp.einsum("btk,kd->btd", y, p["out_proj"])
+        return x + out, (conv_tail, hT)
+
+    h, (convs, ssds) = L.scan_layers(body, h, params["blocks"])
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(params["head"], L.last_token_rows(h, lengths))
+    return logits, {"conv": convs, "ssd": ssds,
+                    "lengths": lengths.astype(jnp.int32)}
+
+
+def decode_step_batch(params, cfg: ModelConfig, tokens, cache):
+    """Per-row-length variant of :func:`decode_step`.  The SSD/conv state
+    is position-free and fully row-independent, so the only difference is
+    the ``lengths`` (B,) bookkeeping the serving engine tracks."""
+    h = L.embed_tokens(params["embed"], tokens)
+
+    def body(h, inputs):
+        p, conv_state, ssd_state = inputs
+        out, conv_state, ssd_state = _block_decode(p, cfg, h, conv_state,
+                                                   ssd_state)
+        return h + out, (conv_state, ssd_state)
+
+    h, (convs, ssds) = L.scan_layers(
+        body, h, (params["blocks"], cache["conv"], cache["ssd"]))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(params["head"], h)
+    return logits, {"conv": convs, "ssd": ssds, "lengths": cache["lengths"] + 1}
+
+
 def decode_step(params, cfg: ModelConfig, tokens, cache):
     h = L.embed_tokens(params["embed"], tokens)
 

@@ -1,5 +1,5 @@
-"""Serving substrate: batched prefill/decode engine + pipeline stages."""
+"""Serving substrate: continuous-batching engine + pipeline stages."""
 
-from .engine import Request, ServingEngine, make_pipeline_stages
+from .engine import ModelStage, Request, ServingEngine, make_pipeline_stages
 
-__all__ = ["Request", "ServingEngine", "make_pipeline_stages"]
+__all__ = ["ModelStage", "Request", "ServingEngine", "make_pipeline_stages"]

@@ -1,6 +1,13 @@
 """Tensor state over the KVS: sharded storage + checkpoint/restore."""
 
 from .checkpoint import CheckpointConfig, CheckpointManager
-from .tensorstore import TensorRecord, TensorStore
+from .tensorstore import TensorRecord, TensorStore, tree_from_values, tree_keys
 
-__all__ = ["CheckpointConfig", "CheckpointManager", "TensorRecord", "TensorStore"]
+__all__ = [
+    "CheckpointConfig",
+    "CheckpointManager",
+    "TensorRecord",
+    "TensorStore",
+    "tree_from_values",
+    "tree_keys",
+]

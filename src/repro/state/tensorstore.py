@@ -113,6 +113,31 @@ class TensorStore:
         return np.asarray(val), np.asarray(clock), np.asarray(node)
 
 
+def tree_keys(namespace: str, like: Any) -> List[str]:
+    """KVS keys for every leaf of ``like`` under ``namespace``, in
+    flatten order — the read set a consumer hands to a batched
+    ``get_many`` (one fused plane launch for the whole tree)."""
+    leaves = jax.tree_util.tree_flatten_with_path(like)[0]
+    return [f"{namespace}/{_pstr(path)}" for path, _leaf in leaves]
+
+
+def tree_from_values(like: Any, values: List[Any]) -> Any:
+    """Rebuild the pytree from ``values`` fetched for :func:`tree_keys`
+    (same order).  Leaves are cast/reshaped against ``like`` so
+    ShapeDtypeStructs work as the template."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    if len(values) != len(leaves):
+        raise ValueError(
+            f"expected {len(leaves)} leaves, got {len(values)} values")
+    out = []
+    for (path, leaf), value in zip(leaves, values):
+        if value is None:
+            raise KeyError(f"missing shard for path {_pstr(path)}")
+        arr = _unwrap(value)
+        out.append(jnp.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def _pstr(path) -> str:
     parts = []
     for p in path:
