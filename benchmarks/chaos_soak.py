@@ -1,0 +1,266 @@
+"""Chaos soak: the fig8-shaped pipeline served open-loop while a seeded
+ChaosMonkey kills KVS nodes and VMs, partitions replication channels,
+drops/delays/duplicates gossip and straggles executors mid-flight.
+
+Two passes over the same workload shape:
+* healthy — failure plane enabled, no faults injected (so the heartbeat
+  plumbing cost is IN the baseline, the comparison isolates chaos);
+* chaos — the monkey steps between engine turns, then ``heal_all()``.
+
+Hard gates (the bench asserts, so ``scripts/verify.sh`` fails if chaos
+breaks the §4.5 story):
+* zero acked-write loss: every KVS put that acked during chaos is
+  readable after heal, and all its replicas converge bit-identical;
+* no zombies: every submitted DAG resolves — completed, or failed
+  visibly through its future;
+* bounded degradation: chaos p99 (virtual) <= ``P99_BOUND`` x healthy
+  p99 (virtual), retries/backoff charged to the run clocks.
+
+Results append to ``BENCH_chaos_soak.json``; ``--check`` in
+``benchmarks.run`` gates chaos p99 against the recorded trajectory
+(a >20% latency regression fails).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (
+    CloudburstReference,
+    Cluster,
+    KVSUnavailableError,
+    LamportClock,
+    LWWLattice,
+    RetryPolicy,
+)
+from repro.core.fault import ChaosMonkey
+from repro.core.netsim import NetworkProfile
+from repro.core.runtime import RUN_DONE, RUN_FAILED
+
+from .common import emit, pct
+
+BENCH_RECORD = Path(__file__).resolve().parent.parent / "BENCH_chaos_soak.json"
+
+IN_FLIGHT = 8
+P99_BOUND = 5.0  # chaos p99 must stay within this multiple of healthy p99
+
+PLANE_COUNTERS = (
+    "detector.suspicions",
+    "detector.false_suspicions",
+    "detector.rejoins",
+    "kvs.retries",
+    "kvs.backoff_s",
+    "kvs.degraded_reads",
+    "faultnet.dropped_planes",
+    "faultnet.delayed_planes",
+    "faultnet.duplicated_planes",
+    "faultnet.reordered_planes",
+    "faultnet.partitioned_planes",
+)
+
+
+def _build_cluster(seed: int, d: int, shards: int,
+                   dag_timeout: float) -> Cluster:
+    c = Cluster(n_vms=3, executors_per_vm=2, n_kvs_nodes=4, replication=2,
+                seed=seed, profile=NetworkProfile(seed=seed),
+                dag_timeout=dag_timeout, max_retries=4)
+    # timeouts sized to the workload, not wall-clock defaults: a probe
+    # that times out should cost about one DAG tail, not dominate it
+    c.enable_failure_plane(
+        retry=RetryPolicy(op_timeout=dag_timeout / 2,
+                          base_backoff=dag_timeout / 10,
+                          max_backoff=dag_timeout, max_attempts=3))
+
+    w = np.asarray(
+        np.random.default_rng(seed).normal(size=(d, 8)) / np.sqrt(d),
+        np.float32)
+    c.put("model-weights", w)
+
+    def preprocess(*shards_in):
+        x = np.concatenate([np.asarray(s, np.float32).ravel()
+                            for s in shards_in])
+        return x / (np.linalg.norm(x) + 1e-6)
+
+    def predict(x, feat, wt):
+        return int(np.argmax(np.asarray(x) @ wt + feat))
+
+    def combine(label):
+        return f"label={label}"
+
+    c.register(preprocess, "preprocess")
+    c.register(predict, "model")
+    c.register(combine, "combine")
+    c.register_dag("pipeline", ["preprocess", "model", "combine"])
+    return c
+
+
+def _serve(c: Cluster, n_requests: int, shards: int, d: int, seed: int,
+           monkey: ChaosMonkey = None) -> Dict[str, float]:
+    rng = np.random.default_rng(seed)
+    shard_d = d // shards
+    for i in range(n_requests):
+        for s in range(shards):
+            c.put(f"in-{i}-{s}",
+                  np.asarray(rng.normal(size=shard_d), np.float32))
+        c.put(f"feat-{i}", np.asarray(rng.normal(size=8), np.float32))
+    lam = LamportClock("soak-writer")
+    acked: Dict[str, str] = {}
+    futs: List = []
+    pending: List = []
+    submitted = 0
+    turn = 0
+    stalled = 0
+    while submitted < n_requests or pending:
+        turn += 1
+        if monkey is not None:
+            monkey.step()
+        while submitted < n_requests and len(pending) < IN_FLIGHT:
+            i = submitted
+            fut = c.call_dag_async("pipeline", {
+                "preprocess": tuple(CloudburstReference(f"in-{i}-{s}")
+                                    for s in range(shards)),
+                "model": (CloudburstReference(f"feat-{i}"),
+                          CloudburstReference("model-weights")),
+            })
+            futs.append(fut)
+            pending.append(fut)
+            # an independent durability write per request: acked puts
+            # must survive whatever the monkey does (§4.5 k-1 tolerance)
+            try:
+                c.kvs.put(f"soak-{i}", LWWLattice(lam.tick(), f"d{i}"))
+                acked[f"soak-{i}"] = f"d{i}"
+            except KVSUnavailableError:
+                pass  # not acked: no durability promise
+            submitted += 1
+        progressed = c.step()
+        c.tick()  # heartbeats / gossip / faultnet release ride the tick
+        pending = [f for f in pending if not f.done()]
+        if progressed or not pending:
+            stalled = 0
+        else:
+            stalled += 1
+            assert stalled < 200, "engine stalled with runs in flight"
+    if monkey is not None:
+        monkey.heal_all()
+
+    # -- gate: no zombies -- every run resolved, engine drained
+    done = sum(1 for f in futs if f.run.state == RUN_DONE)
+    failed = sum(1 for f in futs if f.run.state == RUN_FAILED)
+    assert done + failed == n_requests, (done, failed, n_requests)
+    assert len(c._runs) == 0, "engine still tracks zombie runs"
+
+    # -- gate: zero acked-write loss, replicas bit-identical after heal
+    lost = []
+    for key, want in acked.items():
+        lat = c.kvs.get_merged(key)
+        if lat is None or lat.reveal() != want:
+            lost.append(key)
+            continue
+        copies = {c.kvs.nodes[o].store.get(key) and
+                  c.kvs.nodes[o].store.get(key).reveal()
+                  for o in c.kvs._owners(key)}
+        if copies != {want}:
+            lost.append(key)
+    assert not lost, f"acked writes lost/diverged after heal: {lost[:5]}"
+
+    lat_virtual = [f.run.result.latency for f in futs
+                   if f.run.state == RUN_DONE]
+    retries = sum(f.run.result.retries for f in futs
+                  if f.run.state == RUN_DONE)
+    snap = c.metrics.snapshot()
+    stats = {
+        "requests": n_requests,
+        "completed": done,
+        "failed_visibly": failed,
+        "acked_writes": len(acked),
+        "dag_retries": retries,
+        "latency_p50_virtual_ms": pct(lat_virtual, 50) * 1e3,
+        "latency_p99_virtual_ms": pct(lat_virtual, 99) * 1e3,
+    }
+    for name in PLANE_COUNTERS:
+        stats[name] = snap.get(name, 0)
+    return stats
+
+
+def main(n_requests: int = 64, d: int = 1024, shards: int = 4,
+         seed: int = 0, smoke: bool = False) -> None:
+    if smoke:
+        n_requests, d = 32, 256
+    dag_timeout = 0.005  # virtual seconds; retries charge this per attempt
+
+    healthy_c = _build_cluster(seed=seed, d=d, shards=shards,
+                               dag_timeout=dag_timeout)
+    healthy = _serve(healthy_c, n_requests, shards, d, seed)
+    # faults disabled -> the failure plane must be dormant: no retries,
+    # no suspicions, no degraded reads, nothing dropped or delayed
+    assert healthy["failed_visibly"] == 0, healthy
+    for name in PLANE_COUNTERS:
+        if name == "detector.rejoins":
+            continue
+        assert healthy[name] == 0, (name, healthy[name])
+
+    chaos_c = _build_cluster(seed=seed, d=d, shards=shards,
+                             dag_timeout=dag_timeout)
+    monkey = ChaosMonkey(chaos_c, seed=seed + 1, p_fail=0.15, p_recover=0.4,
+                         p_channel=0.5, p_straggle=0.2,
+                         max_channel_faults=3, max_partitions=1)
+    chaos = _serve(chaos_c, n_requests, shards, d, seed, monkey=monkey)
+    injected = (chaos["faultnet.dropped_planes"]
+                + chaos["faultnet.delayed_planes"]
+                + chaos["faultnet.duplicated_planes"]
+                + chaos["faultnet.reordered_planes"]
+                + chaos["faultnet.partitioned_planes"]
+                + chaos["detector.suspicions"])
+    assert injected > 0, "chaos pass injected no faults (dead monkey?)"
+
+    # -- gate: bounded degradation in VIRTUAL time
+    h99 = healthy["latency_p99_virtual_ms"]
+    c99 = chaos["latency_p99_virtual_ms"]
+    p99_ratio = c99 / h99 if h99 else float("inf")
+    assert p99_ratio <= P99_BOUND, (
+        f"chaos p99 {c99:.2f}ms > {P99_BOUND}x healthy p99 {h99:.2f}ms")
+
+    for label, row in (("healthy", healthy), ("chaos", chaos)):
+        emit(f"chaos_soak/{label}",
+             row["latency_p50_virtual_ms"] * 1e3,
+             f"p99_virtual_ms={row['latency_p99_virtual_ms']:.3f}"
+             f";completed={row['completed']}"
+             f";failed_visibly={row['failed_visibly']}"
+             f";dag_retries={row['dag_retries']}"
+             f";suspicions={row['detector.suspicions']}"
+             f";kvs_retries={row['kvs.retries']}"
+             f";degraded_reads={row['kvs.degraded_reads']}"
+             f";dropped={row['faultnet.dropped_planes']}")
+    emit("chaos_soak/p99_ratio", 0.0,
+         f"ratio={p99_ratio:.2f}x;bound={P99_BOUND}x"
+         f";acked_writes={chaos['acked_writes']};lost=0")
+
+    record = {
+        "bench": "chaos_soak",
+        "smoke": smoke,
+        "n_requests": n_requests,
+        "d": d,
+        "shards": shards,
+        "in_flight": IN_FLIGHT,
+        "dag_timeout_virtual_s": dag_timeout,
+        "p99_bound": P99_BOUND,
+        "p99_ratio": p99_ratio,
+        "healthy": healthy,
+        "chaos": chaos,
+    }
+    runs = []
+    if BENCH_RECORD.exists():
+        try:
+            runs = json.loads(BENCH_RECORD.read_text())
+        except (json.JSONDecodeError, OSError):
+            runs = []
+    runs.append(record)
+    BENCH_RECORD.write_text(json.dumps(runs, indent=1) + "\n")
+
+
+if __name__ == "__main__":
+    main()

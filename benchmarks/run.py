@@ -16,6 +16,9 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
   pipeline_throughput  open-loop fig8 serving at in-flight {1,4,16}
   serve_models  continuous-batched REAL forward passes vs per-request
                 dispatch + KVS-resident-params DAG serving
+  chaos_soak  fig8-shaped open-loop serving under ChaosMonkey channel
+              faults / node kills; durability + no-zombie + bounded-p99
+              gates asserted in-bench
 
 ``--smoke`` runs the kernel micro-benches (kernels + merge_plane +
 gossip_plane + read_plane) plus tiny pipeline_throughput and
@@ -27,13 +30,18 @@ continuous-batching speedup, token bit-identity and the zero
 second-request weight-fetch invariant).
 
 ``--check`` is the trajectory regression gate: it runs the read_plane,
-pipeline_throughput and serve_models smoke benches fresh and compares
-their new records against the LAST matching entries already in
-``BENCH_read_plane.json`` / ``BENCH_pipeline_throughput.json`` /
-``BENCH_serve_models.json``, failing on a >20% keys/s, req/s or
-tokens/s drop on the batched/plane paths (the jitter-prone per-key
-Python baselines are recorded but not gated).  CI consumes the
-trajectory files through this gate instead of only appending to them.
+pipeline_throughput, serve_models and chaos_soak smoke benches fresh
+and compares their new records against the LAST matching entries
+already in ``BENCH_read_plane.json`` / ``BENCH_pipeline_throughput
+.json`` / ``BENCH_serve_models.json`` / ``BENCH_chaos_soak.json``,
+failing on a >20% keys/s, req/s or tokens/s drop on the batched/plane
+paths (the jitter-prone per-key Python baselines are recorded but not
+gated) or a >20% chaos-p99 latency regression (latency gates in the
+OPPOSITE direction: bigger is worse).  The chaos bench's hard gates —
+zero acked-write loss after heal, no zombie runs, chaos p99 within 5x
+healthy — are asserted inside the bench itself on every run.  CI
+consumes the trajectory files through this gate instead of only
+appending to them.
 """
 
 from __future__ import annotations
@@ -51,6 +59,9 @@ CHECK_KEEP = 0.8
 CHECK_FIELDS = ("batched_keys_per_s", "device_keys_per_s",
                 "plane_keys_per_s", "host_plane_keys_per_s", "req_per_s",
                 "tokens_per_s")
+# gated latency fields (direction inverted: fresh must stay BELOW
+# 1/CHECK_KEEP of the recorded value — a >20% p99 growth fails)
+CHECK_LATENCY_FIELDS = ("latency_p99_virtual_ms",)
 
 _ROOT = Path(__file__).resolve().parent.parent
 
@@ -86,26 +97,44 @@ def _gate_rates(label: str, base: dict, fresh: dict) -> list:
     return failures
 
 
+def _gate_latencies(label: str, base: dict, fresh: dict) -> list:
+    """Latency fields gate in the opposite sense: growth is regression."""
+    failures = []
+    for field in CHECK_LATENCY_FIELDS:
+        b, f = base.get(field), fresh.get(field)
+        if not b or f is None:
+            continue
+        if f > b / CHECK_KEEP:
+            failures.append(
+                f"{label}: {field} {f:.2f} > {1 / CHECK_KEEP:.0%} of "
+                f"recorded {b:.2f}")
+    return failures
+
+
 def check() -> None:
     """Run the recorded smoke benches fresh and fail on regression vs
     the last entries in the trajectory files."""
-    from . import pipeline_throughput, read_plane, serve_models
+    from . import chaos_soak, pipeline_throughput, read_plane, serve_models
 
     rp_path = _ROOT / "BENCH_read_plane.json"
     pt_path = _ROOT / "BENCH_pipeline_throughput.json"
     sm_path = _ROOT / "BENCH_serve_models.json"
+    cs_path = _ROOT / "BENCH_chaos_soak.json"
     base_rp = _last_smoke(_load_runs(rp_path))
     base_pt = _last_smoke(_load_runs(pt_path))
     base_sm = _last_smoke(_load_runs(sm_path))
+    base_cs = _last_smoke(_load_runs(cs_path))
 
     print("name,us_per_call,derived")
     read_plane.main(smoke=True)
     pipeline_throughput.main(smoke=True)
     serve_models.main(smoke=True)
+    chaos_soak.main(smoke=True)  # durability/zombie/5x gates assert inside
 
     fresh_rp = _load_runs(rp_path)[-1]
     fresh_pt = _load_runs(pt_path)[-1]
     fresh_sm = _load_runs(sm_path)[-1]
+    fresh_cs = _load_runs(cs_path)[-1]
     failures: list = []
 
     base_cells = {
@@ -139,7 +168,13 @@ def check() -> None:
         failures += _gate_rates(
             f"serve_models mode={row.get('mode')}", base, row)
 
-    checked = bool(base_cells or base_rows or base_sm_rows)
+    if base_cs.get("chaos"):
+        failures += _gate_latencies(
+            "chaos_soak chaos-pass", base_cs["chaos"],
+            fresh_cs.get("chaos", {}))
+
+    checked = bool(base_cells or base_rows or base_sm_rows
+                   or base_cs.get("chaos"))
     if failures:
         print("# PERF REGRESSION (>20% below recorded trajectory):",
               file=sys.stderr)
@@ -153,6 +188,7 @@ def check() -> None:
 
 def main(argv=None) -> None:
     from . import (
+        chaos_soak,
         fig1_composition,
         fig4_locality,
         fig5_gossip,
@@ -184,6 +220,7 @@ def main(argv=None) -> None:
             ("pipeline_throughput",
              lambda: pipeline_throughput.main(smoke=True)),
             ("serve_models", lambda: serve_models.main(smoke=True)),
+            ("chaos_soak", lambda: chaos_soak.main(smoke=True)),
         ]
     else:
         suites = [
@@ -201,6 +238,7 @@ def main(argv=None) -> None:
             ("read_plane", read_plane.main),
             ("pipeline_throughput", pipeline_throughput.main),
             ("serve_models", serve_models.main),
+            ("chaos_soak", chaos_soak.main),
         ]
     failed = []
     for name, fn in suites:

@@ -1,9 +1,25 @@
-"""Fault-tolerant training: crash mid-run, restart from the Anna KVS.
+"""Fault-tolerant training on the chaos-hardened failure plane.
 
-Trains a smoke-scale llama on synthetic data, checkpointing every 10 steps
-into a 3-replicated Anna deployment; a simulated crash at step 35 loses all
-compute-tier state; the restarted run restores step 30 from the KVS — even
-with one storage replica down — and finishes.
+The original version of this example flipped oracle kill switches: the
+runtime KNEW instantly which node was dead.  This one drives the real
+failure plane (``cluster.enable_failure_plane()``) end to end:
+
+1. train a smoke-scale llama, checkpointing every 10 steps into the
+   cluster's 3-replicated Anna tier;
+2. PARTITION the replication channels between two storage replicas
+   mid-epoch — checkpoint writes still acknowledge (reachable owners +
+   hinted handoff), replication planes are held by the fault network;
+3. the trainer's host VM dies mid-epoch.  Nothing is told about it:
+   the HEARTBEAT detector suspects the VM after missed sweeps — the
+   FaaSKeeper-style no-oracle failure story;
+4. a storage replica dies too and is likewise heartbeat-detected;
+   reads route around it with retry/backoff charged to virtual time;
+5. heal: fault network first (held planes flush), then the VM and the
+   storage node recover and REJOIN on their next heartbeat (flushing
+   hinted handoff), anti-entropy re-replicates what the partition
+   dropped;
+6. restart ``--restore``: resumes from the checkpoint written UNDER
+   the partition — zero acknowledged checkpoint loss — and finishes.
 
 Run:  PYTHONPATH=src python examples/fault_tolerant_training.py
 """
@@ -14,28 +30,91 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core.kvs import AnnaKVS
+from repro.core import Cluster
 from repro.launch.train import run
 
 
+def plane_counters(cluster):
+    snap = cluster.metrics.snapshot()
+    return {k: v for k, v in sorted(snap.items())
+            if k.startswith(("detector.", "faultnet.", "kvs.retries",
+                             "kvs.backoff", "kvs.degraded"))
+            and v}
+
+
 def main():
-    kvs = AnnaKVS(num_nodes=4, replication=3, sync_replication=True)
-    print("phase 1: train to step 35, checkpoint every 10, then crash")
-    out1 = run("llama3.2-3b", smoke=True, steps=60, batch=4, seq=64,
-               ckpt_every=10, kill_at=35, kvs=kvs, log_every=10)
-    assert out1["crashed_at"] == 35
+    cluster = Cluster(n_vms=2, executors_per_vm=2, n_kvs_nodes=4,
+                      replication=3, seed=7)
+    plane = cluster.enable_failure_plane()
+    kvs = cluster.kvs
 
-    print("\nphase 2: one Anna replica dies too")
-    kvs.fail_node("anna-0")
+    print("phase 1: healthy training to step 25, checkpoint every 10")
+    out1 = run("llama3.2-3b", smoke=True, steps=25, batch=4, seq=64,
+               ckpt_every=10, kvs=kvs, log_every=10)
+    assert out1["final_step"] == 25
 
-    print("\nphase 3: restart --restore; resumes from step 30")
+    print("\nphase 2: partition anna-0 | anna-1 mid-epoch, keep training")
+    kvs.faultnet.partition("anna-0", "anna-1")
     out2 = run("llama3.2-3b", smoke=True, steps=60, batch=4, seq=64,
+               ckpt_every=10, kill_at=35, restore=True, kvs=kvs,
+               log_every=10)
+    assert out2["crashed_at"] == 35  # step-30 checkpoint acked under partition
+    held = cluster.metrics.snapshot().get("faultnet.partitioned_planes", 0)
+    print(f"[faultnet] replication planes held by the partition: {held}")
+
+    print("\nphase 3: the trainer's VM dies; heartbeats notice, no oracle")
+    cluster.fail_vm("vm-0")
+    det = kvs.detector
+    sweeps = 0
+    while det.trusts("vm-0"):
+        cluster.tick()
+        sweeps += 1
+        assert sweeps < 32, "heartbeat detector never suspected vm-0"
+    print(f"[detector] vm-0 suspected after {sweeps} heartbeat sweeps")
+
+    print("\nphase 4: storage replica anna-0 dies too (heartbeat-detected)")
+    kvs.fail_node("anna-0")
+    sweeps = 0
+    while det.trusts("anna-0"):
+        cluster.tick()
+        sweeps += 1
+        assert sweeps < 32, "heartbeat detector never suspected anna-0"
+    print(f"[detector] anna-0 suspected after {sweeps} heartbeat sweeps")
+
+    print("\nphase 5: heal — network first, then rejoin via heartbeat")
+    plane.heal_all()  # held/delayed planes flush before recovery traffic
+    cluster.recover_vm("vm-0")
+    kvs.recover_node("anna-0")  # rejoin (and hint flush) ride the heartbeat
+    for _ in range(8):
+        cluster.tick()
+    kvs.anti_entropy()  # re-replicate whatever the partition dropped
+    for _ in range(2):
+        cluster.tick()
+    assert not det.suspected, f"still suspected: {det.suspected}"
+    assert kvs.faultnet.in_flight == 0
+
+    print("\nphase 6: restart --restore; resumes from step 30")
+    out3 = run("llama3.2-3b", smoke=True, steps=45, batch=4, seq=64,
                ckpt_every=10, restore=True, kvs=kvs, log_every=10)
-    losses = out2["losses"]
+    losses = out3["losses"]
+    assert len(losses) == 45 - 30, (
+        f"expected to resume from the step-30 checkpoint written under "
+        f"the partition, got {45 - len(losses)}")
+
+    # zero acknowledged checkpoint loss: after heal, every replica of the
+    # step-30 commit marker converged bit-identical
+    owners = kvs._owners("ckpt/30/__commit")
+    copies = {kvs.nodes[o].store.get("ckpt/30/__commit").reveal()
+              for o in owners}
+    assert copies == {30}, copies
+
     print(f"\nresumed and finished: {len(losses)} steps after restore, "
           f"final loss {losses[-1]:.4f}")
     first = np.mean(out1["losses"][:5])
     print(f"loss trajectory: {first:.3f} (start) -> {losses[-1]:.3f} (end)")
+    print("failure-plane counters:")
+    for name, val in plane_counters(cluster).items():
+        print(f"  {name}: {val}")
 
 
 if __name__ == "__main__":

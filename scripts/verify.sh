@@ -49,6 +49,18 @@ fi
 # telemetry) so each verify run leaves a readable observability record
 printf '%s\n' "$qs_out" | sed -n '/^telemetry snapshot:/,/^DSC mode/p' | sed '$d'
 
+echo "== examples/fault_tolerant_training.py =="
+if ! ft_out=$(python examples/fault_tolerant_training.py); then
+    echo "verify: FAILED — examples/fault_tolerant_training.py errored" >&2
+    echo "(the failure-plane contract: checkpoints ack under partition," >&2
+    echo "heartbeats detect losses without an oracle, restore resumes" >&2
+    echo "from the checkpoint written under the fault)" >&2
+    exit 1
+fi
+# the detector/faultnet lines prove the failure plane actually engaged
+printf '%s\n' "$ft_out" | grep -E \
+    '^(\[detector\]|\[faultnet\]|resumed and finished|  (detector|faultnet)\.)'
+
 echo "== examples/prediction_serving.py =="
 if ! ps_out=$(python examples/prediction_serving.py); then
     echo "verify: FAILED — examples/prediction_serving.py errored (the" >&2

@@ -27,6 +27,14 @@ from .consistency import (
 )
 from .dag import Dag
 from .executor import Executor, ExecutorFailure, UserLibrary
+from .faultnet import (
+    ChannelFault,
+    FailureDetector,
+    FailurePlane,
+    FaultNetwork,
+    KVSUnavailableError,
+    RetryPolicy,
+)
 from .kvs import AnnaKVS, StorageNode
 from .lattices import (
     CausalLattice,
@@ -51,6 +59,12 @@ __all__ = [
     "AnomalyTracker",
     "CacheFailure",
     "CausalLattice",
+    "ChannelFault",
+    "FailureDetector",
+    "FailurePlane",
+    "FaultNetwork",
+    "KVSUnavailableError",
+    "RetryPolicy",
     "CausalVersion",
     "CloudburstClient",
     "CloudburstFuture",

@@ -22,6 +22,7 @@ from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .arena import MergeEngine, vc_dominates_or_concurrent_batch
+from .faultnet import KVSUnavailableError
 from .kvs import AnnaKVS
 from .lattices import CausalLattice, Lattice, LWWLattice
 from .netsim import NetworkProfile, VirtualClock, DEFAULT_PROFILE
@@ -144,7 +145,13 @@ class ExecutorCache:
                     "cache", "read_many", clock=primary,
                     cache=self.cache_id, n_keys=len(uniq),
                     n_misses=len(misses)):
-                batch = self.kvs.get_merged_many(misses, clock=primary)
+                # graceful degradation under the failure plane: keys
+                # with no reachable replica are skipped (they stay
+                # non-resident and the caller sees them missing from
+                # the returned set) instead of failing the whole wave;
+                # the KVS counts them in kvs.degraded_reads
+                batch = self.kvs.get_merged_many(misses, clock=primary,
+                                                 on_unavailable="skip")
             if primary is not None:
                 for c in all_clocks[1:]:
                     c.advance(primary.now - t_fetch)
@@ -223,7 +230,12 @@ class ExecutorCache:
             if need:
                 if prefetched is None:
                     prefetched = {}
-                prefetched.update(self.kvs.get_merged_many_values(need))
+                try:
+                    prefetched.update(self.kvs.get_merged_many_values(need))
+                except KVSUnavailableError:
+                    # causal NEVER degrades: with deps unreachable the
+                    # update just stays buffered until replicas return
+                    return False
         for i, (dep_key, dep_vc) in enumerate(deps):
             if not covered[i] and not self._ensure_dep(dep_key, dep_vc, depth,
                                                        prefetched):
@@ -244,7 +256,10 @@ class ExecutorCache:
         if prefetched is not None and dep_key in prefetched:
             fetched = prefetched[dep_key]  # batched closure fetch
         else:
-            fetched = self.kvs.get_merged(dep_key)
+            try:
+                fetched = self.kvs.get_merged(dep_key)
+            except KVSUnavailableError:
+                return False  # dep unreachable: stay buffered (block)
         if not isinstance(fetched, CausalLattice):
             return False
         merged = (fetched if not isinstance(held, CausalLattice)
@@ -297,7 +312,12 @@ class ExecutorCache:
             # only trimmed after the batch lands: a no-live-replica error
             # leaves every write queued for retry after recovery (merge
             # idempotence makes re-flushing already-applied items safe).
-            self.kvs.put_many(flush_now, clock=None)
+            try:
+                self.kvs.put_many(flush_now, clock=None)
+            except KVSUnavailableError:
+                # failure-plane quorum loss: keep the whole batch queued
+                # and retry next tick once replicas heartbeat back
+                still = flush_now + still
         self.pending_flush = still
         # KVS pushes arrive as a packed PlaneBatch; deferral is row-
         # granular inside the KVS queue.  Packed rows ingest as one

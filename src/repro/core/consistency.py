@@ -290,7 +290,11 @@ class ProtocolClient:
             # cold cache: pull from the KVS *through* the cut-maintaining
             # insert — versions with unavailable dependencies stay buffered
             # (bolt-on write buffering), so the cut is never violated.
-            fetched = self.cache.kvs.get_merged(key, clock=self.clock)
+            # allow_partial=False: distributed-session causal must never
+            # serve a merge missing unreachable replicas — under the
+            # failure plane this raises (blocks) instead of degrading.
+            fetched = self.cache.kvs.get_merged(key, clock=self.clock,
+                                                allow_partial=False)
             if isinstance(fetched, CausalLattice):
                 self.cache.insert(key, fetched)
             candidate = local()
@@ -311,9 +315,11 @@ class ProtocolClient:
                     if isinstance(pinned, CausalLattice):
                         self.cache.insert(key, pinned)
                         candidate = local() or candidate
-            # 2) fall back to a merged KVS read
+            # 2) fall back to a merged KVS read (dsc blocks rather than
+            # degrade: no partial merges over unreachable replicas)
             if not satisfied(candidate):
-                fetched = self.cache.kvs.get_merged(key, clock=self.clock)
+                fetched = self.cache.kvs.get_merged(key, clock=self.clock,
+                                                    allow_partial=False)
                 if isinstance(fetched, CausalLattice):
                     self.cache.insert(key, fetched)
                     fresher = local()

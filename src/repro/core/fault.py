@@ -14,24 +14,33 @@ import dataclasses
 import random
 from typing import Callable, Dict, List, Optional, Tuple
 
+from .faultnet import ChannelFault
 from .runtime import Cluster
 
 
 @dataclasses.dataclass
 class FaultEvent:
-    at_request: int  # inject before the Nth request
-    kind: str  # 'fail_vm' | 'recover_vm' | 'fail_kvs' | 'recover_kvs' | 'straggle'
+    at_request: int  # inject before the Nth request (-1: time-triggered only)
+    kind: str  # 'fail_vm' | 'recover_vm' | 'fail_kvs' | 'recover_kvs' |
+    #           'straggle' | 'unstraggle'
     target: str
     factor: float = 1.0  # for 'straggle': slow-down multiplier
+    at_time: Optional[float] = None  # virtual-clock trigger (advance_to)
 
 
 class FaultInjector:
-    """Applies a schedule of fault events keyed by request index."""
+    """Applies a schedule of fault events keyed by request index OR by
+    virtual time: events with ``at_time`` set fire from
+    :meth:`advance_to`, the rest from :meth:`before_request`."""
 
     def __init__(self, cluster: Cluster, schedule: List[FaultEvent]):
         self.cluster = cluster
-        self.schedule = sorted(schedule, key=lambda e: e.at_request)
+        by_req = [e for e in schedule if e.at_time is None]
+        by_time = [e for e in schedule if e.at_time is not None]
+        self.schedule = sorted(by_req, key=lambda e: e.at_request)
+        self.timed = sorted(by_time, key=lambda e: e.at_time)
         self._next = 0
+        self._next_timed = 0
         self.applied: List[FaultEvent] = []
 
     def before_request(self, request_index: int) -> None:
@@ -43,6 +52,18 @@ class FaultInjector:
             self._apply(ev)
             self.applied.append(ev)
             self._next += 1
+
+    def advance_to(self, now: float) -> None:
+        """Fire every time-triggered event whose ``at_time`` has passed
+        on the driving virtual clock."""
+        while (
+            self._next_timed < len(self.timed)
+            and self.timed[self._next_timed].at_time <= now
+        ):
+            ev = self.timed[self._next_timed]
+            self._apply(ev)
+            self.applied.append(ev)
+            self._next_timed += 1
 
     def _apply(self, ev: FaultEvent) -> None:
         if ev.kind == "fail_vm":
@@ -57,16 +78,31 @@ class FaultInjector:
             for ex in self.cluster.executors.values():
                 if ex.vm_id == ev.target or ex.executor_id == ev.target:
                     ex.slow_factor = ev.factor
+        elif ev.kind == "unstraggle":
+            for ex in self.cluster.executors.values():
+                if ex.vm_id == ev.target or ex.executor_id == ev.target:
+                    ex.slow_factor = 1.0
         else:
             raise ValueError(ev.kind)
 
 
 class ChaosMonkey:
-    """Random fault injection with bounded blast radius (property tests)."""
+    """Random fault injection with bounded blast radius (property tests).
+
+    Besides node/VM kills and stragglers, a monkey attached to a cluster
+    with the failure plane enabled (``cluster.enable_failure_plane()``)
+    also injects CHANNEL faults through the fault network: lossy links
+    (drop), slow links (delay), and bidirectional partitions between KVS
+    nodes.  The blast radius is bounded so the deployment stays
+    available: at most ``replication - 1`` KVS nodes down, one VM down,
+    ``max_channel_faults`` lossy/slow rules and ``max_partitions``
+    partitions at any instant."""
 
     def __init__(self, cluster: Cluster, seed: int = 0, p_fail: float = 0.05,
                  p_recover: float = 0.5, max_failed_vms: int = 1,
-                 max_failed_kvs: int = None):
+                 max_failed_kvs: int = None, p_channel: float = 0.0,
+                 max_channel_faults: int = 2, max_partitions: int = 1,
+                 p_straggle: float = 0.0):
         self.cluster = cluster
         self.rng = random.Random(seed)
         self.p_fail = p_fail
@@ -77,8 +113,70 @@ class ChaosMonkey:
             if max_failed_kvs is not None
             else max(cluster.kvs.replication - 1, 0)
         )
+        self.p_channel = p_channel
+        self.max_channel_faults = max_channel_faults
+        self.max_partitions = max_partitions
+        self.p_straggle = p_straggle
         self.failed_vms: List[str] = []
         self.failed_kvs: List[str] = []
+        self.channel_faults: List[ChannelFault] = []
+        self.partitions: List[Tuple[str, str]] = []
+        self.straggled: List[str] = []
+
+    def _kvs_node_ids(self) -> List[str]:
+        return sorted(self.cluster.kvs.nodes)
+
+    def _step_channels(self) -> None:
+        net = self.cluster.kvs.faultnet
+        if net is None or self.p_channel <= 0.0:
+            return
+        # heal first so links flap rather than rot
+        if self.channel_faults and self.rng.random() < self.p_recover:
+            net.remove_fault(self.channel_faults.pop())
+        if self.partitions and self.rng.random() < self.p_recover:
+            a, b = self.partitions.pop()
+            net.heal_partition(a, b)
+        if (
+            len(self.channel_faults) < self.max_channel_faults
+            and self.rng.random() < self.p_channel
+        ):
+            action = self.rng.choice(["drop", "delay", "duplicate", "reorder"])
+            kind = self.rng.choice(["gossip", "hint", "push"])
+            fault = ChannelFault(
+                action=action, kind=kind,
+                p=self.rng.uniform(0.2, 0.8),
+                delay=self.rng.uniform(0.05, 0.5),
+            )
+            net.add_fault(fault)
+            self.channel_faults.append(fault)
+        if (
+            len(self.partitions) < self.max_partitions
+            and self.rng.random() < self.p_channel
+        ):
+            nodes = self._kvs_node_ids()
+            if len(nodes) >= 2:
+                a, b = self.rng.sample(nodes, 2)
+                net.partition(a, b)
+                self.partitions.append((a, b))
+
+    def _step_stragglers(self) -> None:
+        if self.p_straggle <= 0.0:
+            return
+        if self.straggled and self.rng.random() < self.p_recover:
+            vm = self.straggled.pop()
+            for ex in self.cluster.executors.values():
+                if ex.vm_id == vm:
+                    ex.slow_factor = 1.0
+        if not self.straggled and self.rng.random() < self.p_straggle:
+            vms = sorted({ex.vm_id for ex in self.cluster.executors.values()})
+            cands = [v for v in vms if v not in self.failed_vms]
+            if cands:
+                vm = self.rng.choice(cands)
+                factor = self.rng.uniform(2.0, 8.0)
+                for ex in self.cluster.executors.values():
+                    if ex.vm_id == vm:
+                        ex.slow_factor = factor
+                self.straggled.append(vm)
 
     def step(self) -> None:
         # recover first so the system heals over time
@@ -110,11 +208,40 @@ class ChaosMonkey:
                 node = self.rng.choice(live)
                 self.cluster.kvs.fail_node(node)
                 self.failed_kvs.append(node)
+        self._step_channels()
+        self._step_stragglers()
 
-    def heal_all(self) -> None:
+    def heal_all(self, settle_ticks: int = 8) -> None:
+        """Stop the chaos and drive the deployment back to health.
+
+        Order matters: the fault NETWORK heals first (rules cleared,
+        partition-held and delayed planes flushed into their inboxes) so
+        that the recovery traffic that follows — hinted-handoff flushes
+        on heartbeat rejoin, anti-entropy re-replication — cannot itself
+        be dropped or partitioned away.  Then nodes/VMs recover,
+        heartbeats clear suspicions, and anti-entropy repairs whatever
+        the dropped gossip lost."""
+        plane = self.cluster.kvs.failure_plane
+        if plane is not None:
+            plane.heal_all()
+        self.channel_faults.clear()
+        self.partitions.clear()
         for vm in self.failed_vms:
             self.cluster.recover_vm(vm)
         for node in self.failed_kvs:
             self.cluster.kvs.recover_node(node)
         self.failed_vms.clear()
         self.failed_kvs.clear()
+        for vm in self.straggled:
+            for ex in self.cluster.executors.values():
+                if ex.vm_id == vm:
+                    ex.slow_factor = 1.0
+        self.straggled.clear()
+        if plane is not None:
+            # heartbeat sweeps: rejoin every recovered endpoint (flushing
+            # its hinted handoff), then re-replicate dropped gossip
+            for _ in range(settle_ticks):
+                self.cluster.tick()
+            self.cluster.kvs.anti_entropy()
+            for _ in range(2):
+                self.cluster.tick()

@@ -34,9 +34,10 @@ from .arena import (
     device_tier_default,
     try_reduce_lww,
 )
+from .faultnet import FailurePlane, KVSUnavailableError, RetryPolicy
 from .lattices import Lattice
 from .netsim import NetworkProfile, VirtualClock, DEFAULT_PROFILE
-from ..obs import MetricsRegistry, NULL_TRACER, Tracer
+from ..obs import MetricsRegistry, NULL_TRACER, Tracer, counter_shim
 
 
 def _hash(s: str) -> int:
@@ -137,6 +138,16 @@ class AnnaKVS:
         self._cache_index: Dict[str, Set[str]] = defaultdict(set)
         self._cache_pushes: Dict[str, PlaneBuffer] = defaultdict(PlaneBuffer)
         self._hints: Dict[str, PlaneBuffer] = defaultdict(PlaneBuffer)
+        # failure plane (off by default: every data-path hook is a single
+        # ``is not None`` check until enable_failure_plane() is called)
+        self.failure_plane: Optional[FailurePlane] = None
+        self.faultnet = None
+        self.detector = None
+        self.retry = RetryPolicy()
+        self._m_retries = self.metrics.counter("kvs.retries")
+        self._m_backoff = self.metrics.counter("kvs.backoff_s")
+        self._m_degraded = self.metrics.counter("kvs.degraded_reads")
+        self._m_staleness = self.metrics.gauge("kvs.staleness_s")
         # pull-based telemetry: the plane counters mutate inside kernel
         # launch paths, so the registry reads them lazily at snapshot —
         # zero added cost on the hot planes
@@ -155,6 +166,134 @@ class AnnaKVS:
         for i in range(num_nodes):
             self.add_node(f"anna-{i}")
 
+    retries = counter_shim("_m_retries")
+    backoff_s = counter_shim("_m_backoff")
+    degraded_reads = counter_shim("_m_degraded")
+
+    # -- failure plane (channel faults + heartbeat detection + retry) --------
+    def enable_failure_plane(
+        self,
+        clock: Optional[VirtualClock] = None,
+        retry: Optional[RetryPolicy] = None,
+        heartbeat_interval: float = 0.05,
+        suspicion_multiplier: float = 3.0,
+        seed: Optional[int] = None,
+    ) -> FailurePlane:
+        """Switch the tier from oracle liveness to the failure plane:
+        every replication channel (gossip, hints, cache pushes,
+        membership handoff) routes through a :class:`FaultNetwork`, and
+        liveness becomes heartbeat suspicion on the plane's virtual
+        clock — routing never consults ``node.alive`` directly again;
+        a dead-but-trusted node is discovered by data-path probe
+        timeouts charged to the caller's clock."""
+        if self.failure_plane is not None:
+            return self.failure_plane
+        rng = random.Random(
+            (self.profile.seed if hasattr(self.profile, "seed") else 0)
+            if seed is None else seed)
+        plane = FailurePlane(
+            clock or VirtualClock(), self._resolve_channel, rng=rng,
+            metrics=self.metrics, retry=retry,
+            heartbeat_interval=heartbeat_interval,
+            suspicion_multiplier=suspicion_multiplier)
+        self.failure_plane = plane
+        self.faultnet = plane.network
+        self.detector = plane.detector
+        self.retry = plane.retry
+        for node_id in self.nodes:
+            self._register_node_endpoint(node_id)
+        return plane
+
+    def _resolve_channel(self, kind: str, dst):
+        """Delivery-time destination lookup for the fault network (never
+        hand out buffer references early: push buffers are popped when
+        empty, and membership churn swaps node objects)."""
+        if kind in ("gossip", "handoff"):
+            node = self.nodes.get(dst)
+            return node.inbox if node is not None else None
+        if kind == "hint":
+            return self._hints[dst]
+        if kind == "push":
+            return self._cache_pushes[dst]
+        return None
+
+    def _register_node_endpoint(self, node_id: str) -> None:
+        self.detector.register(
+            node_id,
+            lambda nid=node_id: (n := self.nodes.get(nid)) is not None
+            and n.alive,
+            on_rejoin=lambda nid=node_id: self._on_node_rejoin(nid))
+
+    def _on_node_rejoin(self, node_id: str) -> None:
+        """A suspected node heartbeat back: flush its hinted handoffs
+        (through the fault network, so a still-partitioned path holds
+        them) and let reads route to it again."""
+        hints = self._hints.pop(node_id, None)
+        if hints is not None and node_id in self.nodes:
+            self.faultnet.deliver("handoff", None, node_id,
+                                  batch=hints.drain())
+
+    def _reachable(self, node_id: str, node: StorageNode) -> bool:
+        """Routing predicate: oracle liveness without the failure plane,
+        heartbeat trust with it (a dead-but-trusted node stays a routing
+        target until a probe timeout or missed heartbeat suspects it)."""
+        if self.detector is None:
+            return node.alive
+        return node.alive and self.detector.trusts(node_id)
+
+    def _probe_owners(self, owner_ids, clock: Optional[VirtualClock],
+                      op: str) -> None:
+        """Detector-mode data-path probe: a trusted-but-dead owner means
+        the op's request to it times out — charge the timeout plus a
+        capped exponential backoff to the caller's virtual clock, report
+        the suspicion, and retry (the retry re-routes around the now
+        suspected replica)."""
+        if self.detector is None:
+            return
+        tr = self.tracer
+        for attempt in range(self.retry.max_attempts):
+            stale = [o for o in owner_ids
+                     if self.detector.trusts(o)
+                     and (n := self.nodes.get(o)) is not None
+                     and not n.alive]
+            if not stale:
+                return
+            for o in stale:
+                self.detector.report_timeout(o)
+            back = self.retry.backoff(attempt)
+            self._m_retries.inc(len(stale))
+            self._m_backoff.inc(self.retry.op_timeout + back)
+            if clock is not None:
+                t0 = clock.now
+                clock.advance(self.retry.op_timeout + back)
+                if tr.enabled and tr.cur is not None:
+                    tr.add_complete(
+                        "kvs", f"retry:{op}", t0, clock.now,
+                        tid=tr.cur.tid, parent=tr.cur, attempt=attempt,
+                        suspects=list(stale))
+
+    def anti_entropy(self) -> int:
+        """One full repair round: every alive node re-exports its owned
+        keys to the co-owners, one packed plane batch per (src, dst)
+        pair.  This is the convergence backstop after chaos — a dropped
+        gossip plane is otherwise lost forever (there is no background
+        read-repair on idle keys) — and what makes ``heal_all()``'s
+        bit-identical-replicas assertion well-defined.  Merge makes the
+        re-export idempotent; returns the number of key-copies shipped."""
+        shipped = 0
+        for node in self.nodes.values():
+            if not node.alive:
+                continue
+            by_dst: Dict[str, List[str]] = defaultdict(list)
+            for key in node.store:
+                for owner in self._owners(key):
+                    if owner != node.node_id:
+                        by_dst[owner].append(key)
+            for dst, keys in by_dst.items():
+                self._enqueue_handoff(dst, node.engine.export_planes(keys))
+                shipped += len(keys)
+        return shipped
+
     # -- membership -----------------------------------------------------------
     def _enqueue_handoff(self, owner: str, batch: PlaneBatch) -> None:
         """Route a membership-change handoff batch to ``owner``, through
@@ -164,10 +303,16 @@ class AnnaKVS:
         if not batch:
             return
         node = self.nodes.get(owner)
-        if node is not None and node.alive:
-            node.inbox.add_batch(batch)
+        if node is not None and self._reachable(owner, node):
+            if self.faultnet is not None:
+                self.faultnet.deliver("handoff", None, owner, batch=batch)
+            else:
+                node.inbox.add_batch(batch)
         else:
-            self._hints[owner].add_batch(batch)
+            if self.faultnet is not None:
+                self.faultnet.deliver("hint", None, owner, batch=batch)
+            else:
+                self._hints[owner].add_batch(batch)
 
     def add_node(self, node_id: str) -> None:
         assert node_id not in self.nodes
@@ -189,6 +334,8 @@ class AnnaKVS:
         self.metrics.register_callback(
             pre + "materializations",
             lambda n=node: n.engine.arena.materializations)
+        if self.detector is not None:
+            self._register_node_endpoint(node_id)
         for v in range(self.VNODES):
             bisect.insort(self._ring, (_hash(f"{node_id}#{v}"), node_id))
         # New owner: existing replicas re-gossip their keys so ownership
@@ -204,6 +351,8 @@ class AnnaKVS:
     def remove_node(self, node_id: str) -> None:
         node = self.nodes.pop(node_id)
         self.metrics.unregister_prefix(f"kvs.node.{node_id}.")
+        if self.detector is not None:
+            self.detector.unregister(node_id)
         self._owners_cache.clear()  # ring placement changes
         self._placement_epoch += 1
         self._ring = [(h, n) for (h, n) in self._ring if n != node_id]
@@ -224,6 +373,11 @@ class AnnaKVS:
         node = self.nodes[node_id]
         node.alive = True
         self._placement_epoch += 1
+        if self.detector is not None:
+            # no instant knowledge: the node stays suspected (and hinted
+            # to) until its next heartbeat round, whose rejoin callback
+            # flushes the hints through the fault network
+            return
         hints = self._hints.pop(node_id, None)
         if hints is not None:
             node.inbox.add_batch(hints.drain())
@@ -272,12 +426,19 @@ class AnnaKVS:
             clock.advance(
                 self.profile.sample(self.profile.kvs_op, value.byte_size())
             )
+        if self.detector is not None:
+            # a trusted-but-dead owner means this put's request to it
+            # times out: charge the probe + backoff, suspect it, retry
+            self._probe_owners(owners, clock, "put")
         merge_targets: List[str] = []
         gossip_targets: List[str] = []
+        hint_targets: List[str] = []
         for owner in owners:
             node = self.nodes[owner]
-            if not node.alive:
-                self._hints[owner].add(key, value)
+            if not self._reachable(owner, node):
+                # dead (oracle) or suspected (detector): hinted handoff,
+                # delivered when the owner recovers / heartbeats back
+                hint_targets.append(owner)
                 continue
             if not merge_targets or sync:
                 merge_targets.append(owner)
@@ -285,10 +446,26 @@ class AnnaKVS:
             else:
                 gossip_targets.append(owner)  # async gossip
         if not merge_targets:
+            # NO side effects on the unavailable path: a put that raises
+            # is UNACKED and must not resurface later via a hint flush
+            # (the chaos convergence oracle only replays acked writes)
+            if self.detector is not None:
+                raise KVSUnavailableError([key], op="put")
             raise RuntimeError(f"no live replica for {key}")
+        for owner in hint_targets:
+            if self.faultnet is not None:
+                self.faultnet.deliver("hint", None, owner,
+                                      key=key, value=value)
+            else:
+                self._hints[owner].add(key, value)
         # push-based cache invalidation/update (paper §4.2)
-        for cache_id in self._cache_index.get(key, ()):
-            self._cache_pushes[cache_id].add(key, value)
+        if self.faultnet is None:
+            for cache_id in self._cache_index.get(key, ()):
+                self._cache_pushes[cache_id].add(key, value)
+        else:
+            for cache_id in self._cache_index.get(key, ()):
+                self.faultnet.deliver("push", merge_targets[0], cache_id,
+                                      key=key, value=value)
         return merge_targets, gossip_targets
 
     def put(
@@ -306,8 +483,13 @@ class AnnaKVS:
         merged: Optional[Lattice] = None
         for owner in merge_targets:
             merged = self.nodes[owner].merge_in(key, value)
-        for owner in gossip_targets:
-            self.nodes[owner].inbox.add(key, value)  # packed at enqueue
+        if self.faultnet is None:
+            for owner in gossip_targets:
+                self.nodes[owner].inbox.add(key, value)  # packed at enqueue
+        else:
+            for owner in gossip_targets:
+                self.faultnet.deliver("gossip", merge_targets[0], owner,
+                                      key=key, value=value)
         return merged
 
     def put_many(
@@ -347,8 +529,13 @@ class AnnaKVS:
                 raise
             for owner in merge_targets:
                 coord_batches[owner].append((key, value))
-            for owner in gossip_targets:
-                self.nodes[owner].inbox.add(key, value)
+            if self.faultnet is None:
+                for owner in gossip_targets:
+                    self.nodes[owner].inbox.add(key, value)
+            else:
+                for owner in gossip_targets:
+                    self.faultnet.deliver("gossip", merge_targets[0], owner,
+                                          key=key, value=value)
         apply_batches()
         if sp is not None:
             tr.finish(sp)
@@ -376,6 +563,8 @@ class AnnaKVS:
         owners = self._owners(key)
         if not owners:
             return None
+        if self.detector is not None:
+            self._probe_owners(owners, clock, "get")
         # Anna routes to ANY replica: reads may be stale under async
         # replication — the source of Table 2's anomalies.
         if prefer is None:
@@ -385,7 +574,7 @@ class AnnaKVS:
             order = sorted(owners, key=lambda o: o != prefer)
         for owner in order:
             node = self.nodes[owner]
-            if not node.alive:
+            if not self._reachable(owner, node):
                 continue
             node.gets += 1
             val = node.store.get(key)
@@ -397,13 +586,14 @@ class AnnaKVS:
 
     def _merge_replicas(self, key: str) -> Optional[Lattice]:
         """Per-key read-repair fold (no clock accounting): merge the key
-        across all live replicas, in owner order, dead replicas skipped.
-        Both ``get_merged`` and the leftover path of ``get_merged_many``
-        route through here so scalar and batched reads cannot drift."""
+        across all reachable replicas, in owner order, dead (oracle) or
+        suspected (detector) replicas skipped.  Both ``get_merged`` and
+        the leftover path of ``get_merged_many`` route through here so
+        scalar and batched reads cannot drift."""
         replicas: List[Lattice] = []
         for owner in self._owners(key):
             node = self.nodes[owner]
-            if not node.alive:
+            if not self._reachable(owner, node):
                 continue
             val = node.store.get(key)
             if val is not None:
@@ -414,13 +604,39 @@ class AnnaKVS:
                 result = val if result is None else result.merge(val)
         return result
 
-    def get_merged(self, key: str, clock: Optional[VirtualClock] = None) -> Optional[Lattice]:
-        """Read-repair style read: merge across all live replicas.
+    def _record_degraded(self, n_keys: int, unreachable) -> None:
+        """Account a read served from fewer replicas than placement
+        says: bump ``kvs.degraded_reads`` and publish how stale the
+        missing replicas might be (time since last heard)."""
+        self._m_degraded.inc(n_keys)
+        if self.detector is not None and unreachable:
+            self._m_staleness.set(self.detector.staleness(unreachable))
+
+    def get_merged(self, key: str, clock: Optional[VirtualClock] = None,
+                   allow_partial: bool = True) -> Optional[Lattice]:
+        """Read-repair style read: merge across all reachable replicas.
 
         Tensor-valued LWW replicas reduce as one batched R-replica
         ``ops.lww_merge_many`` launch; other lattice types fold
         ``Lattice.merge`` per replica as before.
+
+        Under the failure plane: unreachable (suspected) owners are
+        probed/retried with backoff first; if some owners stay
+        unreachable the merge is *partial* — served anyway when
+        ``allow_partial`` (counted in ``kvs.degraded_reads``), raised as
+        :class:`KVSUnavailableError` when the caller's consistency
+        level cannot tolerate missing replicas (dsc/causal block rather
+        than degrade) or when NO owner is reachable at all.
         """
+        if self.detector is not None:
+            owners = self._owners(key)
+            self._probe_owners(owners, clock, "get_merged")
+            unreachable = [o for o in owners
+                           if not self._reachable(o, self.nodes[o])]
+            if unreachable:
+                if len(unreachable) == len(owners) or not allow_partial:
+                    raise KVSUnavailableError([key], op="get_merged")
+                self._record_degraded(1, unreachable)
         result = self._merge_replicas(key)
         if clock is not None:
             size = result.byte_size() if result is not None else 0
@@ -449,8 +665,17 @@ class AnnaKVS:
         if tr.enabled and tr.cur is not None:
             sp = tr.start("kvs", "get_many", clock=clock or tr.cur.clock,
                           tid=tr.cur.tid, parent=tr.cur, n_keys=len(keys))
+        ukeys = list(dict.fromkeys(keys))
+        if self.detector is not None:
+            # one probe/retry round for the whole batch: every involved
+            # owner that turns out dead is suspected once, the backoff
+            # charged once (batched reads pay batched timeouts)
+            involved = list(dict.fromkeys(
+                o for key in ukeys for o in self._owners(key)))
+            self._probe_owners(involved, clock, "get_many")
         chosen: List[Tuple[str, StorageNode]] = []
-        for key in dict.fromkeys(keys):
+        degraded = 0
+        for key in ukeys:
             owners = self._owners(key)
             if not owners:
                 continue
@@ -459,13 +684,20 @@ class AnnaKVS:
                 self.rng.shuffle(order)
             else:
                 order = sorted(owners, key=lambda o: o != prefer)
+            hit = False
             for owner in order:
                 node = self.nodes[owner]
-                if not node.alive:
+                if not self._reachable(owner, node):
                     continue
                 node.gets += 1
                 chosen.append((key, node))
+                hit = True
                 break
+            if not hit and self.detector is not None:
+                degraded += 1  # no reachable replica: key absent, the
+                # cache falls back to its local copy
+        if degraded:
+            self._record_degraded(degraded, ())
         batch, leftover = self.reader.reduce_replica_planes(
             [(key, (node.engine,)) for key, node in chosen])
         by_key = dict(chosen)
@@ -484,6 +716,8 @@ class AnnaKVS:
         self,
         keys: Sequence[str],
         clock: Optional[VirtualClock] = None,
+        allow_partial: bool = True,
+        on_unavailable: str = "raise",
     ) -> PlaneBatch:
         """Batched read-repair over a whole key list (the read plane).
 
@@ -514,15 +748,49 @@ class AnnaKVS:
                           clock=clock or tr.cur.clock, tid=tr.cur.tid,
                           parent=tr.cur, n_keys=len(keys))
         ukeys = tuple(dict.fromkeys(keys))
+        if self.detector is not None:
+            involved = list(dict.fromkeys(
+                o for key in ukeys for o in self._owners(key)))
+            self._probe_owners(involved, clock, "get_merged_many")
+            # reachability per key: fully-unreachable keys either raise
+            # (the caller cannot degrade) or are skipped (the cache
+            # serves its freshest local copy); partially-reachable keys
+            # serve a degraded merge over the replicas that answered
+            if not all(self._reachable(nid, n)
+                       for nid, n in self.nodes.items()):
+                unavailable: List[str] = []
+                partial = 0
+                stale_owners: Set[str] = set()
+                for key in ukeys:
+                    owners = self._owners(key)
+                    down = [o for o in owners
+                            if not self._reachable(o, self.nodes[o])]
+                    if not down:
+                        continue
+                    if len(down) == len(owners) or not allow_partial:
+                        unavailable.append(key)
+                    else:
+                        partial += 1
+                    stale_owners.update(down)
+                if unavailable:
+                    if on_unavailable == "raise" or not allow_partial:
+                        raise KVSUnavailableError(
+                            unavailable, op="get_merged_many")
+                    ukeys = tuple(k for k in ukeys if k not in
+                                  set(unavailable))
+                    partial += len(unavailable)
+                if partial:
+                    self._record_degraded(partial, stale_owners)
         sig = (self._placement_epoch,
-               tuple((nid, node.alive, node.engine.layout_version)
+               tuple((nid, self._reachable(nid, node),
+                      node.engine.layout_version)
                      for nid, node in self.nodes.items()))
         cached = self._read_plans.get(ukeys)
         if cached is not None and cached[0] == sig:
             plan = cached[1]
         else:
             live = {nid: node.engine for nid, node in self.nodes.items()
-                    if node.alive}
+                    if self._reachable(nid, node)}
             keyed = [
                 (key, [live[o] for o in self._owners(key) if o in live])
                 for key in ukeys
@@ -623,7 +891,23 @@ class AnnaKVS:
 
     # -- gossip / background ------------------------------------------------------
     def tick(self, defer_prob: float = 0.0) -> int:
-        """Deliver pending replica gossip; returns #messages applied."""
+        """Deliver pending replica gossip; returns #messages applied.
+
+        With the failure plane enabled each tick is one background
+        round: the plane clock advances by a heartbeat interval (due
+        delayed planes release, one heartbeat sweep runs), the reorder
+        pool flushes shuffled, and hinted handoffs for nodes that are
+        back in trust drain through the fault network."""
+        if self.failure_plane is not None:
+            self.failure_plane.advance(self.detector.interval)
+            self.faultnet.flush_tick()
+            if self._hints:
+                for owner in [o for o in self._hints
+                              if (n := self.nodes.get(o)) is not None
+                              and self._reachable(o, n)]:
+                    buf = self._hints.pop(owner)
+                    self.faultnet.deliver("handoff", None, owner,
+                                          batch=buf.drain())
         return sum(n.drain_inbox(self.rng, defer_prob)
                    for n in self.nodes.values() if n.alive)
 

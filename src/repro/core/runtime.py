@@ -60,6 +60,7 @@ from .consistency import (
 )
 from .dag import Dag
 from .executor import CloudburstReference, Executor, ExecutorFailure
+from .faultnet import FailurePlane, KVSUnavailableError, RetryPolicy
 from .kvs import AnnaKVS
 from .lattices import LamportClock, Lattice, LWWLattice, encapsulate
 from .netsim import NetworkProfile, VirtualClock
@@ -183,7 +184,12 @@ class CloudburstFuture:
         if self.run is not None:
             return self.run.finished
         # key EXISTENCE, not value: a stored None still counts as done
-        return self._cluster.kvs.get_merged(self.key) is not None
+        try:
+            return self._cluster.kvs.get_merged(self.key) is not None
+        except KVSUnavailableError:
+            # replicas unreachable right now: indistinguishable from
+            # "not written yet" — report not-done, never raise
+            return False
 
     def result(self) -> DagResult:
         """Full :class:`DagResult` (latency/schedule/retries); blocks via
@@ -217,8 +223,11 @@ class CloudburstFuture:
             else:
                 # existence probe, not value probe: a key legitimately
                 # storing None must resolve to None, not spin forever
-                lat = self._cluster.kvs.get_merged(self.key,
-                                                   clock=self._clock)
+                try:
+                    lat = self._cluster.kvs.get_merged(self.key,
+                                                       clock=self._clock)
+                except KVSUnavailableError:
+                    lat = None  # unreachable == not arrived yet; keep waiting
                 if lat is not None:
                     return lat.reveal()
             if deadline is not None and time.monotonic() >= deadline:
@@ -285,6 +294,9 @@ class Cluster:
             seed=seed,
         )
         self.client_clock = LamportClock("client")
+        # chaos-hardened failure plane (off by default: zero overhead).
+        # Enabled via enable_failure_plane(); shared with the KVS tier.
+        self.failure_plane: Optional[FailurePlane] = None
         self.tracker: Optional[AnomalyTracker] = None
         self._dag_seq = 0
         self._run_seq = 0
@@ -326,6 +338,40 @@ class Cluster:
     batched_invokes = counter_shim("_m_batched_invokes")
     batched_invoke_requests = counter_shim("_m_batched_invoke_requests")
 
+    # -- failure plane ------------------------------------------------------------
+    def enable_failure_plane(
+        self,
+        retry: Optional[RetryPolicy] = None,
+        heartbeat_interval: float = 0.05,
+        suspicion_multiplier: float = 3.0,
+    ) -> FailurePlane:
+        """Switch the deployment from oracle liveness to heartbeat-based
+        failure detection, and interpose the fault network on every
+        replication channel.  Idempotent.  VM endpoints heartbeat to the
+        same detector as the KVS nodes, so the scheduler routes around
+        suspected VMs instead of consulting ground-truth ``alive`` flags.
+        """
+        plane = self.kvs.enable_failure_plane(
+            retry=retry,
+            heartbeat_interval=heartbeat_interval,
+            suspicion_multiplier=suspicion_multiplier,
+        )
+        self.failure_plane = plane
+        for vm_id in sorted({ex.vm_id for ex in self.executors.values()}):
+            self._register_vm_endpoint(vm_id)
+        return plane
+
+    def _register_vm_endpoint(self, vm_id: str) -> None:
+        det = self.kvs.detector
+        if det is None or vm_id in det.last_heard:
+            return
+        det.register(
+            vm_id,
+            lambda v=vm_id: any(
+                ex.alive for ex in self.executors.values() if ex.vm_id == v
+            ),
+        )
+
     # -- elasticity ---------------------------------------------------------------
     def add_vm(self, executors_per_vm: int = 3) -> List[str]:
         vm_id = f"vm-{self._vm_count}"
@@ -343,6 +389,8 @@ class Cluster:
         if hasattr(self, "scheduler"):
             for eid in ids:
                 self.scheduler.add_executor(self.executors[eid])
+        if getattr(self, "kvs", None) is not None and self.kvs.detector is not None:
+            self._register_vm_endpoint(vm_id)
         return ids
 
     def remove_vm(self, vm_id: str) -> None:
@@ -351,6 +399,8 @@ class Cluster:
             del self.executors[eid]
         self.caches.pop(f"cache-{vm_id}", None)
         self.metrics.unregister_prefix(f"cache.cache-{vm_id}.")
+        if self.kvs.detector is not None:
+            self.kvs.detector.unregister(vm_id)
         self._refresh_registry()
 
     def _refresh_registry(self) -> None:
@@ -733,7 +783,7 @@ class Cluster:
                         self._warm_charged[run.run_id] = (
                             self._warm_charged.get(run.run_id, 0.0)
                             + run.clock.now - t_warm)
-                    except CacheFailure as e:
+                    except (CacheFailure, KVSUnavailableError) as e:
                         self._fail_attempt(run, e)
                 continue
             fused = list(dict.fromkeys(
@@ -754,7 +804,7 @@ class Cluster:
                     self._warm_charged[run.run_id] = (
                         self._warm_charged.get(run.run_id, 0.0)
                         + run.clock.now - t_warms[run.run_id])
-            except CacheFailure as e:
+            except (CacheFailure, KVSUnavailableError) as e:
                 # fail only runs still on the attempt that planned this
                 # fetch: a run already restarted by an earlier group this
                 # turn must not burn a second retry for the same turn
@@ -810,7 +860,8 @@ class Cluster:
                         fn, args, run.session, self.caches, clock=run.clock,
                         tracker=self.tracker, prefetch=False,
                     )
-            except (DagRestart, ExecutorFailure, CacheFailure) as e:
+            except (DagRestart, ExecutorFailure, CacheFailure,
+                    KVSUnavailableError) as e:
                 if inv_span is not None:
                     tr.finish(inv_span, error=type(e).__name__)
                 self._fail_attempt(run, e)
@@ -832,7 +883,8 @@ class Cluster:
                 raise ValueError(
                     f"batch_call for {fn!r} returned {len(results)} results "
                     f"for {len(entries)} invocations")
-        except (DagRestart, ExecutorFailure, CacheFailure) as e:
+        except (DagRestart, ExecutorFailure, CacheFailure,
+                KVSUnavailableError) as e:
             for run, _ex, _ul, _res, _tb, inv_span in entries:
                 if inv_span is not None:
                     tr.finish(inv_span, error=type(e).__name__)
@@ -890,7 +942,8 @@ class Cluster:
                     fn, args, run.session, self.caches, clock=run.clock,
                     tracker=self.tracker, prefetch=False,
                 )
-        except (DagRestart, ExecutorFailure, CacheFailure) as e:
+        except (DagRestart, ExecutorFailure, CacheFailure,
+                KVSUnavailableError) as e:
             if inv_span is not None:
                 tr.finish(inv_span, error=type(e).__name__)
             self._fail_attempt(run, e)
@@ -923,7 +976,8 @@ class Cluster:
                         fn, args, run.session, self.caches, clock=spec_clock,
                         tracker=self.tracker, prefetch=self.read_prefetch,
                     )
-                except (DagRestart, ExecutorFailure, CacheFailure) as e:
+                except (DagRestart, ExecutorFailure, CacheFailure,
+                        KVSUnavailableError) as e:
                     if inv_span is not None:
                         tr.finish(inv_span, error=type(e).__name__)
                     self._fail_attempt(run, e)
@@ -973,6 +1027,16 @@ class Cluster:
             for eid in run.schedule.values()
             if eid not in self.executors or not self.executors[eid].alive
         }
+        det = self.kvs.detector
+        if det is not None:
+            # an attempt failure is an OBSERVED timeout on the executors
+            # it was scheduled on — feed the dead ones to the failure
+            # detector so subsequent scheduling routes around their VM
+            # without waiting for the heartbeat sweep
+            for eid in set(run.schedule.values()):
+                ex = self.executors.get(eid)
+                if ex is not None and not ex.alive and ex.vm_id in det.last_heard:
+                    det.report_timeout(ex.vm_id)
         if run.attempt >= self.max_retries:
             run.state = RUN_FAILED
             self._m_failed.inc()
@@ -1000,6 +1064,7 @@ class Cluster:
         if not completed:
             return
         responses: List[Tuple[DagRun, Lattice]] = []
+        unfinalized: set = set()
         for run in completed:
             sinks = run.dag.sinks()
             run.value = (
@@ -1009,7 +1074,15 @@ class Cluster:
             if run.response_key is not None:
                 if len(completed) == 1:
                     t_resp = run.clock.now
-                    self.put(run.response_key, run.value, clock=run.clock)
+                    try:
+                        self.put(run.response_key, run.value, clock=run.clock)
+                    except KVSUnavailableError as e:
+                        # response replicas unreachable: the attempt is not
+                        # acked — retry the whole DAG (§4.5 idempotence
+                        # makes the re-put safe)
+                        self._fail_attempt(run, e)
+                        unfinalized.add(run.run_id)
+                        continue
                     if run.span is not None:
                         self.tracer.add_complete(
                             "kvs", "response_put", t_resp, run.clock.now,
@@ -1017,20 +1090,34 @@ class Cluster:
                 else:
                     responses.append((run, self._client_lattice(run.value)))
         if responses:
-            self.kvs.put_many(
-                [(run.response_key, lat) for run, lat in responses],
-                clock=None, sync=True,
-            )
-            self.batched_response_puts += 1
-            for run, lat in responses:
-                t_resp = run.clock.now
-                run.clock.advance(
-                    self.profile.sample(self.profile.kvs_op, lat.byte_size()))
-                if run.span is not None:
-                    self.tracer.add_complete(
-                        "kvs", "response_put", t_resp, run.clock.now,
-                        tid=run.run_id, parent=run.span, batched=True)
+            try:
+                self.kvs.put_many(
+                    [(run.response_key, lat) for run, lat in responses],
+                    clock=None, sync=True,
+                )
+            except KVSUnavailableError as e:
+                # some response key had no reachable replica; puts before
+                # the failing key may have landed, but restarting every
+                # run in the batch is safe (re-puts merge idempotently)
+                for run, _lat in responses:
+                    if run.state == RUN_RUNNING:
+                        self._fail_attempt(run, e)
+                    unfinalized.add(run.run_id)
+                responses = []
+            else:
+                self.batched_response_puts += 1
+                for run, lat in responses:
+                    t_resp = run.clock.now
+                    run.clock.advance(
+                        self.profile.sample(self.profile.kvs_op,
+                                            lat.byte_size()))
+                    if run.span is not None:
+                        self.tracer.add_complete(
+                            "kvs", "response_put", t_resp, run.clock.now,
+                            tid=run.run_id, parent=run.span, batched=True)
         for run in completed:
+            if run.run_id in unfinalized:
+                continue
             run.clock.advance(self.profile.sample(self.profile.tcp, 256))
             if self.tracker is not None:
                 self.tracker.finish_dag(run.session.dag_id)
@@ -1069,17 +1156,22 @@ class Cluster:
         p99 = s[min(len(s) - 1, int(0.99 * len(s)))]
         return max(p99 * 2.0, 1e-4)
 
+    def _vm_trusted(self, vm_id: str) -> bool:
+        det = self.kvs.detector
+        return det is None or det.trusts(vm_id)
+
     def _pick_alternate(self, fn_name: str, exclude: str) -> Optional[Executor]:
         cands = [
             self.executors[e]
             for e in self.scheduler.function_locations.get(fn_name, [])
             if e != exclude and self.executors[e].alive
+            and self._vm_trusted(self.executors[e].vm_id)
         ]
         if not cands:
             cands = [
                 ex
                 for eid, ex in self.executors.items()
-                if eid != exclude and ex.alive
+                if eid != exclude and ex.alive and self._vm_trusted(ex.vm_id)
             ]
             for ex in cands:
                 if not ex.has_function(fn_name):

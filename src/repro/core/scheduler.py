@@ -144,6 +144,18 @@ class Scheduler:
             self.utilization[eid] = ex.utilization(window_seconds)
 
     # -- per-request scheduling -----------------------------------------------------------
+    def _schedulable(self, executor: Executor) -> bool:
+        """Liveness as the scheduler KNOWS it.  With the failure plane
+        enabled the ground-truth ``alive`` flag is off-limits: placement
+        consults the heartbeat detector's suspicion list instead, so a
+        freshly-dead-but-still-trusted executor CAN be picked — the
+        invocation then times out, the engine reports the timeout, and
+        the retry routes around it (no instant-knowledge oracle)."""
+        det = self.kvs.detector
+        if det is not None and executor.vm_id in det.last_heard:
+            return det.trusts(executor.vm_id)
+        return executor.alive
+
     def pick_executor(
         self,
         fn_name: str,
@@ -154,12 +166,13 @@ class Scheduler:
         candidates = [
             e
             for e in self.function_locations.get(fn_name, [])
-            if e not in exclude and self.executors[e].alive
+            if e not in exclude and self._schedulable(self.executors[e])
         ]
         if not candidates:
             # cold function: any live executor can pull + deserialize it
             candidates = [
-                e for e, ex in self.executors.items() if ex.alive and e not in exclude
+                e for e, ex in self.executors.items()
+                if self._schedulable(ex) and e not in exclude
             ]
         if not candidates:
             raise RuntimeError("no live executors")

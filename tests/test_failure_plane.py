@@ -1,0 +1,421 @@
+"""Chaos-hardened failure plane: channel faults, heartbeat detection,
+retry/backoff, graceful degradation.
+
+Property: ANY schedule of channel faults (drop / delay / duplicate /
+reorder / partition) plus node kills, followed by ``heal_all()``,
+converges every replica bit-identical to the no-fault oracle run of the
+same acked workload — dropped gossip is repaired by anti-entropy,
+partition-held and delayed planes flush on heal, duplicates are absorbed
+by lattice idempotence.
+
+Also covered: a suspected-but-alive endpoint is harmless (reads route
+around it, writes hint to it, it rejoins on its next heartbeat); retry
+backoff is charged to the op's VirtualClock; Table-2 anomaly counts are
+invariant under duplicate/reorder-only chaos; with the plane disabled
+every hook is a no-op (counter-asserted zero overhead); steady-state
+heartbeats construct no per-key state.
+"""
+
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+except ImportError:  # deterministic seeded fallback (see _hypothesis_stub)
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core import (
+    AnnaKVS,
+    AnomalyTracker,
+    ChannelFault,
+    Cluster,
+    KVSUnavailableError,
+    LamportClock,
+    LWWLattice,
+    NetworkProfile,
+    RetryPolicy,
+    ShadowLWWLattice,
+    VectorClock,
+    VirtualClock,
+)
+from repro.core.fault import ChaosMonkey, FaultEvent, FaultInjector
+
+N_NODES = 4
+REPLICATION = 2
+KEYS = [f"k{i}" for i in range(6)]
+
+# chaos-schedule opcodes, interpreted by _run_schedule (put-heavy so the
+# fault rules actually have traffic to bite)
+OPS = ("put", "put", "put", "tick", "add_fault", "heal_fault",
+       "partition", "heal_partition", "fail_node", "recover_node")
+
+
+def _mk_kvs(seed: int) -> AnnaKVS:
+    return AnnaKVS(num_nodes=N_NODES, replication=REPLICATION,
+                   profile=NetworkProfile(seed=seed))
+
+
+def _run_schedule(seed: int, schedule):
+    """Run the same acked write workload against a chaos KVS (failure
+    plane + the drawn fault schedule) and a no-fault oracle KVS."""
+    chaos = _mk_kvs(seed)
+    oracle = _mk_kvs(seed)
+    plane = chaos.enable_failure_plane()
+    lam_c, lam_o = LamportClock("w"), LamportClock("w")
+    faults, parts, down = [], [], []
+    node_ids = sorted(chaos.nodes)
+    vi = 0
+    for op_i, arg in schedule:
+        op = OPS[op_i % len(OPS)]
+        if op == "put":
+            key = KEYS[arg % len(KEYS)]
+            vi += 1
+            ts_c, ts_o = lam_c.tick(), lam_o.tick()
+            try:
+                chaos.put(key, LWWLattice(ts_c, f"v{vi}"))
+            except KVSUnavailableError:
+                continue  # not acked: the oracle must not see it either
+            oracle.put(key, LWWLattice(ts_o, f"v{vi}"))
+        elif op == "tick":
+            chaos.tick()
+            oracle.tick()
+        elif op == "add_fault":
+            if len(faults) < 3:
+                fault = ChannelFault(
+                    action=("drop", "delay", "duplicate", "reorder")[arg % 4],
+                    kind=("gossip", "hint", "handoff", None)[arg % 4],
+                    p=0.25 + (arg % 4) * 0.25,
+                    delay=0.05 + (arg % 3) * 0.2,
+                )
+                chaos.faultnet.add_fault(fault)
+                faults.append(fault)
+        elif op == "heal_fault":
+            if faults:
+                chaos.faultnet.remove_fault(faults.pop(arg % len(faults)))
+        elif op == "partition":
+            if not parts:
+                a = node_ids[arg % len(node_ids)]
+                b = node_ids[(arg // len(node_ids) + 1 + arg) % len(node_ids)]
+                if a != b:
+                    chaos.faultnet.partition(a, b)
+                    parts.append((a, b))
+        elif op == "heal_partition":
+            if parts:
+                a, b = parts.pop()
+                chaos.faultnet.heal_partition(a, b)
+        elif op == "fail_node":
+            if not down:  # blast radius: at most replication-1 nodes down
+                nid = node_ids[arg % len(node_ids)]
+                chaos.fail_node(nid)
+                down.append(nid)
+        elif op == "recover_node":
+            if down:
+                chaos.recover_node(down.pop())
+    # ---- heal: rules/partitions clear FIRST so repair traffic survives
+    plane.heal_all()
+    while down:
+        chaos.recover_node(down.pop())
+    for _ in range(8):  # heartbeat rejoins flush hinted handoff
+        chaos.tick()
+        oracle.tick()
+    chaos.anti_entropy()  # re-replicate whatever dropped gossip lost
+    for _ in range(2):
+        chaos.tick()
+        oracle.tick()
+    return chaos, oracle
+
+
+def _assert_bit_identical(chaos: AnnaKVS, oracle: AnnaKVS) -> None:
+    assert chaos.faultnet.in_flight == 0
+    assert not chaos.detector.suspected
+    for key in KEYS:
+        owners = oracle._owners(key)
+        assert chaos._owners(key) == owners
+        for owner in owners:
+            c = chaos.nodes[owner].store.get(key)
+            o = oracle.nodes[owner].store.get(key)
+            assert (c is None) == (o is None), (key, owner)
+            if o is not None:
+                assert c.reveal() == o.reveal(), (key, owner)
+                assert c.timestamp == o.timestamp, (key, owner)
+
+
+@settings(max_examples=12)
+@given(
+    st.integers(min_value=0, max_value=2 ** 20),
+    st.lists(
+        st.tuples(st.integers(min_value=0, max_value=9),
+                  st.integers(min_value=0, max_value=999)),
+        min_size=10, max_size=60,
+    ),
+)
+def test_any_chaos_schedule_converges_to_oracle(seed, schedule):
+    chaos, oracle = _run_schedule(seed, schedule)
+    _assert_bit_identical(chaos, oracle)
+
+
+def test_partition_holds_planes_until_heal():
+    kvs = _mk_kvs(3)
+    kvs.enable_failure_plane()
+    lam = LamportClock("w")
+    # find a key with two distinct owners and partition them
+    key = next(k for k in KEYS if len(set(kvs._owners(k))) == 2)
+    o1, o2 = kvs._owners(key)
+    kvs.faultnet.partition(o1, o2)
+    kvs.put(key, LWWLattice(lam.tick(), "x"))
+    kvs.tick()
+    assert kvs.faultnet.partitioned_planes >= 1
+    assert kvs.faultnet.in_flight >= 1
+    assert kvs.nodes[o2].store.get(key) is None  # gossip held
+    kvs.faultnet.heal_partition(o1, o2)
+    kvs.tick()
+    assert kvs.faultnet.in_flight == 0
+    assert kvs.nodes[o2].store.get(key).reveal() == "x"
+
+
+# -- false suspicion is harmless ---------------------------------------------------
+
+
+def test_false_suspicion_routes_around_then_rejoins():
+    kvs = _mk_kvs(5)
+    plane = kvs.enable_failure_plane()
+    lam = LamportClock("w")
+    key = next(k for k in KEYS if len(set(kvs._owners(k))) == 2)
+    victim, other = kvs._owners(key)
+    kvs.put(key, LWWLattice(lam.tick(), "v1"))
+    kvs.tick()
+    # the victim stays ALIVE but its heartbeats get dropped -> suspected
+    rule = ChannelFault(action="drop", kind="heartbeat", src=victim)
+    kvs.faultnet.add_fault(rule)
+    for _ in range(10):
+        kvs.tick()
+    assert victim in kvs.detector.suspected
+    assert kvs.detector.false_suspicions >= 1
+    # reads route around the suspected replica and still answer...
+    clk = VirtualClock()
+    lat = kvs.get_merged(key, clock=clk)
+    assert lat is not None and lat.reveal() == "v1"
+    # ...and the read is flagged degraded (freshest reachable copy)
+    assert kvs.degraded_reads >= 1
+    # writes while suspected hint to the victim instead of losing data
+    kvs.put(key, LWWLattice(lam.tick(), "v2"))
+    assert kvs.nodes[other].store.get(key).reveal() == "v2"
+    # heartbeats resume -> rejoin -> hinted writes flush to the victim
+    kvs.faultnet.remove_fault(rule)
+    for _ in range(10):
+        kvs.tick()
+    assert victim not in kvs.detector.suspected
+    assert kvs.detector.rejoins >= 1
+    assert kvs.nodes[victim].store.get(key).reveal() == "v2"
+
+
+def test_dead_node_suspected_by_heartbeat_sweep_without_data_path():
+    kvs = _mk_kvs(11)
+    kvs.enable_failure_plane()
+    victim = sorted(kvs.nodes)[0]
+    kvs.fail_node(victim)
+    assert victim not in kvs.detector.suspected  # no instant knowledge
+    for _ in range(10):  # background heartbeat rounds discover it
+        kvs.tick()
+    assert victim in kvs.detector.suspected
+    assert kvs.detector.false_suspicions == 0
+
+
+# -- retry / timeout / backoff ------------------------------------------------------
+
+
+def test_backoff_charged_to_virtual_clock():
+    retry = RetryPolicy(op_timeout=0.05, base_backoff=0.01,
+                        max_backoff=0.25, multiplier=2.0, max_attempts=3)
+    kvs = _mk_kvs(7)
+    kvs.enable_failure_plane(retry=retry)
+    lam = LamportClock("w")
+    key = next(k for k in KEYS if len(set(kvs._owners(k))) == 2)
+    kvs.put(key, LWWLattice(lam.tick(), "v"))
+    kvs.tick()
+    victim = kvs._owners(key)[0]
+    kvs.fail_node(victim)  # dead but still TRUSTED: probe must time out
+    clk = VirtualClock()
+    lat = kvs.get_merged(key, clock=clk)
+    assert lat is not None and lat.reveal() == "v"
+    # exactly one probe round: the timeout + first backoff landed on the
+    # caller's clock, beyond the ordinary sampled read cost
+    assert clk.now >= retry.op_timeout + retry.backoff(0)
+    assert kvs.retries == 1
+    assert abs(kvs.backoff_s - (retry.op_timeout + retry.backoff(0))) < 1e-9
+    assert victim in kvs.detector.suspected
+
+
+def test_unavailable_raises_typed_error_when_all_replicas_down():
+    kvs = AnnaKVS(num_nodes=2, replication=2,
+                  profile=NetworkProfile(seed=9))
+    kvs.enable_failure_plane()
+    lam = LamportClock("w")
+    kvs.put("k", LWWLattice(lam.tick(), "v"))
+    for nid in list(kvs.nodes):
+        kvs.fail_node(nid)
+    with pytest.raises(KVSUnavailableError) as ei:
+        kvs.get_merged("k", clock=VirtualClock())
+    assert "k" in ei.value.keys
+    with pytest.raises(KVSUnavailableError):
+        kvs.put("k", LWWLattice(lam.tick(), "v2"))
+
+
+# -- Table 2 invariance under dup/reorder chaos -------------------------------------
+
+
+def _anomaly_workload(kvs: AnnaKVS) -> dict:
+    """Two concurrent writers per key, monotone LWW timestamps; returns
+    the Table-2 counts the run produced."""
+    with AnomalyTracker() as t:
+        for i in range(12):
+            key = f"s{i}"
+            a = ShadowLWWLattice((2 * i + 1, "a"), VectorClock({"a": i + 1}),
+                                 (), f"va{i}")
+            b = ShadowLWWLattice((2 * i + 2, "b"), VectorClock({"b": i + 1}),
+                                 (), f"vb{i}")
+            kvs.put(key, a)
+            kvs.put(key, b)
+            kvs.tick()
+        for _ in range(6):
+            kvs.tick()
+        if kvs.failure_plane is not None:
+            kvs.failure_plane.heal_all()
+            for _ in range(2):
+                kvs.tick()
+    return {"sk": t.sk, "mk": t.mk, "dsc": t.dsc, "dsrr": t.dsrr}
+
+
+def test_anomaly_counts_invariant_under_dup_reorder_chaos():
+    baseline = _anomaly_workload(_mk_kvs(13))
+
+    plain_plane = _mk_kvs(13)
+    plain_plane.enable_failure_plane()
+    assert _anomaly_workload(plain_plane) == baseline
+
+    chaos = _mk_kvs(13)
+    chaos.enable_failure_plane()
+    chaos.faultnet.add_fault(ChannelFault(action="duplicate", kind="gossip",
+                                          p=0.5))
+    chaos.faultnet.add_fault(ChannelFault(action="reorder", kind="gossip",
+                                          p=1.0))
+    counts = _anomaly_workload(chaos)
+    assert chaos.faultnet.duplicated_planes > 0
+    assert chaos.faultnet.reordered_planes > 0
+    assert counts == baseline
+
+
+# -- zero overhead when disabled ----------------------------------------------------
+
+
+def test_disabled_plane_is_zero_overhead():
+    from repro.core import CloudburstClient
+
+    cluster = Cluster(n_vms=2, executors_per_vm=2, n_kvs_nodes=3,
+                      replication=2, seed=4)
+    client = CloudburstClient(cluster)
+    client.register(lambda x: x + 1, "fp_inc")
+    client.register(lambda x: x * 2, "fp_dbl")
+    dag = client.register_dag("fp_dag", ["fp_inc", "fp_dbl"],
+                              [("fp_inc", "fp_dbl")])
+    for i in range(5):
+        assert dag({"fp_inc": (i,)}).value == (i + 1) * 2
+        cluster.tick()
+    snap = cluster.metrics.snapshot()
+    # no failure-plane counters even EXIST until the plane is enabled
+    assert not any(k.startswith(("faultnet.", "detector.")) for k in snap)
+    assert snap["kvs.retries"] == 0
+    assert snap["kvs.backoff_s"] == 0
+    assert snap["kvs.degraded_reads"] == 0
+    assert cluster.failure_plane is None
+    assert cluster.kvs.faultnet is None and cluster.kvs.detector is None
+
+
+def test_steady_state_heartbeats_touch_no_per_key_state():
+    kvs = _mk_kvs(17)
+    kvs.enable_failure_plane()
+    lam = LamportClock("w")
+    for i in range(64):  # a real key population
+        kvs.put(f"p{i}", LWWLattice(lam.tick(), i))
+    kvs.tick()
+    det = kvs.detector
+    n_endpoints = len(det.last_heard)
+    puts_before = sum(n.puts for n in kvs.nodes.values())
+    reads_before = kvs.reader.plane_reads
+    for _ in range(100):
+        kvs.failure_plane.advance(det.interval)
+    # per-endpoint floats only: no per-key objects, stores untouched
+    assert len(det.last_heard) == n_endpoints
+    assert not det.suspected
+    assert det.heartbeats >= 100 * n_endpoints
+    assert sum(n.puts for n in kvs.nodes.values()) == puts_before
+    assert kvs.reader.plane_reads == reads_before
+
+
+# -- FaultInjector satellites -------------------------------------------------------
+
+
+def test_fault_injector_time_triggers_and_unstraggle():
+    cluster = Cluster(n_vms=2, executors_per_vm=1, n_kvs_nodes=2,
+                      replication=2, seed=2)
+    inj = FaultInjector(cluster, [
+        FaultEvent(-1, "straggle", "vm-0", factor=8.0, at_time=1.0),
+        FaultEvent(-1, "unstraggle", "vm-0", at_time=2.0),
+        FaultEvent(0, "fail_vm", "vm-1"),  # request-indexed still works
+    ])
+    inj.before_request(0)
+    assert all(not ex.alive for ex in cluster.executors.values()
+               if ex.vm_id == "vm-1")
+    inj.advance_to(0.5)
+    assert all(ex.slow_factor == 1.0 for ex in cluster.executors.values())
+    inj.advance_to(1.0)
+    assert all(ex.slow_factor == 8.0 for ex in cluster.executors.values()
+               if ex.vm_id == "vm-0")
+    inj.advance_to(5.0)
+    assert all(ex.slow_factor == 1.0 for ex in cluster.executors.values())
+    assert len(inj.applied) == 3
+
+
+# -- ChaosMonkey: bounded blast radius + ordered heal -------------------------------
+
+
+def test_chaos_monkey_bounded_blast_radius_and_heal():
+    cluster = Cluster(n_vms=3, executors_per_vm=1, n_kvs_nodes=4,
+                      replication=2, seed=6)
+    cluster.enable_failure_plane()
+    monkey = ChaosMonkey(cluster, seed=8, p_fail=0.4, p_recover=0.3,
+                         p_channel=0.5, p_straggle=0.4,
+                         max_channel_faults=2, max_partitions=1)
+    lam = LamportClock("w")
+    acked = {}
+    for i in range(60):
+        monkey.step()
+        key = KEYS[i % len(KEYS)]
+        try:
+            cluster.kvs.put(key, LWWLattice(lam.tick(), f"v{i}"))
+            acked[key] = f"v{i}"
+        except KVSUnavailableError:
+            pass
+        cluster.tick()
+        # blast radius invariants hold at EVERY step
+        assert len(monkey.failed_kvs) <= cluster.kvs.replication - 1
+        vms = {ex.vm_id for ex in cluster.executors.values()}
+        assert len(monkey.failed_vms) < len(vms)
+        assert len(monkey.channel_faults) <= 2
+        assert len(monkey.partitions) <= 1
+    monkey.heal_all()
+    assert cluster.kvs.faultnet.in_flight == 0
+    assert not cluster.kvs.detector.suspected
+    assert all(n.alive for n in cluster.kvs.nodes.values())
+    assert all(ex.alive and ex.slow_factor == 1.0
+               for ex in cluster.executors.values())
+    # zero acked-write loss: every acked value is readable post-heal and
+    # every replica of it is identical
+    for key, want in acked.items():
+        lat = cluster.kvs.get_merged(key)
+        assert lat is not None and lat.reveal() == want, key
+        copies = {cluster.kvs.nodes[o].store.get(key).reveal()
+                  for o in cluster.kvs._owners(key)}
+        assert copies == {want}, key
