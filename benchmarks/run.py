@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
   merge_plane  batched arena data plane vs per-key merges
   gossip_plane  packed-plane replication wire vs per-key-object inbox
   read_plane  batched R-replica read-repair vs per-key get_merged
+  checkpoint_plane  plane-native bulk checkpoint restore vs per-key
+                get_tree (+ chaos-schedule save/restore invariants)
   pipeline_throughput  open-loop fig8 serving at in-flight {1,4,16}
   serve_models  continuous-batched REAL forward passes vs per-request
                 dispatch + KVS-resident-params DAG serving
@@ -21,19 +23,20 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
               gates asserted in-bench
 
 ``--smoke`` runs the kernel micro-benches (kernels + merge_plane +
-gossip_plane + read_plane) plus tiny pipeline_throughput and
-serve_models passes — the fast perf-regression gate used by
-scripts/verify.sh (the merge/read benches cross-check winners against
-the Python oracle and assert on mismatch; pipeline_throughput asserts
-its cross-request batching telemetry; serve_models asserts the >= 3x
-continuous-batching speedup, token bit-identity and the zero
-second-request weight-fetch invariant).
+gossip_plane + read_plane + checkpoint_plane) plus tiny
+pipeline_throughput and serve_models passes — the fast perf-regression
+gate used by scripts/verify.sh (the merge/read/checkpoint benches
+cross-check winners against the Python oracle and assert on mismatch;
+pipeline_throughput asserts its cross-request batching telemetry;
+serve_models asserts the >= 3x continuous-batching speedup, token
+bit-identity and the zero second-request weight-fetch invariant).
 
 ``--check`` is the trajectory regression gate: it runs the read_plane,
-pipeline_throughput, serve_models and chaos_soak smoke benches fresh
-and compares their new records against the LAST matching entries
-already in ``BENCH_read_plane.json`` / ``BENCH_pipeline_throughput
-.json`` / ``BENCH_serve_models.json`` / ``BENCH_chaos_soak.json``,
+checkpoint_plane, pipeline_throughput, serve_models and chaos_soak
+smoke benches fresh and compares their new records against the LAST
+matching entries already in ``BENCH_read_plane.json`` /
+``BENCH_checkpoint_plane.json`` / ``BENCH_pipeline_throughput.json`` /
+``BENCH_serve_models.json`` / ``BENCH_chaos_soak.json``,
 failing on a >20% keys/s, req/s or tokens/s drop on the batched/plane
 paths (the jitter-prone per-key Python baselines are recorded but not
 gated) or a >20% chaos-p99 latency regression (latency gates in the
@@ -56,9 +59,9 @@ from pathlib import Path
 CHECK_KEEP = 0.8
 # gated rate fields: the optimized paths; per-key python baselines are
 # informational (they swing with host load and would flake the gate)
-CHECK_FIELDS = ("batched_keys_per_s", "device_keys_per_s",
-                "plane_keys_per_s", "host_plane_keys_per_s", "req_per_s",
-                "tokens_per_s")
+CHECK_FIELDS = ("batched_keys_per_s", "bulk_keys_per_s",
+                "device_keys_per_s", "plane_keys_per_s",
+                "host_plane_keys_per_s", "req_per_s", "tokens_per_s")
 # gated latency fields (direction inverted: fresh must stay BELOW
 # 1/CHECK_KEEP of the recorded value — a >20% p99 growth fails)
 CHECK_LATENCY_FIELDS = ("latency_p99_virtual_ms",)
@@ -114,24 +117,34 @@ def _gate_latencies(label: str, base: dict, fresh: dict) -> list:
 def check() -> None:
     """Run the recorded smoke benches fresh and fail on regression vs
     the last entries in the trajectory files."""
-    from . import chaos_soak, pipeline_throughput, read_plane, serve_models
+    from . import (
+        chaos_soak,
+        checkpoint_plane,
+        pipeline_throughput,
+        read_plane,
+        serve_models,
+    )
 
     rp_path = _ROOT / "BENCH_read_plane.json"
+    cp_path = _ROOT / "BENCH_checkpoint_plane.json"
     pt_path = _ROOT / "BENCH_pipeline_throughput.json"
     sm_path = _ROOT / "BENCH_serve_models.json"
     cs_path = _ROOT / "BENCH_chaos_soak.json"
     base_rp = _last_smoke(_load_runs(rp_path))
+    base_cp = _last_smoke(_load_runs(cp_path))
     base_pt = _last_smoke(_load_runs(pt_path))
     base_sm = _last_smoke(_load_runs(sm_path))
     base_cs = _last_smoke(_load_runs(cs_path))
 
     print("name,us_per_call,derived")
     read_plane.main(smoke=True)
+    checkpoint_plane.main(smoke=True)  # chaos invariants assert inside
     pipeline_throughput.main(smoke=True)
     serve_models.main(smoke=True)
     chaos_soak.main(smoke=True)  # durability/zombie/5x gates assert inside
 
     fresh_rp = _load_runs(rp_path)[-1]
+    fresh_cp = _load_runs(cp_path)[-1]
     fresh_pt = _load_runs(pt_path)[-1]
     fresh_sm = _load_runs(sm_path)[-1]
     fresh_cs = _load_runs(cs_path)[-1]
@@ -150,6 +163,19 @@ def check() -> None:
         failures += _gate_rates(
             f"read_plane K={ident[0]} D={ident[1]} R={ident[2]} "
             f"tier={ident[3]}", base, cell)
+
+    base_cp_cells = {
+        (c.get("K"), c.get("D"), c.get("tier", "host")): c
+        for c in base_cp.get("cells", [])
+    }
+    for cell in fresh_cp.get("cells", []):
+        ident = (cell.get("K"), cell.get("D"), cell.get("tier", "host"))
+        base = base_cp_cells.get(ident)
+        if base is None:
+            continue
+        failures += _gate_rates(
+            f"checkpoint_plane K={ident[0]} D={ident[1]} tier={ident[2]}",
+            base, cell)
 
     base_rows = {r.get("in_flight"): r for r in base_pt.get("rows", [])}
     for row in fresh_pt.get("rows", []):
@@ -173,7 +199,7 @@ def check() -> None:
             "chaos_soak chaos-pass", base_cs["chaos"],
             fresh_cs.get("chaos", {}))
 
-    checked = bool(base_cells or base_rows or base_sm_rows
+    checked = bool(base_cells or base_cp_cells or base_rows or base_sm_rows
                    or base_cs.get("chaos"))
     if failures:
         print("# PERF REGRESSION (>20% below recorded trajectory):",
@@ -189,6 +215,7 @@ def check() -> None:
 def main(argv=None) -> None:
     from . import (
         chaos_soak,
+        checkpoint_plane,
         fig1_composition,
         fig4_locality,
         fig5_gossip,
@@ -217,6 +244,7 @@ def main(argv=None) -> None:
             ("merge_plane", lambda: merge_plane.main(smoke=True)),
             ("gossip_plane", lambda: gossip_plane.main(smoke=True)),
             ("read_plane", lambda: read_plane.main(smoke=True)),
+            ("checkpoint_plane", lambda: checkpoint_plane.main(smoke=True)),
             ("pipeline_throughput",
              lambda: pipeline_throughput.main(smoke=True)),
             ("serve_models", lambda: serve_models.main(smoke=True)),
@@ -236,6 +264,7 @@ def main(argv=None) -> None:
             ("merge_plane", merge_plane.main),
             ("gossip_plane", gossip_plane.main),
             ("read_plane", read_plane.main),
+            ("checkpoint_plane", checkpoint_plane.main),
             ("pipeline_throughput", pipeline_throughput.main),
             ("serve_models", serve_models.main),
             ("chaos_soak", chaos_soak.main),

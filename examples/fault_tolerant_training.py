@@ -38,7 +38,7 @@ def plane_counters(cluster):
     snap = cluster.metrics.snapshot()
     return {k: v for k, v in sorted(snap.items())
             if k.startswith(("detector.", "faultnet.", "kvs.retries",
-                             "kvs.backoff", "kvs.degraded"))
+                             "kvs.backoff", "kvs.degraded", "planecp."))
             and v}
 
 
@@ -107,6 +107,15 @@ def main():
     copies = {kvs.nodes[o].store.get("ckpt/30/__commit").reveal()
               for o in owners}
     assert copies == {30}, copies
+
+    # every checkpoint save/restore moved plane-natively: whole param +
+    # opt trees as packed batches, accounted on the bulk-motion ledger
+    saved = kvs.mover.counts("save")
+    restored = kvs.mover.counts("restore")
+    assert saved["batches"] > 0 and restored["batches"] > 0
+    print(f"[planecp] bulk checkpoint motion: {saved['keys']} keys saved / "
+          f"{restored['keys']} restored in "
+          f"{saved['batches'] + restored['batches']} packed batches")
 
     print(f"\nresumed and finished: {len(losses)} steps after restore, "
           f"final loss {losses[-1]:.4f}")

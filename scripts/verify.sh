@@ -2,11 +2,12 @@
 # Tier-1 verification gate: full pytest suite + kernel micro-bench smoke.
 #
 # The smoke pass runs the storage-layer plane benches (kernels +
-# merge_plane + gossip_plane + read_plane) at tiny sizes so perf
-# regressions in the batched merge/replication/read planes fail fast
-# (the benches cross-check kernel winners against the Python oracle and
-# assert on mismatch; read_plane also appends its keys/s cells to
-# BENCH_read_plane.json for the cross-PR perf trajectory).
+# merge_plane + gossip_plane + read_plane + checkpoint_plane) at tiny
+# sizes so perf regressions in the batched merge/replication/read/
+# checkpoint planes fail fast (the benches cross-check kernel winners
+# against the Python oracle and assert on mismatch; read_plane and
+# checkpoint_plane also append their keys/s cells to BENCH_*.json for
+# the cross-PR perf trajectory).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -57,9 +58,10 @@ if ! ft_out=$(python examples/fault_tolerant_training.py); then
     echo "from the checkpoint written under the fault)" >&2
     exit 1
 fi
-# the detector/faultnet lines prove the failure plane actually engaged
+# the detector/faultnet lines prove the failure plane actually engaged;
+# the planecp lines prove checkpoint state moved through the bulk plane
 printf '%s\n' "$ft_out" | grep -E \
-    '^(\[detector\]|\[faultnet\]|resumed and finished|  (detector|faultnet)\.)'
+    '^(\[detector\]|\[faultnet\]|\[planecp\]|resumed and finished|  (detector|faultnet|planecp)\.)'
 
 echo "== examples/prediction_serving.py =="
 if ! ps_out=$(python examples/prediction_serving.py); then

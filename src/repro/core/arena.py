@@ -1447,6 +1447,38 @@ class MergeEngine:
                 applied += 1
         return applied
 
+    def migrate_device(self, device: bool) -> PlaneBatch:
+        """Move this engine's arena between the host-numpy and the
+        device-resident slab tier.
+
+        The whole arena exports as one packed :class:`PlaneBatch`
+        (fused ``slab_gather`` per group on the device side), a fresh
+        arena of the target mode is built, and the batch re-ingests
+        through the empty-arena bulk-write scatter — per-key lattice
+        objects are never constructed.  Demotion pulls planes down
+        through the counted ``PlaneBatch.to_host`` edge before the swap
+        so every byte shows on the transfer ledger.  Returns the moved
+        batch (empty when already on the requested tier); the fallback
+        dict is tier-independent and stays put.
+        """
+        if bool(device) == self.arena.device:
+            return PlaneBatch(self.registry._ids)
+        keys = list(self.arena.keys())
+        batch = self.arena.export_planes(keys)
+        if not device:
+            batch = batch.to_host(self.arena._xfer)
+        old = self.arena
+        self.arena = LatticeArena(self.registry, device=device)
+        # keep one transfer ledger across the swap: slabs capture the
+        # stats object at creation, so this must precede any ingest
+        self.arena._xfer = old._xfer
+        # strictly advance past the old arena: cached read plans hold
+        # refs into the retired slabs and must revalidate
+        self.arena.layout_version = old.layout_version + 1
+        self.device = self.arena.device
+        self.ingest_planes(batch, include_sidecar=False)
+        return batch
+
     def _ingest_group(self, group: _GroupKey, pg: PlaneGroup,
                       node_ids: List[str]) -> int:
         K = len(pg)

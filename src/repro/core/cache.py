@@ -104,6 +104,7 @@ class ExecutorCache:
         keys: Sequence[str],
         clock: Optional[VirtualClock] = None,
         clocks: Optional[Sequence[VirtualClock]] = None,
+        mover_kind: Optional[str] = None,
     ) -> Set[str]:
         """Batched local read / miss fill — the DAG read-set warm path.
 
@@ -156,6 +157,8 @@ class ExecutorCache:
                 for c in all_clocks[1:]:
                     c.advance(primary.now - t_fetch)
             if batch:
+                if mover_kind is not None:
+                    self.kvs.mover.record(mover_kind, batch)
                 for key, value in batch.sidecar:
                     if isinstance(value, CausalLattice):
                         self.insert(key, value)  # causal cut stays per-key
@@ -163,6 +166,14 @@ class ExecutorCache:
                         self.engine.merge_one(key, value)
                 self.engine.ingest_planes(batch, include_sidecar=False)
         return {k for k in uniq if k in self.data}
+
+    def warm_plane(self, keys: Sequence[str],
+                   clock: Optional[VirtualClock] = None) -> Set[str]:
+        """Recovery warm-up: refill the cache for ``keys`` as packed
+        plane motion (one batched fetch + one ``ingest_planes`` scatter
+        per slab group), accounted as ``planecp.warm`` on the bulk
+        state-motion ledger.  Returns the keys now resident."""
+        return self.read_many(keys, clock=clock, mover_kind="warm")
 
     def read_local(self, key: str) -> Optional[Lattice]:
         self._check_alive()

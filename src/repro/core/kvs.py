@@ -37,6 +37,7 @@ from .arena import (
 from .faultnet import FailurePlane, KVSUnavailableError, RetryPolicy
 from .lattices import Lattice
 from .netsim import NetworkProfile, VirtualClock, DEFAULT_PROFILE
+from .remesh import PlaneMover
 from ..obs import MetricsRegistry, NULL_TRACER, Tracer, counter_shim
 
 
@@ -144,6 +145,10 @@ class AnnaKVS:
         self.faultnet = None
         self.detector = None
         self.retry = RetryPolicy()
+        # bulk state-motion ledger: checkpoint save/restore, membership
+        # handoff, anti-entropy repair, warm-up and tier migration all
+        # account their packed transfers here (planecp.* counters/spans)
+        self.mover = PlaneMover(self.metrics, self.tracer)
         self._m_retries = self.metrics.counter("kvs.retries")
         self._m_backoff = self.metrics.counter("kvs.backoff_s")
         self._m_degraded = self.metrics.counter("kvs.degraded_reads")
@@ -290,18 +295,23 @@ class AnnaKVS:
                     if owner != node.node_id:
                         by_dst[owner].append(key)
             for dst, keys in by_dst.items():
-                self._enqueue_handoff(dst, node.engine.export_planes(keys))
+                self._enqueue_handoff(dst, node.engine.export_planes(keys),
+                                      kind="repair")
                 shipped += len(keys)
         return shipped
 
     # -- membership -----------------------------------------------------------
-    def _enqueue_handoff(self, owner: str, batch: PlaneBatch) -> None:
+    def _enqueue_handoff(self, owner: str, batch: PlaneBatch,
+                         kind: str = "remesh") -> None:
         """Route a membership-change handoff batch to ``owner``, through
         the same dead-owner hinting as ``_route_put``: data handed to a
         failed node must wait in ``_hints`` (delivered on recovery), not
-        rot in a dead inbox."""
+        rot in a dead inbox.  ``kind`` tags the move on the bulk-motion
+        ledger (``planecp.remesh`` for ring handoff, ``planecp.repair``
+        for anti-entropy re-replication)."""
         if not batch:
             return
+        self.mover.record(kind, batch)
         node = self.nodes.get(owner)
         if node is not None and self._reachable(owner, node):
             if self.faultnet is not None:
@@ -405,9 +415,22 @@ class AnnaKVS:
 
     def set_replication(self, key: str, k: int) -> None:
         """Selective replication for hot keys (Anna [87])."""
-        self._key_replication[key] = k
-        self._owners_cache.pop(key, None)
-        self._placement_epoch += 1
+        self.set_replication_many((key,), k)
+
+    def set_replication_many(self, keys: Sequence[str], k: int) -> None:
+        """Batched selective replication — the checkpoint path bumps a
+        whole snapshot's shard keys in one call.  No-ops (an unchanged
+        factor) cost a dict probe and do NOT bump the placement epoch,
+        so idempotent re-saves never invalidate cached read plans."""
+        changed = False
+        for key in keys:
+            if self._key_replication.get(key) == k:
+                continue
+            self._key_replication[key] = k
+            self._owners_cache.pop(key, None)
+            changed = True
+        if changed:
+            self._placement_epoch += 1
 
     # -- data path --------------------------------------------------------------
     def _route_put(
@@ -540,6 +563,142 @@ class AnnaKVS:
         if sp is not None:
             tr.finish(sp)
         return len(items)
+
+    def put_planes(
+        self,
+        batch: PlaneBatch,
+        clock: Optional[VirtualClock] = None,
+        sync: Optional[bool] = None,
+    ) -> int:
+        """Whole-:class:`PlaneBatch` put — the bulk save / state-motion
+        write path.
+
+        Per-key routing semantics are identical to :meth:`put` (first
+        reachable owner merges, the rest gossip — or all merge under
+        ``sync`` — dead/suspected owners get hinted handoff, subscribed
+        caches get pushes), but the movement is plane-shaped end to end:
+        the batch splits into one packed sub-batch per destination
+        channel (row ``take`` per slab group, sidecar partitioned
+        alongside), coordinator merges apply through
+        ``MergeEngine.ingest_planes`` (one fused launch per slab group)
+        and the virtual clock advances ONCE, sized by total payload
+        bytes.  Zero per-key lattice objects for packed traffic.
+
+        Availability is checked FIRST: when any key has no reachable
+        owner the whole batch raises with NO side effects — an unacked
+        bulk save must never resurface later through a hint flush (the
+        chaos convergence oracle replays acked writes only), and a
+        checkpoint is all-or-nothing anyway (the commit marker is only
+        written after this returns).
+        """
+        sync = self.sync_replication if sync is None else sync
+        tr = self.tracer
+        sp = None
+        if tr.enabled and tr.cur is not None:
+            sp = tr.start("kvs", "put_planes", clock=clock or tr.cur.clock,
+                          tid=tr.cur.tid, parent=tr.cur, n_keys=len(batch))
+        keys = batch.keys()
+        ukeys = list(dict.fromkeys(keys))
+        if clock is not None:
+            clock.advance(
+                self.profile.sample(self.profile.kvs_op, batch.byte_size()))
+        if self.detector is not None:
+            # one probe/retry round for the whole batch (batched puts
+            # pay batched timeouts, exactly like get_merged_many)
+            involved = list(dict.fromkeys(
+                o for key in ukeys for o in self._owners(key)))
+            self._probe_owners(involved, clock, "put_planes")
+        # -- route first, deliver after: NO side effects before the
+        # whole batch is known to be storable
+        plans: Dict[str, Tuple[List[str], List[str], List[str]]] = {}
+        unavailable: List[str] = []
+        for key in ukeys:
+            merge_t: List[str] = []
+            gossip_t: List[str] = []
+            hint_t: List[str] = []
+            for owner in self._owners(key):
+                node = self.nodes[owner]
+                if not self._reachable(owner, node):
+                    hint_t.append(owner)
+                    continue
+                if not merge_t or sync:
+                    merge_t.append(owner)
+                else:
+                    gossip_t.append(owner)
+            if not merge_t:
+                unavailable.append(key)
+            plans[key] = (merge_t, gossip_t, hint_t)
+        if unavailable:
+            if self.detector is not None:
+                raise KVSUnavailableError(unavailable, op="put_planes")
+            raise RuntimeError(f"no live replica for {unavailable[0]}")
+        # -- split into per-destination sub-batches: (channel, dst, src)
+        # -> row indices per group + sidecar slice.  src matters to the
+        # fault network (partitions are per endpoint pair), so gossip
+        # and pushes key on the coordinating replica like _route_put.
+        _Dest = Tuple[str, str, Optional[str]]
+        dest_rows: Dict[_Dest, Dict] = defaultdict(lambda: defaultdict(list))
+        dest_side: Dict[_Dest, List[Tuple[str, Lattice]]] = defaultdict(list)
+
+        def fan_out(key: str, sink) -> None:
+            merge_t, gossip_t, hint_t = plans[key]
+            src = merge_t[0]
+            for owner in merge_t:
+                sink(("merge", owner, None))
+            for owner in gossip_t:
+                sink(("gossip", owner, src))
+            for owner in hint_t:
+                sink(("hint", owner, None))
+            for cache_id in self._cache_index.get(key, ()):
+                sink(("push", cache_id, src))
+
+        for group, pg in batch.groups.items():
+            for i, key in enumerate(pg.keys):
+                fan_out(key, lambda d, g=group, i=i:
+                        dest_rows[d][g].append(i))
+        for key, value in batch.sidecar:
+            fan_out(key, lambda d, kv=(key, value): dest_side[d].append(kv))
+
+        def sub_batch(dest: _Dest) -> PlaneBatch:
+            sub = PlaneBatch(batch.node_ids)
+            for group, idx in dest_rows.get(dest, {}).items():
+                pg = batch.groups[group]
+                # full-coverage destinations reuse the group's planes
+                # (read-only everywhere downstream): zero copies on the
+                # common all-replicas / single-coordinator layout
+                sub.groups[group] = (pg if len(idx) == len(pg)
+                                     else pg.take(idx))
+            sub.sidecar = list(dest_side.get(dest, ()))
+            return sub
+
+        for dest in list(dest_rows) + [d for d in dest_side
+                                       if d not in dest_rows]:
+            channel, target, src = dest
+            sub = sub_batch(dest)
+            if not sub:
+                continue
+            if channel == "merge":
+                node = self.nodes[target]
+                node.engine.ingest_planes(sub)
+                node.puts += len(sub)
+            elif channel == "gossip":
+                if self.faultnet is not None:
+                    self.faultnet.deliver("gossip", src, target, batch=sub)
+                else:
+                    self.nodes[target].inbox.add_batch(sub)
+            elif channel == "hint":
+                if self.faultnet is not None:
+                    self.faultnet.deliver("hint", None, target, batch=sub)
+                else:
+                    self._hints[target].add_batch(sub)
+            else:  # push-based cache update (paper §4.2), plane-shaped
+                if self.faultnet is not None:
+                    self.faultnet.deliver("push", src, target, batch=sub)
+                else:
+                    self._cache_pushes[target].add_batch(sub)
+        if sp is not None:
+            tr.finish(sp, bytes=batch.byte_size())
+        return len(keys)
 
     def get(
         self,

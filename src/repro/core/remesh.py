@@ -1,0 +1,112 @@
+"""Bulk state motion accounting + elastic re-mesh / tier-migration driver.
+
+Every bulk state move in the tier — checkpoint save/restore, membership
+handoff on ``add_node``/``remove_node``, anti-entropy repair, recovery
+cache warm-up and device-tier promotion/demotion — is a handful of
+packed :class:`~repro.core.arena.PlaneBatch` transfers instead of
+per-key puts/gets.  This module gives those moves one shared ledger
+(:class:`PlaneMover`: ``planecp.<kind>.{batches,keys,bytes}`` counters
+plus spans under a traced DAG run) and the thin drivers that route
+topology changes through the same bulk path:
+
+* :func:`remesh` — elastic membership change: add/remove storage nodes;
+  the ring handoffs inside the KVS ship as packed plane exports and are
+  accounted as ``planecp.remesh``;
+* :func:`migrate_tier` — promote the whole tier's arenas onto the
+  accelerator (or demote back to host numpy): one exported batch per
+  storage engine, re-ingested into a fresh arena of the target mode,
+  accounted as ``planecp.tier``.
+
+The mover is pure observation: recording a batch never copies or
+mutates it, so the hot paths pay two counter bumps and a ``byte_size``
+sum per move.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+from .arena import PlaneBatch
+from ..obs import MetricsRegistry, NULL_TRACER, Tracer
+
+
+class PlaneMover:
+    """The bulk state-motion ledger: one counter triple per move kind.
+
+    Kinds mirror the subsystem's call sites: ``save``/``restore`` are
+    the plane-native checkpoint paths (:mod:`repro.state.planecp`),
+    ``remesh`` is membership handoff, ``repair`` is anti-entropy
+    re-replication, ``warm`` is recovery cache warm-up and ``tier`` is
+    device promotion/demotion.  Each recorded move also emits a span
+    when the move happens under a traced DAG run, so bulk transfers
+    show up on the same timeline as the requests they serve.
+    """
+
+    KINDS = ("save", "restore", "remesh", "repair", "warm", "tier")
+
+    def __init__(self, metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._c = {
+            kind: (self.metrics.counter(f"planecp.{kind}.batches"),
+                   self.metrics.counter(f"planecp.{kind}.keys"),
+                   self.metrics.counter(f"planecp.{kind}.bytes"))
+            for kind in self.KINDS
+        }
+
+    def record(self, kind: str, batch: PlaneBatch) -> None:
+        """Account one bulk move (a no-op for empty batches)."""
+        if not batch:
+            return
+        batches, keys, nbytes = self._c[kind]
+        size = batch.byte_size()
+        batches.inc()
+        keys.inc(len(batch))
+        nbytes.inc(size)
+        tr = self.tracer
+        if tr.enabled and tr.cur is not None:
+            sp = tr.start("planecp", kind, clock=tr.cur.clock,
+                          tid=tr.cur.tid, parent=tr.cur,
+                          n_keys=len(batch))
+            tr.finish(sp, bytes=size)
+
+    def counts(self, kind: str) -> Dict[str, int]:
+        """(batches, keys, bytes) snapshot for one kind — test/example
+        surface, mirroring the ``planecp.<kind>.*`` registry names."""
+        batches, keys, nbytes = self._c[kind]
+        return {"batches": int(batches.value), "keys": int(keys.value),
+                "bytes": int(nbytes.value)}
+
+
+def remesh(kvs, add: Iterable[str] = (), remove: Iterable[str] = ()) -> None:
+    """Elastic topology change: grow and/or shrink the storage tier.
+
+    Ownership moves with the consistent-hash ring; the data handoffs to
+    new owners ship inside the KVS as one packed plane export per source
+    engine (``planecp.remesh`` on the obs plane) and converge by merge,
+    so a re-mesh is idempotent and safe under concurrent writes.
+    """
+    for node_id in add:
+        kvs.add_node(node_id)
+    for node_id in remove:
+        kvs.remove_node(node_id)
+
+
+def migrate_tier(kvs, device: bool) -> int:
+    """Move every storage engine's arena between the host-numpy and the
+    device-resident slab tier, one exported :class:`PlaneBatch` per
+    engine (``planecp.tier``).  Promotion uploads each engine's packed
+    planes once; demotion pulls them down through the counted
+    ``PlaneBatch.to_host`` edge.  Returns the number of keys moved;
+    future nodes join on the new tier.
+    """
+    moved = 0
+    for node in kvs.nodes.values():
+        batch = node.engine.migrate_device(device)
+        if batch:
+            kvs.mover.record("tier", batch)
+            moved += len(batch)
+    kvs.reader.migrate_device(device)
+    kvs.device_tier = bool(device)
+    return moved

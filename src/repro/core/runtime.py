@@ -1254,10 +1254,18 @@ class Cluster:
         if cache is not None:
             cache.fail()
 
-    def recover_vm(self, vm_id: str) -> None:
+    def recover_vm(self, vm_id: str,
+                   warm_keys: Optional[Sequence[str]] = None) -> None:
+        """Bring a VM back: recover its cache and executors; with
+        ``warm_keys`` the fresh (empty) cache is refilled through the
+        bulk plane path (``ExecutorCache.warm_plane`` — one packed
+        fetch, ``planecp.warm`` on the obs plane) instead of faulting
+        keys back one miss at a time."""
         cache = self.caches.get(f"cache-{vm_id}")
         if cache is not None:
             cache.recover()
+            if warm_keys:
+                cache.warm_plane(warm_keys)
         for ex in self.executors.values():
             if ex.vm_id == vm_id:
                 ex.alive = True

@@ -1,6 +1,12 @@
 """Tensor state over the KVS: sharded storage + checkpoint/restore."""
 
 from .checkpoint import CheckpointConfig, CheckpointManager
+from .planecp import (
+    pack_tree,
+    restore_tree_planes,
+    save_tree_planes,
+    unpack_tree,
+)
 from .tensorstore import TensorRecord, TensorStore, tree_from_values, tree_keys
 
 __all__ = [
@@ -8,6 +14,10 @@ __all__ = [
     "CheckpointManager",
     "TensorRecord",
     "TensorStore",
+    "pack_tree",
+    "restore_tree_planes",
+    "save_tree_planes",
     "tree_from_values",
     "tree_keys",
+    "unpack_tree",
 ]

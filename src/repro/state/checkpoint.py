@@ -10,6 +10,14 @@ what lets the autoscaler change the data-parallel degree between epochs).
 
 Writes are lattice merges, so a checkpoint written twice by a retried DAG
 is idempotent — the paper's answer to at-least-once execution.
+
+State moves plane-natively (:mod:`repro.state.planecp`): a save packs
+BOTH trees into one :class:`~repro.core.arena.PlaneBatch` (manifests ride
+the sidecar as grow-only ``SetLattice``) and writes it with a single
+``put_planes`` — all-or-nothing, so the commit marker written after it
+really does mean "every shard is stored".  A restore is ONE batched
+``get_merged_many`` for every shard of both trees.  Per-key lattice
+objects are never constructed for packed shards in either direction.
 """
 
 from __future__ import annotations
@@ -20,9 +28,16 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from ..core.arena import PlaneBuffer
 from ..core.kvs import AnnaKVS
-from ..core.lattices import LamportClock, LWWLattice, MaxIntLattice
-from .tensorstore import TensorStore
+from ..core.lattices import (
+    LamportClock,
+    LWWLattice,
+    MaxIntLattice,
+    SetLattice,
+)
+from .planecp import pack_tree, unpack_tree
+from .tensorstore import TensorStore, tree_keys
 
 
 @dataclasses.dataclass
@@ -50,39 +65,72 @@ class CheckpointManager:
 
     def save(self, step: int, params, opt_state) -> None:
         ns = f"{self.prefix}/{step}"
-        # hot keys: bump replication for checkpoint shards (Anna selective
-        # replication) before writing
-        for key in [f"{ns}/params", f"{ns}/opt"]:
-            self.kvs.set_replication(key + "/__manifest", self.cfg.replication)
-        self.store.put_tree(f"{ns}/params", params)
-        self.store.put_tree(f"{ns}/opt", opt_state)
+        # pack both trees into ONE batch (shared slab groups merge);
+        # manifests ride the sidecar as grow-only sets, so a retried
+        # save unions to the same manifest
+        buf = PlaneBuffer()
+        pb, pkeys = pack_tree(f"{ns}/params", params, self.clock.tick())
+        ob, okeys = pack_tree(f"{ns}/opt", opt_state, self.clock.tick())
+        buf.add_batch(pb)
+        buf.add_batch(ob)
+        batch = buf.drain()
+        manifests = [f"{ns}/params/__manifest", f"{ns}/opt/__manifest"]
+        batch.sidecar.append((manifests[0], SetLattice.of(pkeys)))
+        batch.sidecar.append((manifests[1], SetLattice.of(okeys)))
+        # hot keys: bump replication for the checkpoint's ACTUAL shard
+        # keys — not just the manifests — plus the commit marker, before
+        # anything is written (Anna selective replication); one batched
+        # call, one placement-epoch bump, a no-op on re-save
+        self.kvs.set_replication_many(
+            pkeys + okeys + manifests + [f"{ns}/__commit"],
+            self.cfg.replication)
+        # one packed write for the whole snapshot; raises with no side
+        # effects if any shard has no reachable replica
+        self.kvs.put_planes(batch)
+        self.kvs.mover.record("save", batch)
         # commit marker LAST: a crash mid-write leaves no committed marker
         self.kvs.put(f"{ns}/__commit", LWWLattice(self.clock.tick(), step))
         cur = self.kvs.get_merged(f"{self.prefix}/__latest") or MaxIntLattice(-1)
         self.kvs.put(f"{self.prefix}/__latest",
                      cur.merge(MaxIntLattice(step)))
+        # grow-only ledger of ever-committed steps: restore probes these
+        # instead of scanning every step since 0
+        steps = self.kvs.get_merged(f"{self.prefix}/__steps") or SetLattice()
+        self.kvs.put(f"{self.prefix}/__steps",
+                     steps.merge(SetLattice.of([step])))
         self._gc(step)
 
     def _gc(self, newest: int) -> None:
         steps = self.committed_steps()
         for old in steps[: max(0, len(steps) - self.cfg.keep)]:
             ns = f"{self.prefix}/{old}"
-            for key in self.store.manifest(f"{ns}/params"):
-                self.kvs.delete(key)
-            for key in self.store.manifest(f"{ns}/opt"):
-                self.kvs.delete(key)
+            for sub in ("params", "opt"):
+                for key in self.store.manifest(f"{ns}/{sub}"):
+                    self.kvs.delete(key)
+                    self.kvs.delete(f"{key}/__meta")
+                # the manifest itself must not outlive its shards
+                self.kvs.delete(f"{ns}/{sub}/__manifest")
             self.kvs.delete(f"{ns}/__commit")
 
     # -- read path ---------------------------------------------------------------
     def committed_steps(self) -> List[int]:
-        latest = self.kvs.get_merged(f"{self.prefix}/__latest")
-        if latest is None:
+        ledger = self.kvs.get_merged(f"{self.prefix}/__steps")
+        if ledger is not None:
+            candidates = sorted(int(s) for s in ledger.reveal())
+        else:
+            # legacy namespace (pre-ledger): fall back to the full scan
+            latest = self.kvs.get_merged(f"{self.prefix}/__latest")
+            if latest is None:
+                return []
+            candidates = list(range(0, latest.reveal() + 1))
+        if not candidates:
             return []
-        steps = []
-        for s in range(0, latest.reveal() + 1):
-            if self.kvs.get_merged(f"{self.prefix}/{s}/__commit") is not None:
-                steps.append(s)
-        return steps
+        # ONE batched probe for every candidate's commit marker —
+        # GC'd/uncommitted steps are simply absent from the batch
+        markers = [f"{self.prefix}/{s}/__commit" for s in candidates]
+        batch = self.kvs.get_merged_many(markers, on_unavailable="skip")
+        present = set(batch.keys())
+        return [s for s, m in zip(candidates, markers) if m in present]
 
     def restore_latest(self, params_like, opt_like) -> Optional[Tuple[int, Any, Any]]:
         steps = self.committed_steps()
@@ -90,6 +138,12 @@ class CheckpointManager:
             return None
         step = steps[-1]
         ns = f"{self.prefix}/{step}"
-        params = self.store.get_tree(f"{ns}/params", params_like)
-        opt = self.store.get_tree(f"{ns}/opt", opt_like)
+        # ONE packed fetch for every shard of both trees (fused gather +
+        # replica reduce per slab group), then template-shaped unpack
+        pkeys = tree_keys(f"{ns}/params", params_like)
+        okeys = tree_keys(f"{ns}/opt", opt_like)
+        batch = self.kvs.get_merged_many(pkeys + okeys)
+        self.kvs.mover.record("restore", batch)
+        params = unpack_tree(f"{ns}/params", params_like, batch)
+        opt = unpack_tree(f"{ns}/opt", opt_like, batch)
         return step, params, opt

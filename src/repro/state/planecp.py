@@ -1,0 +1,156 @@
+"""Plane-native checkpoint pack/unpack — bulk state motion for pytrees.
+
+The per-key :class:`~repro.state.tensorstore.TensorStore` path writes a
+param tree as one ``LWWLattice`` object per leaf and restores it with
+one ``get_merged`` per leaf.  This module is the packed alternative: a
+whole pytree becomes ONE :class:`~repro.core.arena.PlaneBatch` — one
+``(K, D)`` plane group per distinct (leaf shape, dtype), stacked in a
+single ``np.stack`` per group — that ships through
+``AnnaKVS.put_planes`` (one fused ``ingest_planes`` scatter per slab
+group at each replica) and restores through ``get_merged_many`` (fused
+``slab_gather`` export + one replica-reduce launch).  Leaves the planes
+cannot carry losslessly (float64/int64 and friends jax would downcast,
+non-numeric dtypes, odd objects) ride the batch's per-key sidecar as
+ordinary lattices, so the packed path is transparent: any tree the
+per-key oracle can round-trip, this path round-trips bit-identically.
+
+Keys match :func:`~repro.state.tensorstore.tree_keys` exactly —
+``<namespace>/<dot.joined.path>`` — so packed writers interoperate with
+per-key readers and vice versa (a tree saved through
+:func:`save_tree_planes` is readable by ``TensorStore.get_tree`` and
+the other way around).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.arena import (
+    _JAX_DOWNCAST_DTYPES,
+    PlaneBatch,
+    PlaneGroup,
+    tensor_payload,
+)
+from ..core.kvs import AnnaKVS
+from ..core.lattices import LWWLattice
+from ..core.netsim import VirtualClock
+from .tensorstore import _pstr, _unwrap, tree_keys
+
+_INT32_MAX = 2**31
+
+
+def pack_tree(namespace: str, tree: Any,
+              ts: Tuple[int, str]) -> Tuple[PlaneBatch, List[str]]:
+    """Pack a pytree into one :class:`PlaneBatch` under ``namespace``.
+
+    Every plane-eligible leaf lands as a row of its (shape, dtype)
+    group, all stamped with the single Lamport pair ``ts`` — a
+    checkpoint is one logical write, and a retried save re-stamps with
+    a later clock so last-writer-wins converges to the retry.
+    Ineligible leaves become sidecar ``LWWLattice`` entries with the
+    same stamp.  Returns (batch, keys-in-flatten-order).
+    """
+    clock, node_id = ts
+    batch = PlaneBatch([node_id])
+    keys: List[str] = []
+    rows: Dict[Tuple[Tuple[int, ...], str], Tuple[List[str], List[np.ndarray], np.dtype]] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = f"{namespace}/{_pstr(path)}"
+        keys.append(key)
+        try:
+            arr = np.asarray(leaf)
+        except Exception:
+            arr = None
+        payload = None if arr is None else tensor_payload(arr)
+        if payload is None or not (0 <= clock < _INT32_MAX):
+            batch.sidecar.append(
+                (key, LWWLattice(ts, arr if arr is not None else leaf)))
+            continue
+        group = (tuple(payload.shape), payload.dtype.name)
+        gkeys, flats, _ = rows.setdefault(group, ([], [], payload.dtype))
+        gkeys.append(key)
+        flats.append(payload.reshape(-1))
+    for group, (gkeys, flats, dtype) in rows.items():
+        K = len(gkeys)
+        batch.groups[group] = PlaneGroup(
+            group[0], dtype, gkeys, np.stack(flats),
+            np.full((K, 1), clock, np.int32), np.zeros((K, 1), np.int32))
+    return batch, keys
+
+
+def unpack_tree(namespace: str, like: Any, batch: PlaneBatch) -> Any:
+    """Rebuild a pytree shaped ``like`` from a fetched batch.
+
+    Packed rows cast/reshape against the template with the SAME result
+    as the per-key oracle (``jnp.asarray(row, dtype=leaf.dtype)``) but
+    without its per-leaf dispatch: host rows cast through numpy (a
+    view/copy, ~100x cheaper than one jax dispatch per leaf — this is
+    where the bulk restore's keys/s comes from), device-resident rows
+    stay on device through a jnp cast so a device-tier restore never
+    bounces through host, and templates asking for a dtype jax would
+    downcast (float64 et al.) take the jnp path so the downcast matches
+    the oracle bit for bit.  Sidecar lattices reveal through the same
+    ``_unwrap`` as ``get_tensor``; non-numeric template dtypes take the
+    numpy path (jax cannot hold them).  Raises ``KeyError`` for any
+    leaf the batch does not cover.
+    """
+    import jax.numpy as jnp
+
+    loc: Dict[str, Tuple[PlaneGroup, int]] = {}
+    for pg in batch.groups.values():
+        for i, key in enumerate(pg.keys):
+            loc[key] = (pg, i)
+    side = dict(batch.sidecar)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in leaves:
+        key = f"{namespace}/{_pstr(path)}"
+        hit = loc.get(key)
+        if hit is not None:
+            pg, i = hit
+            dt = np.dtype(leaf.dtype)
+            if pg.is_device() or dt.name in _JAX_DOWNCAST_DTYPES:
+                out.append(jnp.asarray(pg.vals[i], dtype=leaf.dtype)
+                           .reshape(leaf.shape))
+            else:
+                out.append(np.asarray(pg.vals[i], dtype=dt)
+                           .reshape(leaf.shape))
+            continue
+        lat = side.get(key)
+        if lat is None:
+            raise KeyError(f"missing shard {key}")
+        arr = _unwrap(lat.reveal())
+        if np.dtype(leaf.dtype).kind in "biufc":
+            out.append(jnp.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+        else:
+            out.append(np.asarray(arr).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def save_tree_planes(kvs: AnnaKVS, namespace: str, tree: Any,
+                     ts: Tuple[int, str],
+                     clock: Optional[VirtualClock] = None,
+                     sync: Optional[bool] = None) -> List[str]:
+    """Bulk-save a pytree: one packed ``put_planes`` for the whole tree
+    (all-or-nothing — raises with no side effects when any shard has no
+    reachable replica), accounted as ``planecp.save``.  Returns the
+    shard keys in flatten order."""
+    batch, keys = pack_tree(namespace, tree, ts)
+    kvs.put_planes(batch, clock=clock, sync=sync)
+    kvs.mover.record("save", batch)
+    return keys
+
+
+def restore_tree_planes(kvs: AnnaKVS, namespace: str, like: Any,
+                        clock: Optional[VirtualClock] = None) -> Any:
+    """Bulk-restore a pytree shaped ``like``: ONE ``get_merged_many``
+    round trip for every shard (fused gather + replica reduce, zero
+    per-key lattice objects for packed shards), accounted as
+    ``planecp.restore``."""
+    keys = tree_keys(namespace, like)
+    batch = kvs.get_merged_many(keys, clock=clock)
+    kvs.mover.record("restore", batch)
+    return unpack_tree(namespace, like, batch)

@@ -1,0 +1,286 @@
+"""Plane-native checkpoint/restore subsystem (bulk state motion).
+
+Property: plane-native save -> bulk restore is bit-identical to the
+per-key ``put_tree``/``get_tree`` oracle over mixed shapes/dtypes
+(including float64/int64 sidecar leaves), in both interop directions,
+under the host and device slab tiers, and under a drop/partition + heal
+chaos schedule (PR-8 invariants: zero acked-write loss, replicas
+bit-identical after heal).  Also covered: the all-or-nothing
+``put_planes`` availability contract (an unacked bulk save has NO side
+effects), tier migration (host <-> device) preserving every value,
+recovery cache warm-up through the bulk path, elastic re-mesh
+accounting, and the steady-state zero-object guarantee for packed
+shards.
+"""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+except ImportError:  # deterministic seeded fallback (see _hypothesis_stub)
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core import (
+    AnnaKVS,
+    ChannelFault,
+    Cluster,
+    KVSUnavailableError,
+    LamportClock,
+)
+from repro.core.lattices import LWWLattice
+from repro.core.remesh import migrate_tier, remesh
+from repro.state import (
+    CheckpointConfig,
+    CheckpointManager,
+    TensorStore,
+    pack_tree,
+    restore_tree_planes,
+    save_tree_planes,
+    unpack_tree,
+)
+
+# (shape, dtype) menu: float32/int32 pack into planes; float64/int64
+# must ride the sidecar (jax would downcast them)
+SPECS = [
+    ((4, 8), np.float32),
+    ((16,), np.float32),
+    ((4, 8), np.int32),
+    ((2, 3, 4), np.float32),
+    ((8,), np.float64),
+    ((3,), np.int64),
+    ((), np.float32),
+]
+
+
+def _make_tree(spec_ids, seed):
+    rng = np.random.default_rng(seed)
+    tree = {}
+    for i, sid in enumerate(spec_ids):
+        shape, dtype = SPECS[sid % len(SPECS)]
+        if np.dtype(dtype).kind == "f":
+            arr = rng.normal(size=shape).astype(dtype)
+        else:
+            arr = rng.integers(-1000, 1000, size=shape).astype(dtype)
+        tree[f"leaf{i}"] = arr
+    return tree
+
+
+def _like(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype),
+        tree)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(x, y)
+
+
+@settings(max_examples=10)
+@given(
+    st.integers(min_value=0, max_value=2 ** 20),
+    st.lists(st.integers(min_value=0, max_value=len(SPECS) - 1),
+             min_size=1, max_size=8),
+)
+def test_plane_save_restore_matches_perkey_oracle(seed, spec_ids):
+    tree = _make_tree(spec_ids, seed)
+    like = _like(tree)
+    lam = LamportClock("w")
+
+    plane_kvs = AnnaKVS(num_nodes=3, replication=2, sync_replication=True)
+    oracle_kvs = AnnaKVS(num_nodes=3, replication=2, sync_replication=True)
+    store = TensorStore(oracle_kvs)
+
+    save_tree_planes(plane_kvs, "ns", tree, lam.tick())
+    store.put_tree("ns", tree)
+
+    got_plane = restore_tree_planes(plane_kvs, "ns", like)
+    got_oracle = store.get_tree("ns", like)
+    _assert_trees_equal(got_plane, got_oracle)
+
+    # interop both ways: packed writer / per-key reader and vice versa
+    _assert_trees_equal(TensorStore(plane_kvs).get_tree("ns", like),
+                        got_oracle)
+    _assert_trees_equal(restore_tree_planes(oracle_kvs, "ns", like),
+                        got_oracle)
+
+
+def test_pack_unpack_opaque_string_leaf_roundtrip():
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "tag": np.asarray(["hello", "world"])}
+    batch, keys = pack_tree("ns", tree, (1, "w"))
+    assert len(keys) == 2
+    # the string leaf cannot ride a plane: it must be on the sidecar
+    assert [k for k, _ in batch.sidecar] == ["ns/tag"]
+    out = unpack_tree("ns", _like(tree), batch)
+    _assert_trees_equal(out, tree)
+
+
+def test_save_is_one_packed_batch_per_group():
+    tree = {f"l{i}": np.full((4, 4), i, np.float32) for i in range(12)}
+    batch, keys = pack_tree("ns", tree, (1, "w"))
+    assert not batch.sidecar
+    assert list(batch.groups) == [((4, 4), "float32")]
+    assert batch.packed_len() == 12
+    kvs = AnnaKVS(num_nodes=3, replication=2, sync_replication=True)
+    kvs.put_planes(batch)
+    _assert_trees_equal(restore_tree_planes(kvs, "ns", _like(tree)), tree)
+
+
+def test_put_planes_unavailable_has_no_side_effects():
+    kvs = AnnaKVS(num_nodes=2, replication=1)
+    kvs.enable_failure_plane()
+    tree = {f"l{i}": np.full((3,), i, np.float32) for i in range(8)}
+    batch, keys = pack_tree("ns", tree, (1, "w"))
+    # kill one owner: with k=1 some shard has zero reachable replicas
+    victim = kvs._owners(keys[0])[0]
+    kvs.fail_node(victim)
+    with pytest.raises(KVSUnavailableError):
+        kvs.put_planes(batch)
+    # all-or-nothing: no store writes, no hinted handoff anywhere
+    for node in kvs.nodes.values():
+        assert len(node.store) == 0
+        assert len(node.inbox.drain()) == 0
+    assert all(not buf.drain() for buf in kvs._hints.values())
+
+
+@pytest.mark.parametrize("device_tier", [False, True])
+def test_checkpoint_bulk_roundtrip_and_steady_state(device_tier):
+    kvs = AnnaKVS(num_nodes=3, replication=2, sync_replication=True,
+                  device_tier=device_tier)
+    mgr = CheckpointManager(
+        kvs, CheckpointConfig(every_steps=1, keep=2, replication=2))
+    params = {"w": np.arange(32, dtype=np.float32).reshape(4, 8),
+              "b": np.ones((8,), np.float32)}
+    opt = {"m": np.zeros((4, 8), np.float32)}
+    mgr.save(0, params, opt)
+    step, p, o = mgr.restore_latest(_like(params), _like(opt))
+    assert step == 0
+    _assert_trees_equal(p, params)
+    _assert_trees_equal(o, opt)
+    assert kvs.mover.counts("save")["keys"] >= 3
+    assert kvs.mover.counts("restore")["keys"] >= 3
+
+    # steady state: a re-save + restore of the same packed shards must
+    # construct ZERO per-key lattice objects (no arena materializations,
+    # no plane ingest fallbacks) — the bulk path end to end
+    def _mats():
+        return sum(n.engine.arena.materializations for n in kvs.nodes.values())
+
+    def _fallbacks():
+        return sum(n.engine.plane_object_fallbacks for n in kvs.nodes.values())
+
+    mgr.restore_latest(_like(params), _like(opt))  # warm read plans/memos
+    before_m, before_f = _mats(), _fallbacks()
+    mgr.save(0, params, opt)
+    mgr.restore_latest(_like(params), _like(opt))
+    assert _mats() == before_m
+    assert _fallbacks() == before_f
+
+
+def test_checkpoint_restore_under_chaos_preserves_invariants():
+    """Save under drop faults + a partition; after heal the restore is
+    bit-identical and every replica pair of every shard key converges
+    (zero acked-write loss, the PR-8 oracle invariants)."""
+    kvs = AnnaKVS(num_nodes=4, replication=2)
+    plane = kvs.enable_failure_plane()
+    kvs.faultnet.add_fault(ChannelFault(action="drop", kind="gossip", p=0.5))
+    node_ids = sorted(kvs.nodes)
+    kvs.faultnet.partition(node_ids[0], node_ids[1])
+    mgr = CheckpointManager(
+        kvs, CheckpointConfig(every_steps=1, keep=2, replication=2))
+    params = {"w": np.arange(24, dtype=np.float32).reshape(4, 6)}
+    opt = {"m": np.full((4, 6), 0.5, np.float32)}
+    try:
+        mgr.save(7, params, opt)
+        acked = True
+    except KVSUnavailableError:
+        acked = False
+    # heal sequence from the PR-8 harness
+    plane.heal_all()
+    for _ in range(8):
+        kvs.tick()
+    kvs.anti_entropy()
+    for _ in range(2):
+        kvs.tick()
+    assert kvs.faultnet.in_flight == 0
+    assert not kvs.detector.suspected
+    if acked:
+        step, p, o = mgr.restore_latest(_like(params), _like(opt))
+        assert step == 7
+        _assert_trees_equal(p, params)
+        _assert_trees_equal(o, opt)
+        # replicas bit-identical after heal, for every shard key
+        for key in TensorStore(kvs).manifest("ckpt/7/params"):
+            vals = []
+            for owner in kvs._owners(key):
+                lat = kvs.nodes[owner].store.get(key)
+                assert lat is not None, (key, owner)
+                vals.append(lat)
+            for lat in vals[1:]:
+                assert lat.timestamp == vals[0].timestamp
+                np.testing.assert_array_equal(np.asarray(lat.reveal()),
+                                              np.asarray(vals[0].reveal()))
+
+
+@pytest.mark.parametrize("start_device", [False, True])
+def test_migrate_tier_preserves_values(start_device):
+    kvs = AnnaKVS(num_nodes=3, replication=2, sync_replication=True,
+                  device_tier=start_device)
+    lam = LamportClock("w")
+    tree = _make_tree([0, 1, 2, 4, 5], seed=3)  # planes + sidecar leaves
+    save_tree_planes(kvs, "ns", tree, lam.tick())
+    like = _like(tree)
+    before = restore_tree_planes(kvs, "ns", like)
+    moved = migrate_tier(kvs, not start_device)
+    assert moved > 0
+    assert kvs.device_tier == (not start_device)
+    assert kvs.mover.counts("tier")["keys"] == moved
+    for node in kvs.nodes.values():
+        assert node.engine.device == (not start_device)
+    _assert_trees_equal(restore_tree_planes(kvs, "ns", like), before)
+    # and back again
+    migrate_tier(kvs, start_device)
+    _assert_trees_equal(restore_tree_planes(kvs, "ns", like), before)
+
+
+def test_remesh_handoff_accounted_and_readable():
+    kvs = AnnaKVS(num_nodes=3, replication=2, sync_replication=True)
+    lam = LamportClock("w")
+    tree = {f"l{i}": np.full((4,), i, np.float32) for i in range(16)}
+    save_tree_planes(kvs, "ns", tree, lam.tick())
+    remesh(kvs, add=["grown-0", "grown-1"])
+    kvs.tick()
+    assert kvs.mover.counts("remesh")["keys"] > 0
+    _assert_trees_equal(restore_tree_planes(kvs, "ns", _like(tree)), tree)
+    remesh(kvs, remove=["grown-0"])
+    kvs.tick()
+    _assert_trees_equal(restore_tree_planes(kvs, "ns", _like(tree)), tree)
+
+
+def test_recover_vm_warm_plane_refills_cache():
+    cluster = Cluster(n_vms=2, executors_per_vm=1, n_kvs_nodes=3,
+                      replication=2, seed=11)
+    kvs = cluster.kvs
+    lam = LamportClock("w")
+    keys = [f"warm/k{i}" for i in range(6)]
+    for i, key in enumerate(keys):
+        kvs.put(key, LWWLattice(lam.tick(), np.full((8,), i, np.float32)))
+    kvs.tick()
+    vm = sorted({ex.vm_id for ex in cluster.executors.values()})[0]
+    cache = cluster.caches[f"cache-{vm}"]
+    cluster.fail_vm(vm)
+    cluster.recover_vm(vm, warm_keys=keys)
+    assert kvs.mover.counts("warm")["keys"] == len(keys)
+    for key in keys:
+        assert cache.read_local(key) is not None

@@ -108,3 +108,60 @@ def test_train_crash_restart_resumes():
     assert np.isfinite(out2["losses"][-1])
     # resumed run did 12 - 8 = 4 steps, not 12
     assert len(out2["losses"]) == 4
+
+
+def test_checkpoint_shard_keys_get_k_replication():
+    """Regression: selective replication must cover the ACTUAL shard
+    keys, not just the manifests — a k=3 checkpoint on a k=1-default
+    store must place every shard on 3 replicas."""
+    kvs = AnnaKVS(num_nodes=4, replication=1, sync_replication=True)
+    mgr = CheckpointManager(kvs, CheckpointConfig(every_steps=1, keep=2,
+                                                  replication=3))
+    params = {"w": jnp.arange(8.0).reshape(2, 4)}
+    opt = {"m": jnp.zeros((2, 4))}
+    mgr.save(1, params, opt)
+    kvs.tick()  # flush async replication
+    ts = TensorStore(kvs)
+    shard_keys = ts.manifest("ckpt/1/params") + ts.manifest("ckpt/1/opt")
+    assert shard_keys
+    for key in shard_keys + ["ckpt/1/params/__manifest", "ckpt/1/__commit"]:
+        owners = kvs._owners(key)
+        assert len(owners) == 3, key
+        copies = sum(1 for o in owners if key in kvs.nodes[o].store)
+        assert copies == 3, key
+
+
+def test_committed_steps_is_not_an_o_latest_scan():
+    """Regression: restore after a save at a large step must probe the
+    committed-step ledger (one batched read), not get_merged once per
+    step in range(0, latest)."""
+    kvs = AnnaKVS(num_nodes=2, replication=1, sync_replication=True)
+    mgr = CheckpointManager(kvs, CheckpointConfig(every_steps=1000, keep=2))
+    params = {"w": jnp.ones((2, 2))}
+    opt = {"m": jnp.zeros((2, 2))}
+    mgr.save(1000, params, opt)
+    calls = []
+    orig = kvs.get_merged
+
+    def counting(key, *a, **kw):
+        calls.append(key)
+        return orig(key, *a, **kw)
+
+    kvs.get_merged = counting
+    assert mgr.committed_steps() == [1000]
+    assert len(calls) < 10  # ledger + O(1) metadata, never O(latest)
+
+
+def test_gc_leaves_zero_keys_for_collected_namespace():
+    """Regression: GC must delete the __manifest/__meta keys too — a
+    collected checkpoint namespace leaves nothing in any replica."""
+    kvs = AnnaKVS(num_nodes=2, replication=1, sync_replication=True)
+    mgr = CheckpointManager(kvs, CheckpointConfig(every_steps=1, keep=1))
+    params = {"w": jnp.ones((2, 2))}
+    opt = {"m": jnp.zeros((2, 2))}
+    mgr.save(1, params, opt)
+    mgr.save(2, params, opt)  # GCs step 1
+    assert mgr.committed_steps() == [2]
+    leftovers = [key for node in kvs.nodes.values() for key in node.store
+                 if key.startswith("ckpt/1/")]
+    assert leftovers == []
